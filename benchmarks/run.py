@@ -1,0 +1,108 @@
+"""Benchmark harness: one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows (us_per_call = wall time of
+computing the table; derived = the table's headline result), then the full
+tables.  ``python -m benchmarks.run [--full] [--skip-cpuhost]``.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="non-quick CPU-host measurements (slower)")
+    ap.add_argument("--skip-cpuhost", action="store_true")
+    ap.add_argument("--tables", default="",
+                    help="comma-separated subset, e.g. table_vi,table_x")
+    args = ap.parse_args()
+
+    from . import tables as T
+
+    benches = [
+        ("table_ii_vii", lambda: T.table_ii_vii()),
+        ("table_vi", lambda: T.table_vi()),
+        ("table_x", lambda: T.table_x()),
+        ("table_xi", lambda: T.table_xi()),
+        ("table_xii", lambda: T.table_xii()),
+        ("table_tiles", lambda: T.table_tiles()),
+        ("table_2sm", lambda: T.table_2sm()),
+        ("table_obs1", lambda: T.table_obs1()),
+    ]
+    if not args.skip_cpuhost:
+        benches.append(("table_cpuhost",
+                        lambda: T.table_cpuhost(quick=not args.full)))
+    benches.append(("roofline_baseline", _roofline_table))
+
+    subset = {t for t in args.tables.split(",") if t}
+    results = []
+    print("name,us_per_call,derived")
+    for name, fn in benches:
+        if subset and name not in subset:
+            continue
+        t0 = time.perf_counter()
+        try:
+            rows, derived = fn()
+        except Exception as e:                            # noqa: BLE001
+            print(f"{name},ERROR,{e!r}")
+            continue
+        us = (time.perf_counter() - t0) * 1e6
+        print(f"{name},{us:.0f},{derived}")
+        results.append((name, rows))
+
+    print()
+    for name, rows in results:
+        print(f"=== {name} ===")
+        if not rows:
+            print("(no rows)")
+            continue
+        cols = list(rows[0].keys())
+        print(",".join(cols))
+        for r in rows:
+            print(",".join(str(r.get(c, "")) for c in cols))
+        print()
+
+
+def _roofline_table():
+    """Roofline baseline rows from the dry-run JSONL (if present)."""
+    import json
+    import os
+    rows = []
+    for fname in ("dryrun_single.jsonl", "dryrun_multi.jsonl"):
+        path = os.path.join(os.path.dirname(os.path.dirname(
+            os.path.abspath(__file__))), fname)
+        if not os.path.exists(path):
+            continue
+        with open(path) as f:
+            for line in f:
+                d = json.loads(line)
+                if d.get("status") != "ok":
+                    rows.append({"cell": f"{d['arch']}x{d['shape']}"
+                                         f"x{d['mesh']}",
+                                 "dominant": "skipped",
+                                 "compute_s": "", "memory_s": "",
+                                 "collective_s": "", "useful": "",
+                                 "fraction": ""})
+                    continue
+                rows.append({
+                    "cell": f"{d['arch']}x{d['shape']}x{d['mesh']}",
+                    "dominant": d["dominant"],
+                    "compute_s": f"{d['compute_term_s']:.3e}",
+                    "memory_s": f"{d['memory_term_s']:.3e}",
+                    "collective_s": f"{d['collective_term_s']:.3e}",
+                    "useful": f"{d['useful_flops_ratio']:.3f}",
+                    "fraction": f"{d['roofline_fraction']:.3f}",
+                })
+    if not rows:
+        return [], "run repro.launch.dryrun --all --json first"
+    ok = [r for r in rows if r["dominant"] != "skipped"]
+    doms = {}
+    for r in ok:
+        doms[r["dominant"]] = doms.get(r["dominant"], 0) + 1
+    return rows, f"{len(ok)} compiled cells; bottlenecks: {doms}"
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,35 @@
+"""repro.core — the paper's contribution: microbenchmark-driven analytical
+GPU/TPU performance models.
+
+Public API:
+    hardware.get(name) / hardware.REGISTRY     parameter files
+    workload.Workload / Segment                characterization schema
+    predict.predict(w, hw)                     unified routed prediction
+    roofline.predict(w, hw)                    naive baseline
+    blackwell / cdna3 / tpu / generic          per-architecture models
+    calibrate.Calibration / fit_*              disclosed multipliers
+    validate.validate_suite                    MAE harness
+    segments.predict_app                       multi-segment applications
+    collectives.MeshSpec / collective_time     mesh collective costs
+    autotune.select_plan                       model-driven plan selection
+    microbench.calibrate_host                  real host microbenchmarks
+"""
+from . import (autotune, blackwell, cache, calibrate, cdna3, collectives,
+               generic, hardware, predict, roofline, segments, tpu,
+               validate, workload)
+
+__all__ = [
+    "autotune", "blackwell", "cache", "calibrate", "cdna3", "collectives",
+    "generic", "hardware", "microbench", "predict", "roofline", "segments",
+    "tpu", "validate", "workload",
+]
+
+
+def __getattr__(name):
+    # microbench imports jax; keep it lazy so pure-model users stay light.
+    if name == "microbench":
+        import importlib
+        mod = importlib.import_module(".microbench", __name__)
+        globals()["microbench"] = mod
+        return mod
+    raise AttributeError(name)

@@ -1,0 +1,153 @@
+"""Model-driven plan selection (paper §IV-B 'adaptive tile selection',
+generalized to SPMD execution plans — DESIGN.md §3).
+
+The paper evaluates candidate GEMM tiles through the analytical model and
+returns the argmin.  On a TPU pod the analogous knobs are the sharding plan
+(how much TP vs DP/FSDP vs EP), the microbatch count, and the remat policy.
+``enumerate_plans`` prices each candidate with the TPU stage + collective
+models; ``select_plan`` returns the argmin.  This is the napkin-math engine
+used by the §Perf hillclimbing loop.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from . import collectives as coll
+from . import tpu
+from .hardware import HardwareParams, TPU_V5E
+from .workload import Workload
+
+
+@dataclass(frozen=True)
+class PlanCandidate:
+    """One execution plan for a train/serve step on a mesh."""
+
+    name: str
+    mesh: coll.MeshSpec
+    # model-parallel degree along "model" axis actually used by the plan
+    tp_degree: int
+    microbatches: int = 1
+    remat: str = "none"              # none | block | full
+    compressed_grads: bool = False   # int8 error-feedback all-reduce
+
+    def describe(self) -> str:
+        return (f"{self.name}: tp={self.tp_degree} ubatch={self.microbatches}"
+                f" remat={self.remat} int8grads={self.compressed_grads}")
+
+
+REMAT_FLOP_FACTOR = {"none": 1.0, "block": 4.0 / 3.0, "full": 5.0 / 3.0}
+
+
+@dataclass(frozen=True)
+class StepCost:
+    plan: PlanCandidate
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    exposed_collective_s: float
+    total_s: float
+    hbm_bytes_per_chip: float
+    detail: Dict[str, float] = field(default_factory=dict)
+
+
+def price_train_step(plan: PlanCandidate, *,
+                     model_flops: float,          # 6*N*D useful flops (global)
+                     param_bytes: float,          # total param bytes (global)
+                     activation_bytes: float,     # per-step act traffic (global)
+                     hw: HardwareParams = TPU_V5E) -> StepCost:
+    """Price one training step under a plan.
+
+    Collective schedule priced:
+      * FSDP all-gather of params (per microbatch, fwd + bwd if remat=full)
+      * reduce-scatter of grads over data axes (+ pod axis)
+      * TP activation all-reduces: ~2 per layer-equivalent, approximated as
+        activation_bytes/tp_degree volume when tp>1.
+    """
+    mesh = plan.mesh
+    chips = mesh.num_devices
+    data_axes = [a for a, _ in mesh.axes if a in ("data", "pod")]
+    dp = 1
+    for a in data_axes:
+        dp *= mesh.size(a)
+
+    remat_f = REMAT_FLOP_FACTOR[plan.remat]
+    flops_per_chip = model_flops * remat_f / chips
+    t_compute = flops_per_chip / hw.sustained_flops("bf16", matrix=True)
+
+    # HBM traffic per chip: params touched fwd+bwd+opt (3x) + activations
+    act_factor = {"none": 1.0, "block": 0.6, "full": 0.35}[plan.remat]
+    hbm_bytes = (3.0 * param_bytes / chips
+                 + activation_bytes * act_factor / chips)
+    t_memory = hbm_bytes / hw.hbm_sustained_bw
+
+    # collective schedule
+    ops: List[Tuple[str, float, str]] = []
+    shard_param_bytes = param_bytes / chips
+    for axis in data_axes:
+        # FSDP gather once per microbatch fwd; bwd regather if remat=full
+        gathers = plan.microbatches * (2 if plan.remat == "full" else 1)
+        ops.append(("all-gather", shard_param_bytes * gathers, axis))
+    grad_bytes = param_bytes / chips
+    if plan.compressed_grads:
+        grad_bytes *= 0.25           # int8 wire format vs fp32 master grads
+    for axis in data_axes:
+        ops.append(("reduce-scatter", grad_bytes, axis))
+        ops.append(("all-gather", grad_bytes, axis))
+    if plan.tp_degree > 1:
+        # activation all-reduces on the model axis
+        ops.append(("all-reduce",
+                    activation_bytes / chips / max(plan.microbatches, 1),
+                    "model"))
+
+    alpha = hw.pipeline_overlap_alpha
+    sched = coll.schedule_time(ops, mesh, hw, overlap_alpha=alpha)
+    t_coll, t_exposed = sched["total"], sched["exposed"]
+
+    t_step = max(t_compute, (1 - alpha) * t_memory, t_exposed) \
+        + min(t_compute, (1 - alpha) * t_memory)
+    total = t_step + hw.launch_latency_s
+    return StepCost(plan=plan, compute_s=t_compute, memory_s=t_memory,
+                    collective_s=t_coll, exposed_collective_s=t_exposed,
+                    total_s=total, hbm_bytes_per_chip=hbm_bytes,
+                    detail={k: v for k, v in sched.items()
+                            if k not in ("total", "exposed")})
+
+
+def hbm_fits(plan: PlanCandidate, *, param_bytes: float,
+             opt_state_bytes: float, activation_peak_bytes: float,
+             hw: HardwareParams = TPU_V5E) -> bool:
+    chips = plan.mesh.num_devices
+    act_factor = {"none": 1.0, "block": 0.4, "full": 0.15}[plan.remat]
+    per_chip = ((param_bytes + opt_state_bytes) / chips
+                + activation_peak_bytes * act_factor
+                / chips * plan.microbatches ** 0  # act peak per microbatch
+                / max(plan.microbatches, 1))
+    return per_chip <= hw.hbm_capacity * 0.9
+
+
+def select_plan(candidates: Sequence[PlanCandidate], *,
+                model_flops: float, param_bytes: float,
+                activation_bytes: float,
+                opt_state_bytes: float = 0.0,
+                activation_peak_bytes: float = 0.0,
+                hw: HardwareParams = TPU_V5E
+                ) -> Tuple[StepCost, List[StepCost]]:
+    """Price all candidates; return (best, all) — paper's argmin, with an
+    HBM-fit feasibility gate (the paper's 'proves it fits')."""
+    costs = []
+    for plan in candidates:
+        c = price_train_step(plan, model_flops=model_flops,
+                             param_bytes=param_bytes,
+                             activation_bytes=activation_bytes, hw=hw)
+        feasible = hbm_fits(plan, param_bytes=param_bytes,
+                            opt_state_bytes=opt_state_bytes,
+                            activation_peak_bytes=activation_peak_bytes,
+                            hw=hw)
+        c.detail["feasible"] = 1.0 if feasible else 0.0
+        costs.append(c)
+    feas = [c for c in costs if c.detail.get("feasible", 1.0) > 0]
+    pool = feas or costs
+    best = min(pool, key=lambda c: c.total_s)
+    return best, costs

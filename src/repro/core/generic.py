@@ -1,0 +1,56 @@
+"""Generic calibrated roofline path (paper §IV-F) + host phases (§IV-E).
+
+Used when a segment does not map to a full Blackwell stage model or a
+validated GEMM/tile case:
+  * separate calibrated scales per class (memory / compute / balanced /
+    stencil),
+  * optional precision-specific tensor efficiency multipliers,
+  * working-set-aware bandwidth B_eff(W) (Eq. 16),
+  * multi-kernel segments: extra launch latency beyond the first kernel,
+  * host-device transfer T_memcpy = S/B_eff + tau_memcpy (Eq. 15) and
+    per-sync-point T_host_sync = tau_sync.
+
+Sustained (microbenchmark) values drive this path; datasheet peaks are kept
+for upper-bound comparisons only (paper §V-A).
+"""
+from __future__ import annotations
+
+from .cache import working_set_blend
+from .hardware import HardwareParams
+from .workload import HostPhase, Segment, TimeBreakdown, Workload
+
+
+def predict(w: Workload, hw: HardwareParams, *,
+            class_scale: float = 0.0) -> TimeBreakdown:
+    """Generic roofline with calibrated class scale + Eq. 16 blend."""
+    scale = class_scale or hw.class_scales.get(w.wclass, 1.0)
+    bw = working_set_blend(w.working_set_bytes or w.bytes, hw)
+    t_mem = w.bytes / bw
+    eff = hw.precision_efficiency.get(w.precision, 1.0)
+    rate = hw.sustained_flops(w.precision, matrix=w.matrix) * eff
+    t_comp = w.flops / rate if w.flops > 0 else 0.0
+    if w.irregular:
+        t_mem *= 4.0
+    body = max(t_comp, t_mem) * scale
+    total = hw.launch_latency_s + body
+    total += (w.concurrent_kernels - 1) * hw.tau_interference_s
+    total += (w.num_devices - 1) * hw.tau_interference_gpu_s
+    return TimeBreakdown(total=total, compute=t_comp, memory=t_mem,
+                         io_effective=t_mem,
+                         launch=hw.launch_latency_s,
+                         detail={"bw_eff": bw, "class_scale": scale})
+
+
+def host_phase_time(phase: HostPhase, hw: HardwareParams) -> float:
+    """Eq. 15 / §IV-E. Conservative: no copy/compute overlap modeled."""
+    if phase.kind == "sync":
+        return phase.count * hw.tau_sync_s
+    bw = hw.h2d_bandwidth if phase.kind == "h2d" else hw.d2h_bandwidth
+    return phase.count * (phase.bytes / bw + hw.tau_memcpy_s)
+
+
+def segment_overhead(seg: Segment, hw: HardwareParams) -> float:
+    """Host phases + extra kernel launches (multi-kernel segments)."""
+    t = sum(host_phase_time(p, hw) for p in seg.host_phases)
+    t += seg.extra_kernels * hw.launch_latency_s
+    return t

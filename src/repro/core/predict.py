@@ -1,0 +1,59 @@
+"""Unified prediction entry point with architecture routing (paper §IV-C/D).
+
+Workflow (paper §IV-D):
+  1. characterize the workload (class, AI, working set, tiles),
+  2. select the parameter file,
+  3. apply the appropriate formula:
+       Blackwell-family -> stage-centric model (core.blackwell)
+       CDNA-family      -> wavefront-centric model (core.cdna3)
+       TPU              -> TPU-adapted stage model (core.tpu)
+       otherwise        -> generic calibrated roofline (core.generic)
+
+Class-based routing for application segments mirrors §V-B: stencil ->
+transpose proxy, compute-bound -> GEMM family, memory-bound -> vector copy.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+from . import blackwell, cdna3, generic, roofline
+from .hardware import HardwareParams
+from .workload import TimeBreakdown, Workload
+
+
+def predict(w: Workload, hw: HardwareParams, *,
+            model: Optional[str] = None,
+            calibration: Optional["object"] = None) -> TimeBreakdown:
+    """Predict execution time of one kernel on one accelerator.
+
+    ``model`` overrides routing: "stage" | "wavefront" | "generic" |
+    "roofline" | "tpu".  ``calibration`` is an optional
+    ``core.calibrate.Calibration`` applied multiplicatively per case.
+    """
+    route = model or _default_route(hw)
+    if route == "roofline":
+        out = roofline.predict(w, hw)
+    elif route == "stage":
+        out = blackwell.predict(w, hw)
+    elif route == "wavefront":
+        out = cdna3.predict(w, hw)
+    elif route == "tpu":
+        from . import tpu  # local import: tpu.py depends on collectives
+        out = tpu.predict(w, hw)
+    elif route == "generic":
+        out = generic.predict(w, hw)
+    else:
+        raise ValueError(f"unknown model route {route!r}")
+
+    if calibration is not None:
+        out = calibration.apply(w, out)
+    return out
+
+
+def _default_route(hw: HardwareParams) -> str:
+    return {
+        "blackwell": "stage",
+        "cdna": "wavefront",
+        "tpu": "tpu",
+        "generic": "generic",
+    }.get(hw.model_family, "generic")

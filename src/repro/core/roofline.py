@@ -1,0 +1,29 @@
+"""Naive roofline baseline (paper §II-A, Table VI context column).
+
+    T_roofline = max(FLOPs / P_peak, bytes / B_HBM)
+
+Uses ONLY datasheet peaks, ignores cache hierarchies, pipeline stages,
+occupancy and launch latency — by design.  The paper keeps it as context to
+show why architecture-specific modeling is necessary (>94% error on all
+platforms).  We implement it verbatim so benchmarks can reproduce that gap.
+"""
+from __future__ import annotations
+
+from .hardware import HardwareParams
+from .workload import TimeBreakdown, Workload
+
+
+def predict(w: Workload, hw: HardwareParams) -> TimeBreakdown:
+    """Naive roofline prediction: datasheet peaks only."""
+    peak = hw.peak_flops(w.precision, matrix=w.matrix)
+    t_compute = w.flops / peak if peak > 0 else 0.0
+    t_memory = w.bytes / hw.hbm_peak_bw if hw.hbm_peak_bw > 0 else 0.0
+    total = max(t_compute, t_memory)
+    return TimeBreakdown(total=total, compute=t_compute, memory=t_memory,
+                         detail={"path": 0.0})
+
+
+def ridge_intensity(hw: HardwareParams, precision: str = "fp16",
+                    matrix: bool = True) -> float:
+    """Arithmetic intensity at the roofline ridge point (FLOPs/byte)."""
+    return hw.peak_flops(precision, matrix) / hw.hbm_peak_bw

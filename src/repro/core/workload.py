@@ -1,0 +1,215 @@
+"""Workload / segment schema.
+
+The paper characterizes every kernel or application segment by FLOPs, bytes,
+class, tile geometry, working set and execution count, then routes it to the
+appropriate model path (§IV-D workflow step 1, §V-B Rodinia segment files).
+
+``Workload`` is a single kernel-level description; ``Segment`` wraps it with
+an execution count and optional host phases (memcpy/sync, paper §IV-E);
+applications are lists of Segments (``core/segments.py``).
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+VALID_CLASSES = ("memory", "compute", "balanced", "stencil")
+
+
+@dataclass(frozen=True)
+class TileConfig:
+    """GEMM-style tile geometry (bM, bN, bK per CTA; paper Eq. 3)."""
+
+    bm: int = 128
+    bn: int = 128
+    bk: int = 32
+
+    @property
+    def flops_per_tile_step(self) -> float:
+        # one K-step of an MMA tile: 2*bM*bN*bK
+        return 2.0 * self.bm * self.bn * self.bk
+
+    def accum_bytes(self, accum_bytes_per_elem: float = 4.0) -> float:
+        # accumulator tile resident in TMEM/VGPR: bM x bN
+        return self.bm * self.bn * accum_bytes_per_elem
+
+
+@dataclass(frozen=True)
+class GemmShape:
+    m: int
+    n: int
+    k: int
+
+    @property
+    def flops(self) -> float:
+        return 2.0 * self.m * self.n * self.k
+
+    def bytes_moved(self, in_bytes: float, out_bytes: float) -> float:
+        return (self.m * self.k + self.k * self.n) * in_bytes + \
+            self.m * self.n * out_bytes
+
+
+@dataclass(frozen=True)
+class Workload:
+    """One kernel: the model's unit of prediction.
+
+    Required inputs per paper §IV-G: for Blackwell, tile dims, K_tiles, bytes
+    per CTA, TMA participants P, alpha; for MI300A, tile dims, K_tiles,
+    bytes, hit rates, occupancy.  All optional fields default to values that
+    route the workload through the generic path.
+    """
+
+    name: str
+    wclass: str                      # memory | compute | balanced | stencil
+    flops: float                     # total FLOPs (profiler- or FP-derived)
+    bytes: float                     # total bytes moved to/from HBM
+    precision: str = "fp32"
+    matrix: bool = False             # uses tensor/matrix units?
+    working_set_bytes: float = 0.0   # W for h_LLC(W) / B_eff(W)
+
+    # --- tiled-GEMM path inputs (Blackwell stage model / MI300A tile model)
+    gemm: Optional[GemmShape] = None
+    tile: Optional[TileConfig] = None
+    num_ctas: int = 0                # grid size (Eq. 14)
+    k_tiles: int = 0                 # K-step count per CTA
+    tma_participants: int = 1        # multicast P (Eq. 4)
+    bytes_per_cta: float = 0.0
+
+    # --- MI300A occupancy inputs
+    vgpr_per_workitem: int = 64      # -> VGPR per wavefront = 64*vgpr
+    hit_rates: Dict[str, float] = field(default_factory=dict)  # h_l1,h_l2,h_llc
+    num_loads: float = 0.0           # N_loads for Eq. 10 latency walk
+
+    # --- decompression (Blackwell Eq. 5)
+    compressed_bytes: float = 0.0
+    compression_ratio: float = 1.0
+
+    # --- irregularity flags (paper Obs. 2: accuracy boundary)
+    irregular: bool = False          # pointer-chasing / data-dependent access
+    atomics: bool = False
+
+    # --- concurrency (paper §IV-A6 / §IV-B)
+    concurrent_kernels: int = 1
+    num_devices: int = 1
+
+    def __post_init__(self):
+        if self.wclass not in VALID_CLASSES:
+            raise ValueError(
+                f"workload class {self.wclass!r} not in {VALID_CLASSES}")
+        if self.flops < 0 or self.bytes < 0:
+            raise ValueError("flops/bytes must be non-negative")
+
+    @property
+    def arithmetic_intensity(self) -> float:
+        return self.flops / max(self.bytes, 1.0)
+
+    def replace(self, **kw) -> "Workload":
+        return dataclasses.replace(self, **kw)
+
+
+@dataclass(frozen=True)
+class HostPhase:
+    """Host-device transfer or sync episode (paper Eq. 15, §IV-E)."""
+
+    kind: str                        # "h2d" | "d2h" | "sync"
+    bytes: float = 0.0
+    count: int = 1
+
+
+@dataclass(frozen=True)
+class Segment:
+    """One application segment: a kernel repeated n_exec times plus host
+    phases (paper §V-B 'Rodinia multi-segment modeling')."""
+
+    workload: Workload
+    n_exec: int = 1
+    host_phases: Tuple[HostPhase, ...] = ()
+    extra_kernels: int = 0           # multi-kernel segments (paper §IV-F)
+
+    def __post_init__(self):
+        if self.n_exec < 0:
+            raise ValueError("n_exec must be >= 0")
+
+
+@dataclass(frozen=True)
+class TimeBreakdown:
+    """Prediction output: total + per-stage terms (all seconds)."""
+
+    total: float
+    compute: float = 0.0
+    memory: float = 0.0
+    io_effective: float = 0.0
+    sync: float = 0.0
+    launch: float = 0.0
+    writeback: float = 0.0
+    collective: float = 0.0
+    overhead: float = 0.0
+    detail: Dict[str, float] = field(default_factory=dict)
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.compute,
+                 "memory": max(self.memory, self.io_effective),
+                 "collective": self.collective}
+        return max(terms, key=terms.get)
+
+    def scaled(self, factor: float) -> "TimeBreakdown":
+        return TimeBreakdown(
+            total=self.total * factor,
+            compute=self.compute * factor,
+            memory=self.memory * factor,
+            io_effective=self.io_effective * factor,
+            sync=self.sync * factor,
+            launch=self.launch * factor,
+            writeback=self.writeback * factor,
+            collective=self.collective * factor,
+            overhead=self.overhead * factor,
+            detail={k: v * factor for k, v in self.detail.items()},
+        )
+
+
+def gemm_workload(name: str, m: int, n: int, k: int, *,
+                  precision: str = "fp16",
+                  tile: TileConfig = TileConfig(),
+                  wclass: str = "compute",
+                  out_precision: Optional[str] = None) -> Workload:
+    """Convenience constructor for tiled-GEMM workloads (the paper's
+    compute-bound validation class)."""
+    from .hardware import BYTES_PER_ELEM
+
+    in_b = BYTES_PER_ELEM[precision]
+    out_b = BYTES_PER_ELEM[out_precision or precision]
+    shape = GemmShape(m, n, k)
+    num_ctas = -(-m // tile.bm) * -(-n // tile.bn)
+    k_tiles = -(-k // tile.bk)
+    # per-CTA HBM traffic for one K-step: an A tile + a B tile
+    bytes_per_cta = (tile.bm * tile.bk + tile.bk * tile.bn) * in_b
+    ws = min(shape.bytes_moved(in_b, out_b),
+             (m * k + k * n + m * n) * in_b)
+    return Workload(
+        name=name, wclass=wclass,
+        flops=shape.flops,
+        bytes=shape.bytes_moved(in_b, out_b),
+        precision=precision, matrix=True,
+        working_set_bytes=ws,
+        gemm=shape, tile=tile,
+        num_ctas=num_ctas, k_tiles=k_tiles,
+        bytes_per_cta=bytes_per_cta,
+    )
+
+
+def streaming_workload(name: str, nbytes: float, *,
+                       flops_per_byte: float = 0.125,
+                       precision: str = "fp32",
+                       wclass: str = "memory",
+                       irregular: bool = False) -> Workload:
+    """Memory-bound vector ops (add/copy/transpose/reduction class)."""
+    return Workload(
+        name=name, wclass=wclass,
+        flops=nbytes * flops_per_byte,
+        bytes=nbytes,
+        precision=precision, matrix=False,
+        working_set_bytes=nbytes,
+        irregular=irregular,
+    )

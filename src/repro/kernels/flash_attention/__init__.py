@@ -1,0 +1,2 @@
+from .ops import flash_attention  # noqa: F401
+from . import ref  # noqa: F401

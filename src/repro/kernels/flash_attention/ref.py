@@ -1,0 +1,29 @@
+"""Pure-jnp oracle for flash attention (naive materialized softmax)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def attention(q, k, v, *, sm_scale: float, causal: bool = True,
+              window: int = 0):
+    """q: (B, Hq, S, D); k, v: (B, Hkv, S, D).  Exact reference."""
+    b, hq, s, d = q.shape
+    hkv = k.shape[1]
+    group = hq // hkv
+    k = jnp.repeat(k, group, axis=1)
+    v = jnp.repeat(v, group, axis=1)
+
+    s_mat = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                       k.astype(jnp.float32)) * sm_scale
+    q_ids = jnp.arange(s)[:, None]
+    k_ids = jnp.arange(s)[None, :]
+    mask = jnp.ones((s, s), dtype=bool)
+    if causal:
+        mask = mask & (k_ids <= q_ids)
+    if window > 0:
+        mask = mask & (k_ids >= q_ids - window)
+    s_mat = jnp.where(mask[None, None], s_mat, -jnp.inf)
+    p = jnp.exp(s_mat - jnp.max(s_mat, axis=-1, keepdims=True))
+    p = p / jnp.sum(p, axis=-1, keepdims=True)
+    out = jnp.einsum("bhqk,bhkd->bhqd", p, v.astype(jnp.float32))
+    return out.astype(q.dtype)

@@ -1,0 +1,2 @@
+from .ops import rmsnorm  # noqa: F401
+from . import ref  # noqa: F401

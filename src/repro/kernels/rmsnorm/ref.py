@@ -1,0 +1,9 @@
+"""Pure-jnp oracle for RMSNorm."""
+import jax.numpy as jnp
+
+
+def rmsnorm(x, w, eps: float = 1e-6):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf * jnp.reciprocal(jnp.sqrt(var + eps))
+            * w.astype(jnp.float32)).astype(x.dtype)

@@ -1,0 +1,2 @@
+from .ops import ssd_scan  # noqa: F401
+from . import ref  # noqa: F401

@@ -1,0 +1,29 @@
+"""Public SSD op: Pallas chunked scan with jnp-scan fallback."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+
+from . import kernel, ref
+
+
+def ssd_scan(x, dt, a_log, b, c, *, chunk: int = kernel.DEFAULT_CHUNK,
+             use_kernel: bool = True, interpret: Optional[bool] = None,
+             unroll_heads: bool = False, head_blocks: int = 0):
+    """Mamba2 SSD: x (B,S,H,P), dt (B,S,H) > 0, a_log (H,), b/c (B,S,N).
+
+    Paths: Pallas kernel (TPU target) > chunked jnp (XLA fallback /
+    dry-run) > exact sequential scan (odd lengths)."""
+    if interpret is None:
+        interpret = jax.devices()[0].platform != "tpu"
+    s = x.shape[1]
+    eff_chunk = min(chunk, s)
+    if s % eff_chunk != 0:
+        return ref.ssd_scan_ref(x, dt, a_log, b, c)
+    if use_kernel:
+        return kernel.ssd(x, dt, a_log, b, c, chunk=eff_chunk,
+                          interpret=interpret)
+    return ref.ssd_chunked_jnp(x, dt, a_log, b, c, chunk=eff_chunk,
+                               unroll_heads=unroll_heads,
+                               head_blocks=head_blocks)

@@ -1,0 +1,46 @@
+"""Production mesh construction.
+
+A function (not module-level constant) so importing this module never
+touches jax device state.  Production target: TPU v5e pods of 256 chips
+(16x16 ICI torus); multi-pod adds a leading DCI-connected "pod" axis.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    import math
+    n = math.prod(shape)
+    devs = jax.devices()
+    if len(devs) == n:
+        return jax.make_mesh(shape, axes)
+    if len(devs) < n:
+        raise RuntimeError(
+            f"need {n} devices for mesh {shape}; have {len(devs)} — run "
+            f"via repro.launch.dryrun (sets "
+            f"xla_force_host_platform_device_count=512)")
+    # dry-run container: 512 placeholder devices; single-pod uses 256
+    return jax.make_mesh(shape, axes, devices=devs[:n])
+
+
+def make_test_mesh(*, devices: Optional[int] = None, model: int = 2,
+                   pod: int = 1):
+    """Small mesh for CPU subprocess tests (8 host devices)."""
+    n = devices or len(jax.devices())
+    data = n // (model * pod)
+    if pod > 1:
+        return jax.make_mesh((pod, data, model), ("pod", "data", "model"))
+    return jax.make_mesh((data, model), ("data", "model"))
+
+
+def mesh_spec_of(mesh) -> "object":
+    """core.collectives.MeshSpec view of a jax Mesh (for the analytical
+    collective model)."""
+    from ..core.collectives import MeshSpec
+    return MeshSpec(axes=tuple(
+        (name, int(mesh.shape[name])) for name in mesh.axis_names))

@@ -1,0 +1,1 @@
+from .model import LanguageModel, build  # noqa: F401

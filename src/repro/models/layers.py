@@ -1,0 +1,91 @@
+"""Shared layers: init helpers, RMSNorm, rotary embeddings, SwiGLU MLP."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from ..distributed.sharding import constrain
+
+
+def dtype_of(cfg: ModelConfig):
+    return jnp.dtype(cfg.dtype)
+
+
+def pdtype_of(cfg: ModelConfig):
+    return jnp.dtype(cfg.param_dtype)
+
+
+def dense_init(key, d_in: int, d_out: int, dtype, scale: float = 1.0):
+    std = scale * (d_in ** -0.5)
+    return (jax.random.normal(key, (d_in, d_out)) * std).astype(dtype)
+
+
+def embed_init(key, vocab: int, d: int, dtype):
+    return (jax.random.normal(key, (vocab, d)) * 0.02).astype(dtype)
+
+
+def rmsnorm(x, scale, eps: float = 1e-6, *, use_kernel: bool = False):
+    if use_kernel:
+        from ..kernels.rmsnorm import rmsnorm as k_rmsnorm
+        return k_rmsnorm(x, scale, eps=eps)
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps) * scale.astype(jnp.float32)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# rotary position embeddings
+# ---------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float):
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2,
+                                       dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x, positions, theta: float):
+    """x: (B, S, H, D_even); positions: (B, S) or (S,)."""
+    d = x.shape[-1]
+    freqs = rope_freqs(d, theta)                       # (d/2,)
+    if positions.ndim == 1:
+        positions = positions[None, :]
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (B, S, d/2)
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin,
+                           x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# SwiGLU MLP
+# ---------------------------------------------------------------------------
+
+def mlp_init(key, cfg: ModelConfig, width: Optional[int] = None):
+    width = width or cfg.d_ff
+    k1, k2, k3 = jax.random.split(key, 3)
+    pd = pdtype_of(cfg)
+    return {
+        "wg": dense_init(k1, cfg.d_model, width, pd),
+        "wu": dense_init(k2, cfg.d_model, width, pd),
+        "wd": dense_init(k3, width, cfg.d_model, pd,
+                         scale=cfg.residual_scale),
+    }
+
+
+def mlp_apply(p, x, cfg: ModelConfig):
+    dt = dtype_of(cfg)
+    h = jax.nn.silu(x @ p["wg"].astype(dt)) * (x @ p["wu"].astype(dt))
+    h = constrain(h, ("batch", "seq", "ffn"))
+    out = h @ p["wd"].astype(dt)
+    return constrain(out, ("batch", "seq", "embed"))
+
+
+def softcap(x, cap: float):
+    if cap <= 0:
+        return x
+    return cap * jnp.tanh(x / cap)

@@ -1,0 +1,69 @@
+"""AdamW with dtype-configurable moments (bf16 moments for the >=100B
+configs; DESIGN.md §5 memory budget) and global-norm clipping."""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def adamw_init(params, *, moment_dtype: Optional[str] = None) -> Dict:
+    md = jnp.dtype(moment_dtype) if moment_dtype else None
+
+    def zeros_like(p):
+        return jnp.zeros(p.shape, md or p.dtype)
+
+    return {
+        "mu": jax.tree.map(zeros_like, params),
+        "nu": jax.tree.map(zeros_like, params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    gnorm = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                         for g in jax.tree.leaves(grads)))
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gnorm, 1e-12))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32)
+                                   * scale).astype(g.dtype), grads), gnorm
+
+
+def adamw_update(params, grads, state: Dict, *, lr,
+                 b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8,
+                 weight_decay: float = 0.1,
+                 max_grad_norm: float = 1.0) -> Tuple[Any, Dict, Dict]:
+    """Returns (new_params, new_state, metrics).  lr may be a scalar or a
+    callable step -> lr."""
+    step = state["step"] + 1
+    lr_t = lr(step) if callable(lr) else lr
+    if max_grad_norm > 0:
+        grads, gnorm = clip_by_global_norm(grads, max_grad_norm)
+    else:
+        gnorm = jnp.zeros(())
+
+    bc1 = 1.0 - b1 ** step.astype(jnp.float32)
+    bc2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        gf = g.astype(jnp.float32)
+        mf = b1 * m.astype(jnp.float32) + (1 - b1) * gf
+        vf = b2 * v.astype(jnp.float32) + (1 - b2) * gf * gf
+        mhat = mf / bc1
+        vhat = vf / bc2
+        delta = mhat / (jnp.sqrt(vhat) + eps) + weight_decay \
+            * p.astype(jnp.float32)
+        newp = p.astype(jnp.float32) - lr_t * delta
+        return newp.astype(p.dtype), mf.astype(m.dtype), vf.astype(v.dtype)
+
+    flat_p, tdef = jax.tree.flatten(params)
+    flat_g = tdef.flatten_up_to(grads)
+    flat_m = tdef.flatten_up_to(state["mu"])
+    flat_v = tdef.flatten_up_to(state["nu"])
+    out = [upd(p, g, m, v) for p, g, m, v
+           in zip(flat_p, flat_g, flat_m, flat_v)]
+    new_p = tdef.unflatten([o[0] for o in out])
+    new_m = tdef.unflatten([o[1] for o in out])
+    new_v = tdef.unflatten([o[2] for o in out])
+    new_state = {"mu": new_m, "nu": new_v, "step": step}
+    return new_p, new_state, {"grad_norm": gnorm, "lr": lr_t}

@@ -1,0 +1,50 @@
+"""LR schedules.  WSD (warmup-stable-decay) is the minicpm-2b paper's
+schedule [arXiv:2404.06395]: linear warmup, long stable plateau, short
+(~10%) exponential/linear decay."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def linear_schedule(peak_lr: float, warmup: int, total: int):
+    def lr(step):
+        s = jnp.asarray(step, jnp.float32)
+        warm = s / jnp.maximum(warmup, 1)
+        decay = jnp.maximum(0.0, (total - s) / jnp.maximum(total - warmup, 1))
+        return peak_lr * jnp.where(s < warmup, warm, decay)
+    return lr
+
+
+def cosine_schedule(peak_lr: float, warmup: int, total: int,
+                    min_ratio: float = 0.1):
+    def lr(step):
+        s = jnp.asarray(step, jnp.float32)
+        warm = s / jnp.maximum(warmup, 1)
+        t = jnp.clip((s - warmup) / jnp.maximum(total - warmup, 1), 0.0, 1.0)
+        cos = min_ratio + (1 - min_ratio) * 0.5 * (1 + jnp.cos(jnp.pi * t))
+        return peak_lr * jnp.where(s < warmup, warm, cos)
+    return lr
+
+
+def wsd_schedule(peak_lr: float, warmup: int, total: int,
+                 decay_fraction: float = 0.1, min_ratio: float = 0.01):
+    """Warmup -> Stable (peak) -> Decay (last decay_fraction of steps)."""
+    decay_start = int(total * (1.0 - decay_fraction))
+
+    def lr(step):
+        s = jnp.asarray(step, jnp.float32)
+        warm = s / jnp.maximum(warmup, 1)
+        t = jnp.clip((s - decay_start) / jnp.maximum(total - decay_start, 1),
+                     0.0, 1.0)
+        decay = jnp.exp(jnp.log(jnp.maximum(min_ratio, 1e-6)) * t)
+        val = jnp.where(s < warmup, warm,
+                        jnp.where(s < decay_start, 1.0, decay))
+        return peak_lr * val
+    return lr
+
+
+def for_arch(arch_name: str, peak_lr: float, warmup: int, total: int):
+    """minicpm trains with WSD (its paper's contribution); others cosine."""
+    if "minicpm" in arch_name:
+        return wsd_schedule(peak_lr, warmup, total)
+    return cosine_schedule(peak_lr, warmup, total)

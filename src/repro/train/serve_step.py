@@ -1,0 +1,59 @@
+"""Serving: prefill + batched one-token decode steps (the functions the
+decode_32k / long_500k dry-run cells lower), plus a simple batched
+request loop for the serving example."""
+from __future__ import annotations
+
+from typing import Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..models import LanguageModel
+
+
+def make_prefill(model: LanguageModel) -> Callable:
+    """prefill(params, tokens[, memory_embeds]) -> last-token logits.
+
+    Lowered for the prefill_* cells: the dominant prefill compute is the
+    full forward; per-layer cache population adds stores the roofline
+    memory term already covers (DESIGN.md §4)."""
+
+    def prefill(params, tokens, memory_embeds=None):
+        logits, _ = model.forward(params, tokens,
+                                  memory_embeds=memory_embeds)
+        return logits[:, -1, :]
+
+    return prefill
+
+
+def make_serve_step(model: LanguageModel) -> Callable:
+    """serve_step(params, cache, tokens (B,1), pos) -> (logits, cache).
+    One new token against a KV cache of seq_len (decode cells)."""
+
+    def serve_step(params, cache, tokens, pos, memory_embeds=None):
+        return model.decode_step(params, cache, tokens, pos,
+                                 memory_embeds=memory_embeds)
+
+    return serve_step
+
+
+def greedy_generate(model: LanguageModel, params, prompt, *, max_new: int,
+                    max_len: Optional[int] = None, memory_embeds=None):
+    """Batched greedy decoding driver (example/serving path)."""
+    b, s = prompt.shape
+    max_len = max_len or (s + max_new)
+    cache = model.init_cache(b, max_len)
+    # prefill fills the cache through position s-1 and returns the
+    # last-token logits
+    logits, cache = model.prefill(params, prompt, cache,
+                                  memory_embeds=memory_embeds)
+    step = jax.jit(model.decode_step)
+
+    toks = []
+    for i in range(max_new):
+        nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
+        toks.append(nxt)
+        if i + 1 < max_new:
+            logits, cache = step(params, cache, nxt, jnp.int32(s + i),
+                                 memory_embeds=memory_embeds)
+    return jnp.concatenate(toks, axis=1)

@@ -1,0 +1,121 @@
+"""Training step: loss -> grads -> (optional int8 error-feedback
+compression) -> AdamW, with gradient-accumulation microbatching.
+
+The step is a pure function suitable for jax.jit with in_shardings from
+distributed.sharding; XLA inserts the FSDP all-gathers / reduce-scatters
+from the param shardings (DESIGN.md §5)."""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from ..models import LanguageModel
+from ..optim import adamw_update, error_feedback_update
+from ..optim.adamw import adamw_init
+
+
+class TrainState(dict):
+    """params / opt / residuals / step as a plain dict pytree."""
+
+
+def init_state(model: LanguageModel, key, *,
+               moment_dtype: Optional[str] = None,
+               compress_grads: bool = False) -> Dict:
+    """moment_dtype: None/fp32, "bfloat16", or "int8" (block-quantized
+    8-bit-Adam moments; optim.quantized_moments)."""
+    params = model.init(key)
+    if moment_dtype == "int8":
+        # shape-preserving layout: moment shardings inherit the weights'
+        from ..optim.quantized_moments import q8nd_init
+        opt = q8nd_init(params)
+    else:
+        opt = adamw_init(params, moment_dtype=moment_dtype)
+    state = {"params": params, "opt": opt}
+    if compress_grads:
+        state["residuals"] = jax.tree.map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    return state
+
+
+def make_train_step(model: LanguageModel, *, lr, microbatches: int = 1,
+                    compress_grads: bool = False,
+                    weight_decay: float = 0.1,
+                    max_grad_norm: float = 1.0,
+                    accum_dtype: str = "float32",
+                    q8_moments: bool = False) -> Callable:
+    """Returns train_step(state, batch) -> (state, metrics).
+
+    accum_dtype: gradient-accumulation buffer dtype (bf16 halves the
+    accumulator HBM for the >=100B configs; DESIGN.md §5).
+    q8_moments: block-quantized int8 Adam moments (state must come from
+    init_state(moment_dtype="int8"))."""
+
+    def loss_fn(params, batch):
+        loss, metrics = model.loss_fn(params, batch)
+        return loss, metrics
+
+    def grads_of(params, batch):
+        (loss, metrics), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(params, batch)
+        return loss, metrics, grads
+
+    def split_micro(batch):
+        def sp(x):
+            b = x.shape[0]
+            assert b % microbatches == 0, (b, microbatches)
+            return x.reshape(microbatches, b // microbatches, *x.shape[1:])
+        return jax.tree.map(sp, batch)
+
+    def train_step(state, batch):
+        params = state["params"]
+        if microbatches > 1:
+            micro = split_micro(batch)
+
+            adt = jnp.dtype(accum_dtype)
+
+            def body(carry, mb):
+                gsum, lsum = carry
+                loss, _, grads = grads_of(params, mb)
+                gsum = jax.tree.map(
+                    lambda a, g: a + g.astype(adt), gsum, grads)
+                return (gsum, lsum + loss), None
+
+            gzero = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, adt), params)
+            (gsum, lsum), _ = jax.lax.scan(body, (gzero, 0.0), micro)
+            grads = jax.tree.map(lambda g: g / microbatches, gsum)
+            loss = lsum / microbatches
+            metrics = {"xent": loss, "aux": jnp.zeros(())}
+        else:
+            loss, metrics, grads = grads_of(params, batch)
+
+        if compress_grads:
+            grads, new_res = error_feedback_update(grads,
+                                                   state["residuals"])
+        if q8_moments:
+            from ..optim.quantized_moments import q8nd_adamw_update
+            new_params, new_opt, opt_metrics = q8nd_adamw_update(
+                params, grads, state["opt"], lr=lr,
+                weight_decay=weight_decay, max_grad_norm=max_grad_norm)
+        else:
+            new_params, new_opt, opt_metrics = adamw_update(
+                params, grads, state["opt"], lr=lr,
+                weight_decay=weight_decay, max_grad_norm=max_grad_norm)
+        new_state = dict(state, params=new_params, opt=new_opt)
+        if compress_grads:
+            new_state["residuals"] = new_res
+        metrics = dict(metrics, loss=loss, **opt_metrics)
+        return new_state, metrics
+
+    return train_step
+
+
+def make_eval_step(model: LanguageModel) -> Callable:
+    def eval_step(params, batch):
+        loss, metrics = model.loss_fn(params, batch)
+        return dict(metrics, loss=loss)
+    return eval_step

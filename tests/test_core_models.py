@@ -1,0 +1,317 @@
+"""Unit tests for the analytical-model equations (hand-computed values)."""
+import math
+
+import pytest
+
+from repro.core import blackwell, cache, cdna3, collectives, generic, \
+    hardware, predict, roofline, tpu
+from repro.core.workload import GemmShape, HostPhase, Segment, TileConfig, \
+    TimeBreakdown, Workload, gemm_workload, streaming_workload
+
+
+HW_B = hardware.B200
+HW_M = hardware.MI300A
+HW_T = hardware.TPU_V5E
+
+
+class TestCacheModels:
+    def test_hllc_piecewise_table_iii(self):
+        # W < 205 MB -> 1.0
+        assert cache.llc_hit_rate(100e6, HW_M) == 1.0
+        assert cache.llc_hit_rate(204.9e6, HW_M) == 1.0
+        # transition zone: strictly between 0 and 1, decreasing
+        h220 = cache.llc_hit_rate(220e6, HW_M)
+        h250 = cache.llc_hit_rate(250e6, HW_M)
+        assert 0.0 < h250 < h220 < 1.0
+        # streaming: (256/W)^beta
+        h512 = cache.llc_hit_rate(512e6, HW_M)
+        expected = (256.0 / 512.0) ** HW_M.llc_transition_beta
+        assert h512 == pytest.approx(expected)
+
+    def test_hllc_boundary_behavior(self):
+        eps = 1e3
+        # continuous at the 205 MB resident/transition boundary
+        lo = cache.llc_hit_rate(205e6 - eps, HW_M)
+        hi = cache.llc_hit_rate(205e6 + eps, HW_M)
+        assert abs(lo - hi) < 0.01
+        # NOTE: the paper's Table III is DISCONTINUOUS at W = 256 MB as
+        # published (transition branch -> 0, streaming branch -> 1).  We
+        # implement it faithfully and document the jump (DESIGN.md §8).
+        lo = cache.llc_hit_rate(256e6 - eps, HW_M)
+        hi = cache.llc_hit_rate(256e6 + eps, HW_M)
+        assert lo < 0.01 and hi > 0.99   # the published discontinuity
+
+    def test_effective_bandwidth_mix(self):
+        # fully resident -> LLC bandwidth; fully streaming -> ~HBM
+        bw_res = cache.effective_bandwidth_llc(10e6, HW_M)
+        assert bw_res == pytest.approx(HW_M.cache_levels[-1].bandwidth)
+        bw_str = cache.effective_bandwidth_llc(100e9, HW_M)
+        assert bw_str < 1.2 * HW_M.hbm_sustained_bw
+
+    def test_eq16_blend_bounds(self):
+        # B_eff in [sustained, peak], monotonically decreasing in W
+        for w in (1e3, 1e6, 1e9, 1e12):
+            b = cache.working_set_blend(w, HW_B)
+            assert HW_B.hbm_sustained_bw <= b <= HW_B.hbm_peak_bw
+        assert cache.working_set_blend(1e6, HW_B) > \
+            cache.working_set_blend(1e9, HW_B)
+
+    def test_eq16_disabled_with_w0_leq_0(self):
+        hw = HW_B.with_updates(working_set_scale_bytes=0.0)
+        assert cache.working_set_blend(1e3, hw) == hw.hbm_sustained_bw
+
+    def test_eq10_latency_walk_hand_computed(self):
+        # single L1 access: h1=1 -> N * L1_cycles / clock
+        t = cache.hierarchy_latency_walk(1000, {"l1": 1.0}, HW_M)
+        expected = 1000 * 5 / (HW_M.clock_ghz * 1e9)
+        assert t == pytest.approx(expected)
+        # all-miss -> HBM latency
+        t = cache.hierarchy_latency_walk(
+            1, {"l1": 0.0, "l2": 0.0, "llc": 0.0}, HW_M)
+        assert t == pytest.approx(HW_M.cycles_to_seconds(400))
+
+    def test_eq10_rejects_invalid_hit_rates(self):
+        with pytest.raises(ValueError):
+            cache.hierarchy_latency_walk(1, {"l1": 1.5}, HW_M)
+        with pytest.raises(ValueError):
+            cache.hierarchy_latency_walk(1, {"l2": -0.1}, HW_M)
+
+
+class TestRoofline:
+    def test_max_form(self):
+        w = Workload(name="x", wclass="compute", flops=1e12, bytes=1e9,
+                     precision="fp16", matrix=True)
+        t = roofline.predict(w, HW_B)
+        t_c = 1e12 / HW_B.peak_flops("fp16")
+        t_m = 1e9 / HW_B.hbm_peak_bw
+        assert t.total == pytest.approx(max(t_c, t_m))
+
+    def test_no_launch_no_cache_terms(self):
+        """Naive roofline must ignore launch latency entirely."""
+        w = streaming_workload("tiny", 1e3)
+        t = roofline.predict(w, HW_B).total
+        assert t < 1e-9  # far below any launch latency
+
+
+class TestBlackwellStages:
+    def test_eq2_tmem_per_tile(self):
+        tile = TileConfig(128, 128, 32)
+        t = blackwell.tmem_time_per_tile(tile, HW_B)
+        d = 128 * 128 * 4
+        expected = (d / (HW_B.accum_read_bw / HW_B.num_sms)
+                    + HW_B.cycles_to_seconds(HW_B.mma_latency_cycles)
+                    + d / (HW_B.accum_write_bw / HW_B.num_sms))
+        assert t == pytest.approx(expected)
+
+    def test_tmem_spill_penalty(self):
+        big = TileConfig(512, 512, 32)    # 1 MB accum > 256 KB TMEM
+        small = TileConfig(128, 128, 32)
+        per_byte_big = blackwell.tmem_time_per_tile(big, HW_B) / (512 * 512)
+        per_byte_small = blackwell.tmem_time_per_tile(small, HW_B) \
+            / (128 * 128)
+        assert per_byte_big > 1.5 * per_byte_small
+
+    def test_eq4_tma_latency_floor(self):
+        w = gemm_workload("g", 256, 256, 256, precision="fp16")
+        t = blackwell.tma_time_per_step(w, HW_B)
+        assert t >= HW_B.cycles_to_seconds(HW_B.tma_latency_cycles)
+
+    def test_tma_multicast_reduces_time(self):
+        w1 = gemm_workload("g", 4096, 4096, 4096, precision="fp16")
+        w4 = w1.replace(tma_participants=4)
+        assert blackwell.tma_time_per_step(w4, HW_B) < \
+            blackwell.tma_time_per_step(w1, HW_B)
+
+    def test_eq5_decompression(self):
+        w = Workload(name="d", wclass="memory", flops=0, bytes=1e9,
+                     compressed_bytes=0.5e9, compression_ratio=2.0)
+        t = blackwell.decompression_time(w, HW_B)
+        assert t > 0
+        # incompressible data decompresses slower per uncompressed byte
+        w2 = w.replace(compression_ratio=1.0)
+        assert blackwell.decompression_time(w2, HW_B) > 0
+
+    def test_eq7_overlap_hides_io(self):
+        hw_overlap = HW_B.with_updates(pipeline_overlap_alpha=0.95)
+        hw_serial = HW_B.with_updates(pipeline_overlap_alpha=0.0)
+        w = gemm_workload("g", 2048, 2048, 2048, precision="fp16")
+        t_o = blackwell.predict(w, hw_overlap).total
+        t_s = blackwell.predict(w, hw_serial).total
+        assert t_o < t_s
+
+    def test_stage_serialization_exceeds_roofline(self):
+        """The paper's core structural point: stage model >= naive
+        roofline time (serialized stages + overheads that max() hides)."""
+        for n in (512, 2048, 8192):
+            w = gemm_workload(f"g{n}", n, n, n, precision="fp16")
+            t_stage = blackwell.predict(w, HW_B).total
+            t_roof = roofline.predict(w, HW_B).total
+            assert t_stage > t_roof
+
+    def test_concurrent_stream_term(self):
+        w = gemm_workload("g", 1024, 1024, 1024, precision="fp16")
+        t1 = blackwell.predict(w, HW_B).total
+        t2 = blackwell.predict(w.replace(concurrent_kernels=3), HW_B).total
+        assert t2 == pytest.approx(t1 + 2 * HW_B.tau_interference_s)
+
+    def test_misroute_raises(self):
+        w = streaming_workload("v", 1e6)
+        with pytest.raises(ValueError):
+            blackwell.predict(w, HW_M)
+
+
+class TestCDNA3:
+    def test_eq9_overlap_bounds(self):
+        assert cdna3.overlap_factor(1, 1.0, 1.0) == 0.0
+        assert cdna3.overlap_factor(32, 1.0, 1.0) == 1.0
+        assert cdna3.overlap_factor(4, 0.0, 1.0) == 0.0
+        assert 0.0 <= cdna3.overlap_factor(8, 0.1, 1.0) <= 1.0
+
+    def test_vgpr_occupancy_formula(self):
+        # min(32, floor(65536 / VGPR_per_wf)); VGPR_per_wf = vgpr*64
+        assert cdna3.vgpr_limited_occupancy(32, HW_M) == 32
+        assert cdna3.vgpr_limited_occupancy(64, HW_M) == 16
+        assert cdna3.vgpr_limited_occupancy(256, HW_M) == 4
+        assert cdna3.vgpr_limited_occupancy(100000, HW_M) == 1
+
+    def test_mwp_cwp_caps(self):
+        assert cdna3.vgpr_limited_occupancy(32, HW_M, mwp=8) == 8
+        assert cdna3.vgpr_limited_occupancy(32, HW_M, cwp=4) == 4
+
+    def test_eq12_overlap_denominator(self):
+        assert cdna3.step_time(1.0, 1.0, 1.0) == pytest.approx(1.0)
+        assert cdna3.step_time(1.0, 1.0, 0.0) == pytest.approx(2.0)
+
+    def test_eq13_assembly_terms(self):
+        w = streaming_workload("v", 1e6)
+        out = cdna3.predict(w, HW_M)
+        assert out.total >= (HW_M.launch_latency_s
+                             + HW_M.coherence_latency_s
+                             + HW_M.cross_xcd_latency_s)
+
+    def test_occupancy_beats_no_occupancy(self):
+        """More resident wavefronts -> more overlap -> faster."""
+        w = streaming_workload("v", 1e8).replace(
+            flops=1e8 * 2, vgpr_per_workitem=32)
+        w_low = w.replace(vgpr_per_workitem=100000)
+        t_hi = cdna3.predict(w, HW_M).total
+        t_lo = cdna3.predict(w_low, HW_M).total
+        assert t_hi <= t_lo
+
+    def test_fusion_saves_traffic(self):
+        a = streaming_workload("a", 1e8)
+        b = streaming_workload("b", 1e8)
+        t_fused = cdna3.fused_predict([a, b], HW_M).total
+        t_sep = cdna3.predict(a, HW_M).total + cdna3.predict(b, HW_M).total
+        assert t_fused < t_sep
+
+    def test_multi_gpu_interference(self):
+        w = streaming_workload("v", 1e6)
+        t1 = cdna3.predict(w, HW_M).total
+        t2 = cdna3.predict(w.replace(num_devices=2), HW_M).total
+        assert t2 == pytest.approx(t1 + HW_M.tau_interference_gpu_s)
+
+
+class TestGenericPath:
+    def test_eq15_memcpy(self):
+        p = HostPhase(kind="h2d", bytes=45e9, count=1)
+        t = generic.host_phase_time(p, HW_M)
+        assert t == pytest.approx(1.0 + HW_M.tau_memcpy_s)
+
+    def test_sync_points(self):
+        p = HostPhase(kind="sync", count=10)
+        assert generic.host_phase_time(p, HW_M) == \
+            pytest.approx(10 * HW_M.tau_sync_s)
+
+    def test_multi_kernel_launch_accounting(self):
+        w = streaming_workload("v", 1e6)
+        s1 = Segment(workload=w, n_exec=1)
+        s2 = Segment(workload=w, n_exec=1, extra_kernels=3)
+        assert generic.segment_overhead(s2, HW_M) - \
+            generic.segment_overhead(s1, HW_M) == \
+            pytest.approx(3 * HW_M.launch_latency_s)
+
+    def test_class_scales_applied(self):
+        hw = HW_M.with_updates(class_scales={"memory": 2.0, "compute": 1.0,
+                                             "balanced": 1.0, "stencil": 1.0})
+        w = streaming_workload("v", 1e8)
+        t2 = generic.predict(w, hw).total
+        t1 = generic.predict(w, HW_M).total
+        assert t2 > t1
+
+
+class TestTPUModel:
+    def test_mxu_alignment_penalty(self):
+        w_ok = gemm_workload("a", 1024, 1024, 1024, precision="bf16")
+        w_bad = gemm_workload("b", 1000, 1000, 1000, precision="bf16")
+        assert tpu.mxu_utilization(w_ok, HW_T) > \
+            tpu.mxu_utilization(w_bad, HW_T)
+
+    def test_collective_stage_exposed(self):
+        mesh = collectives.MeshSpec(axes=(("data", 16), ("model", 16)))
+        w = gemm_workload("g", 8192, 8192, 8192, precision="bf16")
+        big_coll = [("all-reduce", 1e10, "data")]
+        out = tpu.predict(w, HW_T, mesh=mesh, collective_ops=big_coll)
+        assert out.collective > 0
+        assert out.total > tpu.predict(w, HW_T).total
+
+    def test_report_terms_formulas(self):
+        r = tpu.RooflineReport(name="x", num_chips=256, hlo_flops=1e18,
+                               hlo_bytes=1e15, collective_bytes=1e13,
+                               model_flops=8e17)
+        assert r.compute_term == pytest.approx(1e18 / (256 * 197e12))
+        assert r.memory_term == pytest.approx(1e15 / (256 * 819e9))
+        assert r.collective_term == pytest.approx(1e13 / (256 * 50e9))
+        assert r.useful_flops_ratio == pytest.approx(0.8)
+        assert r.dominant in ("compute", "memory", "collective")
+
+
+class TestCollectives:
+    MESH = collectives.MeshSpec(axes=(("pod", 2), ("data", 16),
+                                      ("model", 16)))
+
+    def test_ring_factors(self):
+        n = 16
+        b = 1e9
+        bw = collectives.axis_bandwidth(self.MESH, "data", HW_T)
+        ag = collectives.collective_time("all-gather", b, "data",
+                                         self.MESH, HW_T)
+        assert ag == pytest.approx((n - 1) * b / bw)
+        ar = collectives.collective_time("all-reduce", b, "data",
+                                         self.MESH, HW_T)
+        rs = collectives.collective_time("reduce-scatter", b, "data",
+                                         self.MESH, HW_T)
+        assert ar == pytest.approx(2 * rs)
+
+    def test_pod_axis_slower(self):
+        t_pod = collectives.collective_time("collective-permute", 1e9,
+                                            "pod", self.MESH, HW_T)
+        t_ici = collectives.collective_time("collective-permute", 1e9,
+                                            "data", self.MESH, HW_T)
+        assert t_pod > t_ici
+
+    def test_trivial_axis_free(self):
+        mesh = collectives.MeshSpec(axes=(("data", 1),))
+        assert collectives.collective_time("all-reduce", 1e9, "data",
+                                           mesh, HW_T) == 0.0
+
+    def test_unknown_op_raises(self):
+        with pytest.raises(ValueError):
+            collectives.collective_time("gossip", 1e9, "data",
+                                        self.MESH, HW_T)
+
+
+class TestPortability:
+    """Obs. 6: parameter-file portability — same formulas, new values."""
+
+    def test_with_updates_changes_only_values(self):
+        hw = HW_B.with_updates(hbm_peak_bw=4.8e12, hbm_capacity=141e9)
+        assert hw.hbm_peak_bw == 4.8e12
+        assert hw.num_sms == HW_B.num_sms   # untouched fields preserved
+        assert HW_B.hbm_peak_bw == 8.0e12   # original immutable
+
+    def test_registry_roundtrip(self):
+        for name in ("b200", "mi300a", "h200", "mi250x", "tpu_v5e"):
+            assert hardware.get(name).name == name
+        with pytest.raises(KeyError):
+            hardware.get("rubin")

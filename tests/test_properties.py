@@ -1,0 +1,233 @@
+"""Property-based tests (hypothesis) on the analytical models' invariants."""
+import math
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import blackwell, cache, calibrate, cdna3, collectives, \
+    generic, hardware, predict, roofline, tpu, validate
+from repro.core.workload import Segment, TileConfig, Workload, \
+    gemm_workload, streaming_workload
+
+HW_B = hardware.B200
+HW_M = hardware.MI300A
+HW_T = hardware.TPU_V5E
+
+ALL_HW = [HW_B, HW_M, HW_T, hardware.H200, hardware.MI250X]
+
+pos_floats = st.floats(min_value=1e3, max_value=1e15, allow_nan=False,
+                       allow_infinity=False)
+wclasses = st.sampled_from(["memory", "compute", "balanced", "stencil"])
+
+
+def mk_workload(flops, nbytes, wclass, irregular=False):
+    return Workload(name=f"w_{wclass}", wclass=wclass, flops=flops,
+                    bytes=nbytes, precision="fp32",
+                    working_set_bytes=nbytes, irregular=irregular)
+
+
+@given(flops=pos_floats, nbytes=pos_floats, wclass=wclasses)
+@settings(max_examples=60, deadline=None)
+def test_predictions_positive_and_finite(flops, nbytes, wclass):
+    w = mk_workload(flops, nbytes, wclass)
+    for hw in ALL_HW:
+        t = predict.predict(w, hw).total
+        assert t > 0 and math.isfinite(t)
+        t_roof = roofline.predict(w, hw).total
+        assert t_roof >= 0 and math.isfinite(t_roof)
+
+
+@given(flops=pos_floats, nbytes=pos_floats, wclass=wclasses,
+       factor=st.floats(min_value=1.5, max_value=100.0))
+@settings(max_examples=60, deadline=None)
+def test_monotone_in_bytes(flops, nbytes, wclass, factor):
+    """More bytes never makes any model predict faster."""
+    w1 = mk_workload(flops, nbytes, wclass)
+    w2 = mk_workload(flops, nbytes * factor, wclass)
+    for hw in ALL_HW:
+        assert predict.predict(w2, hw).total >= \
+            predict.predict(w1, hw).total * 0.999
+
+
+@given(flops=pos_floats, nbytes=pos_floats, wclass=wclasses,
+       factor=st.floats(min_value=1.5, max_value=100.0))
+@settings(max_examples=60, deadline=None)
+def test_monotone_in_flops(flops, nbytes, wclass, factor):
+    """Monotone in FLOPs for the stage-centric models.
+
+    NOTE: the CDNA wavefront model is deliberately EXCLUDED — the paper's
+    Eq. 12 divides (T_mem + T_comp) by (1 + eta(T_comp)), so adding compute
+    can reduce predicted total time (better latency hiding).  See
+    test_cdna_eq12_nonmonotone_is_paper_faithful below.
+    """
+    w1 = mk_workload(flops, nbytes, wclass)
+    w2 = mk_workload(flops * factor, nbytes, wclass)
+    for hw in (HW_B, HW_T, hardware.H200):
+        assert predict.predict(w2, hw).total >= \
+            predict.predict(w1, hw).total * 0.999
+
+
+def test_cdna_eq12_nonmonotone_is_paper_faithful():
+    """Documented paper quirk: under Eq. 9+12, a memory-bound kernel that
+    gains a little compute is predicted FASTER (overlap grows faster than
+    work).  We implement the equation as published."""
+    w1 = mk_workload(1e3, 178352.0, "memory")
+    w2 = mk_workload(14e3, 178352.0, "memory")
+    t1 = predict.predict(w1, HW_M).total
+    t2 = predict.predict(w2, HW_M).total
+    assert t2 < t1  # the published non-monotonicity
+    # but it is bounded: never more than the full overlap factor of 2
+    assert t2 > t1 / 2.5
+
+
+@given(ws=st.floats(min_value=1.0, max_value=1e13))
+@settings(max_examples=100, deadline=None)
+def test_hit_rate_in_unit_interval(ws):
+    for hw in (HW_M, hardware.MI250X):
+        h = cache.llc_hit_rate(ws, hw)
+        assert 0.0 <= h <= 1.0
+
+
+@given(ws=st.floats(min_value=1.0, max_value=1e13))
+@settings(max_examples=100, deadline=None)
+def test_blend_between_sustained_and_peak(ws):
+    for hw in ALL_HW:
+        b = cache.working_set_blend(ws, hw)
+        lo = min(hw.hbm_sustained_bw, hw.hbm_peak_bw)
+        hi = max(hw.hbm_sustained_bw, hw.hbm_peak_bw)
+        assert lo - 1e-6 <= b <= hi + 1e-6
+
+
+@given(n_wf=st.integers(min_value=1, max_value=64),
+       tc=st.floats(min_value=0.0, max_value=1e3),
+       tm=st.floats(min_value=1e-9, max_value=1e3))
+@settings(max_examples=100, deadline=None)
+def test_eta_overlap_unit_interval(n_wf, tc, tm):
+    eta = cdna3.overlap_factor(n_wf, tc, tm)
+    assert 0.0 <= eta <= 1.0
+
+
+@given(vgpr=st.integers(min_value=1, max_value=1 << 20))
+@settings(max_examples=100, deadline=None)
+def test_occupancy_bounds(vgpr):
+    n = cdna3.vgpr_limited_occupancy(vgpr, HW_M)
+    assert 1 <= n <= HW_M.max_resident_warps
+    # monotone non-increasing in VGPR pressure
+    assert cdna3.vgpr_limited_occupancy(vgpr * 2, HW_M) <= n
+
+
+@given(n_exec=st.integers(min_value=1, max_value=10000),
+       nbytes=pos_floats)
+@settings(max_examples=50, deadline=None)
+def test_segment_scales_linearly_with_n_exec(n_exec, nbytes):
+    from repro.core import segments as seg_mod
+    w = streaming_workload("s", nbytes)
+    t1 = seg_mod.predict_segment(Segment(workload=w, n_exec=1), HW_M).total
+    tn = seg_mod.predict_segment(Segment(workload=w, n_exec=n_exec),
+                                 HW_M).total
+    assert tn == pytest.approx(n_exec * t1, rel=1e-6)
+
+
+@given(nbytes=st.floats(min_value=1e3, max_value=1e12),
+       op=st.sampled_from(list(collectives.RING_FACTORS)),
+       axis=st.sampled_from(["pod", "data", "model"]))
+@settings(max_examples=100, deadline=None)
+def test_collective_time_nonnegative_and_linear(nbytes, op, axis):
+    mesh = collectives.MeshSpec(axes=(("pod", 2), ("data", 16),
+                                      ("model", 16)))
+    t = collectives.collective_time(op, nbytes, axis, mesh, HW_T)
+    t2 = collectives.collective_time(op, 2 * nbytes, axis, mesh, HW_T)
+    assert t >= 0
+    assert t2 == pytest.approx(2 * t, rel=1e-9)
+
+
+@given(st.data())
+@settings(max_examples=30, deadline=None)
+def test_calibration_identity_when_unit(data):
+    """Calibration with all multipliers 1.0 must be a no-op."""
+    flops = data.draw(pos_floats)
+    nbytes = data.draw(pos_floats)
+    w = mk_workload(flops, nbytes, "memory")
+    cal = calibrate.Calibration()
+    t0 = predict.predict(w, HW_M).total
+    t1 = predict.predict(w, HW_M, calibration=cal).total
+    assert t0 == pytest.approx(t1)
+
+
+@given(seed=st.integers(min_value=0, max_value=1000))
+@settings(max_examples=20, deadline=None)
+def test_train_holdout_partition(seed):
+    """Split is a partition: disjoint, covering, deterministic."""
+    from repro.core.suites import mi300a_microbench, split as suite_split
+    ws, meas = suite_split(mi300a_microbench.suite())
+    tr, ho = calibrate.train_holdout_split(ws, meas, seed=seed)
+    assert set(tr) | set(ho) == set(range(len(ws)))
+    assert set(tr) & set(ho) == set()
+    tr2, ho2 = calibrate.train_holdout_split(ws, meas, seed=seed)
+    assert tr == tr2 and ho == ho2
+
+
+def test_per_case_calibration_roundtrip_exact():
+    """Fitted per-case multipliers reproduce measured exactly (pre-quantize)."""
+    from repro.core.suites import b200_microbench, split as suite_split
+    ws, meas = suite_split(b200_microbench.suite())
+
+    def pf(w):
+        return predict.predict(w, HW_B)
+    cal = calibrate.fit_per_case(ws, meas, pf)
+    for w, m in zip(ws, meas):
+        t = predict.predict(w, HW_B, calibration=cal).total
+        assert t == pytest.approx(m, rel=1e-9)
+
+
+def test_holdout_no_leakage():
+    """Per-class calibration fitted on train split: holdout MAE must be
+    finite and reported separately (the paper's discipline)."""
+    from repro.core.suites import mi300a_microbench, split as suite_split
+    ws, meas = suite_split(mi300a_microbench.suite())
+
+    def pf(w):
+        return predict.predict(w, HW_M)
+    cal, report = calibrate.fit_with_holdout(ws, meas, pf, mode="class")
+    assert report["n_train"] + report["n_holdout"] == len(ws)
+    assert report["holdout_mae"] >= 0.0
+    assert math.isfinite(report["holdout_mae"])
+
+
+@given(flops=pos_floats, nbytes=pos_floats)
+@settings(max_examples=50, deadline=None)
+def test_mae_zero_iff_exact(flops, nbytes):
+    assert validate.pct_error(flops, flops) == 0.0
+    assert validate.mae_percent([flops, nbytes], [flops, nbytes]) == 0.0
+
+
+@given(mult=st.floats(min_value=0.1, max_value=10.0),
+       flops=pos_floats, nbytes=pos_floats, wclass=wclasses)
+@settings(max_examples=50, deadline=None)
+def test_calibration_scales_multiplicatively(mult, flops, nbytes, wclass):
+    w = mk_workload(flops, nbytes, wclass)
+    cal = calibrate.Calibration(global_scale=mult)
+    t0 = predict.predict(w, HW_M).total
+    t1 = predict.predict(w, HW_M, calibration=cal).total
+    assert t1 == pytest.approx(mult * t0, rel=1e-9)
+
+
+@given(b=st.floats(min_value=1e6, max_value=1e12))
+@settings(max_examples=50, deadline=None)
+def test_irregular_never_faster(b):
+    """Obs. 2: irregular access degrades, never improves, predictions."""
+    w_reg = mk_workload(b / 10, b, "memory", irregular=False)
+    w_irr = mk_workload(b / 10, b, "memory", irregular=True)
+    for hw in ALL_HW:
+        assert predict.predict(w_irr, hw).total >= \
+            predict.predict(w_reg, hw).total
+
+
+@given(n=st.integers(min_value=128, max_value=2048))
+@settings(max_examples=30, deadline=None)
+def test_stage_model_dominates_roofline(n):
+    """Structural claim: stage serialization always >= naive max() bound."""
+    n = (n // 128) * 128 or 128
+    w = gemm_workload(f"g{n}", n, n, n, precision="fp16")
+    assert blackwell.predict(w, HW_B).total >= \
+        roofline.predict(w, HW_B).total
