@@ -114,6 +114,77 @@ EXPERIMENTS = {
 }
 
 
+def screen(names, json_out: str | None = None):
+    """Napkin-math pre-screen: price every experiment's plan against its
+    cell's baseline through ``autotune.enumerate_plans`` (no lowering — a
+    full screen costs milliseconds vs minutes per compile).
+
+    Experiments are grouped by cell so each cell's config/param maths is
+    computed once; plans are priced one enumerate_plans call at a time
+    because ``opt_state_bytes`` (the int8-moments HBM-fit input) differs
+    per plan.  Kernel-level what-ifs ride the shared SweepEngine cache.
+    Model changes hidden behind ``cfg_overrides`` (e.g. shard_map SSD) are
+    not visible to the analytical plan model and are marked as such.
+    """
+    from repro.configs import SHAPES, get_config
+    from repro.core import autotune, collectives
+
+    mesh = collectives.MeshSpec(axes=(("data", 16), ("model", 16)))
+    rows = []
+    by_cell: dict = {}
+    for name in names:
+        by_cell.setdefault(EXPERIMENTS[name]["cell"], []).append(name)
+
+    for (arch, shape_name), exp_names in by_cell.items():
+        cfg = get_config(arch)
+        shape = SHAPES[shape_name]
+        n = cfg.param_count()
+        tokens = shape.global_batch * shape.seq_len
+        plans = [autotune.PlanCandidate(name="baseline", mesh=mesh,
+                                        tp_degree=16, microbatches=8,
+                                        remat="full")]
+        opt_bytes = [4.0 * n]
+        for name in exp_names:
+            ov = EXPERIMENTS[name]["override"]
+            plans.append(autotune.PlanCandidate(
+                name=name, mesh=mesh, tp_degree=16,
+                microbatches=int(ov.get("microbatches", 8)),
+                remat=ov.get("remat", "full")))
+            # int8 block-quantized moments: ~2.05 B/param vs 4 B/param
+            opt_bytes.append(2.05 * n if ov.get("moment_dtype") == "int8"
+                             else 4.0 * n)
+
+        costs = []
+        for plan, ob in zip(plans, opt_bytes):
+            costs += autotune.enumerate_plans(
+                [plan],
+                model_flops=6.0 * n * tokens,
+                param_bytes=2.0 * n,
+                activation_bytes=2.0 * tokens * cfg.d_model
+                * cfg.n_layers * 4,
+                opt_state_bytes=ob,
+                activation_peak_bytes=2.0 * tokens * cfg.d_model * 2)
+        base = costs[0]
+        print(f"=== screen: {arch} x {shape_name} "
+              f"(baseline step {base.total_s:.3f}s) ===")
+        for c in costs[1:]:
+            ov = EXPERIMENTS[c.plan.name]["override"]
+            opaque = " [+cfg_overrides not priced]" \
+                if ov.get("cfg_overrides") else ""
+            fits = "fits" if c.detail.get("feasible") else "OOM "
+            print(f"  {c.plan.name:24s} [{fits}] step {c.total_s:7.3f}s "
+                  f"({c.total_s / base.total_s:5.2f}x baseline){opaque}")
+            rows.append({"experiment": c.plan.name, "arch": arch,
+                         "shape": shape_name, "screen_step_s": c.total_s,
+                         "baseline_step_s": base.total_s,
+                         "feasible": bool(c.detail.get("feasible"))})
+    if json_out:
+        with open(json_out, "a") as f:
+            for r in rows:
+                f.write(json.dumps(r) + "\n")
+    return rows
+
+
 def run(exp_name: str, json_out: str | None = None):
     # dryrun import must happen in a fresh process normally; here we are
     # the main module so set flags first
@@ -158,8 +229,14 @@ def main():
     ap.add_argument("--exp", required=True,
                     help="experiment name or 'all' or comma list")
     ap.add_argument("--json", default=None)
+    ap.add_argument("--screen", action="store_true",
+                    help="napkin-price the plans via the batched engine "
+                         "instead of lowering (fast pre-screen)")
     args = ap.parse_args()
     names = list(EXPERIMENTS) if args.exp == "all" else args.exp.split(",")
+    if args.screen:
+        screen(names, args.json)
+        return
     for n in names:
         run(n, args.json)
 

@@ -4,13 +4,17 @@ comparison between B200 and MI300A without access to both').
 Sweeps a workload portfolio (GEMMs across sizes/precisions, bandwidth
 kernels, a stencil app segment) over every parameter file, reporting
 predicted time + bottleneck per platform — plus the TPU-v5e adaptation
-with its collective stage on the production mesh.
+with its collective stage on the production mesh, and a vectorized tile
+sweep through the batched SweepEngine (§IV-B adaptive tile selection at
+sweep scale; benchmarks/sweep_bench.py is the 1,000-point version).
 
 Run:  PYTHONPATH=src python examples/predict_performance.py
 """
-from repro.core import collectives, hardware, predict, tpu
-from repro.core.workload import Segment, Workload, gemm_workload, \
-    streaming_workload
+import time
+
+from repro.core import collectives, hardware, predict, sweep, tpu
+from repro.core.workload import Segment, TileConfig, Workload, \
+    gemm_workload, streaming_workload
 from repro.core.segments import predict_app
 
 PLATFORMS = ("b200", "h200", "mi300a", "mi250x", "tpu_v5e")
@@ -60,6 +64,27 @@ def main():
     print(f"  per-chip step {out.total * 1e3:.3f} ms; "
           f"collective {out.collective * 1e3:.3f} ms "
           f"(exposed {out.detail['t_coll_exposed'] * 1e3:.3f} ms)")
+
+    print()
+    print("Vectorized tile sweep (SweepEngine.predict_batch): price every")
+    print("(bM, bN, bK) tile candidate for an 8192^3 fp16 GEMM in one call")
+    print("and take the argmin (paper §IV-B adaptive tile selection):")
+    engine = sweep.default_engine()
+    candidates = [gemm_workload(f"tile_{bm}x{bn}x{bk}", 8192, 8192, 8192,
+                                precision="fp16",
+                                tile=TileConfig(bm, bn, bk))
+                  for bm in (32, 64, 128, 256, 512)
+                  for bn in (32, 64, 128, 256, 512)
+                  for bk in (16, 32, 64, 128, 256)]
+    for plat in ("b200", "mi300a", "tpu_v5e"):
+        hw = hardware.get(plat)
+        t0 = time.perf_counter()
+        res = engine.predict_batch(candidates, hw)
+        best = res.argmin()
+        dt = time.perf_counter() - t0
+        print(f"  {plat:8s}: {len(candidates)} tiles in {dt * 1e3:6.2f} ms"
+              f" ({len(candidates) / dt:9.0f} cfg/s) -> best"
+              f" {candidates[best].name} @ {res.totals[best] * 1e3:.3f} ms")
 
     print()
     print("Application segments (hotspot-like stencil app, 1000 iters):")

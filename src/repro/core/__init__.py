@@ -12,16 +12,17 @@ Public API:
     segments.predict_app                       multi-segment applications
     collectives.MeshSpec / collective_time     mesh collective costs
     autotune.select_plan                       model-driven plan selection
+    sweep.SweepEngine                          batched + memoized prediction
     microbench.calibrate_host                  real host microbenchmarks
 """
 from . import (autotune, blackwell, cache, calibrate, cdna3, collectives,
-               generic, hardware, predict, roofline, segments, tpu,
+               generic, hardware, predict, roofline, segments, sweep, tpu,
                validate, workload)
 
 __all__ = [
     "autotune", "blackwell", "cache", "calibrate", "cdna3", "collectives",
     "generic", "hardware", "microbench", "predict", "roofline", "segments",
-    "tpu", "validate", "workload",
+    "sweep", "tpu", "validate", "workload",
 ]
 
 

@@ -17,7 +17,7 @@ from typing import Dict, List, Optional, Sequence, Tuple
 from . import collectives as coll
 from . import tpu
 from .hardware import HardwareParams, TPU_V5E
-from .workload import Workload
+from .workload import TileConfig, Workload
 
 
 @dataclass(frozen=True)
@@ -127,15 +127,18 @@ def hbm_fits(plan: PlanCandidate, *, param_bytes: float,
     return per_chip <= hw.hbm_capacity * 0.9
 
 
-def select_plan(candidates: Sequence[PlanCandidate], *,
-                model_flops: float, param_bytes: float,
-                activation_bytes: float,
-                opt_state_bytes: float = 0.0,
-                activation_peak_bytes: float = 0.0,
-                hw: HardwareParams = TPU_V5E
-                ) -> Tuple[StepCost, List[StepCost]]:
-    """Price all candidates; return (best, all) — paper's argmin, with an
-    HBM-fit feasibility gate (the paper's 'proves it fits')."""
+def enumerate_plans(candidates: Sequence[PlanCandidate], *,
+                    model_flops: float, param_bytes: float,
+                    activation_bytes: float,
+                    opt_state_bytes: float = 0.0,
+                    activation_peak_bytes: float = 0.0,
+                    hw: HardwareParams = TPU_V5E) -> List[StepCost]:
+    """Price every candidate plan (collective schedule + HBM-fit gate).
+
+    This is the enumeration half of the paper's argmin: callers that only
+    need the winner use ``select_plan``; hillclimb-style consumers read the
+    whole priced list to order their experiments.
+    """
     costs = []
     for plan in candidates:
         c = price_train_step(plan, model_flops=model_flops,
@@ -147,7 +150,58 @@ def select_plan(candidates: Sequence[PlanCandidate], *,
                             hw=hw)
         c.detail["feasible"] = 1.0 if feasible else 0.0
         costs.append(c)
+    return costs
+
+
+def select_plan(candidates: Sequence[PlanCandidate], *,
+                model_flops: float, param_bytes: float,
+                activation_bytes: float,
+                opt_state_bytes: float = 0.0,
+                activation_peak_bytes: float = 0.0,
+                hw: HardwareParams = TPU_V5E
+                ) -> Tuple[StepCost, List[StepCost]]:
+    """Price all candidates; return (best, all) — paper's argmin, with an
+    HBM-fit feasibility gate (the paper's 'proves it fits')."""
+    costs = enumerate_plans(
+        candidates, model_flops=model_flops, param_bytes=param_bytes,
+        activation_bytes=activation_bytes, opt_state_bytes=opt_state_bytes,
+        activation_peak_bytes=activation_peak_bytes, hw=hw)
     feas = [c for c in costs if c.detail.get("feasible", 1.0) > 0]
     pool = feas or costs
     best = min(pool, key=lambda c: c.total_s)
     return best, costs
+
+
+# ---------------------------------------------------------------------------
+# Batched kernel-level sweeps (paper §IV-B adaptive tile selection, served
+# by the SweepEngine so 10^3-10^4-point searches stay off the scalar path).
+# ---------------------------------------------------------------------------
+
+def enumerate_tiles(base: Workload, hw: HardwareParams,
+                    candidate_tiles: Sequence["TileConfig"], *,
+                    model: Optional[str] = None,
+                    engine=None) -> Dict[str, float]:
+    """Price ``base`` re-tiled with every candidate through the batched
+    engine; returns {"bMxbNxbK": seconds}."""
+    from . import sweep
+    from .cdna3 import _retile
+    engine = engine or sweep.default_engine()
+    ws = [_retile(base, t) for t in candidate_tiles]
+    totals = engine.predict_batch(ws, hw, model=model).totals
+    return {f"{t.bm}x{t.bn}x{t.bk}": float(s)
+            for t, s in zip(candidate_tiles, totals)}
+
+
+def select_tile(base: Workload, hw: HardwareParams,
+                candidate_tiles: Sequence["TileConfig"], *,
+                model: Optional[str] = None,
+                engine=None) -> Tuple["TileConfig", Dict[str, float]]:
+    """Batched argmin over candidate tiles (the paper's adaptive tile
+    selection, engine-served)."""
+    costs = enumerate_tiles(base, hw, candidate_tiles, model=model,
+                            engine=engine)
+    best_i = min(range(len(candidate_tiles)),
+                 key=lambda i: costs[f"{candidate_tiles[i].bm}x"
+                                     f"{candidate_tiles[i].bn}x"
+                                     f"{candidate_tiles[i].bk}"])
+    return candidate_tiles[best_i], costs

@@ -32,11 +32,15 @@ deviations/disambiguations):
 from __future__ import annotations
 
 import math
-from typing import Optional
+from typing import List, Optional, Sequence
 
-from .cache import working_set_blend
+import numpy as np
+
+from itertools import repeat
+
+from .cache import working_set_blend, working_set_blend_batch
 from .hardware import BYTES_PER_ELEM, HardwareParams
-from .workload import TimeBreakdown, TileConfig, Workload
+from .workload import Row, TimeBreakdown, TileConfig, Workload, tb_from_row
 
 ACCUM_BYTES = 4.0  # FP32 accumulators in TMEM
 
@@ -216,6 +220,183 @@ def predict(w: Workload, hw: HardwareParams, *,
     if w.gemm is not None or (w.tile is not None and w.k_tiles > 0):
         return _tiled_gemm_predict(w, hw, two_sm=two_sm, n_bar=n_bar)
     return _streaming_predict(w, hw)
+
+
+# ---------------------------------------------------------------------------
+# Batched (NumPy-vectorized) stage model — the SweepEngine hot path.
+# Bit-identical to the scalar functions above: every elementwise expression
+# mirrors the scalar operation order, and transcendentals ride the libm-exact
+# helpers in core.cache.
+# ---------------------------------------------------------------------------
+
+def _f(vals) -> np.ndarray:
+    return np.array(vals, dtype=np.float64)
+
+
+def _rate_eff_inb(ws: Sequence[Workload], hw: HardwareParams):
+    """(rate, efficiency, bytes/elem) arrays for matrix workloads via one
+    registry lookup per precision (one listcomp over the batch)."""
+    pmap = {}
+    for w in ws:
+        p = w.precision
+        if p not in pmap:
+            pmap[p] = (hw.sustained_flops(p, matrix=True),
+                       hw.precision_efficiency.get(p, 1.0),
+                       BYTES_PER_ELEM[p])
+    trip = np.array([pmap[w.precision] for w in ws], dtype=np.float64)
+    return trip[:, 0], trip[:, 1], trip[:, 2]
+
+
+def _rate_arrays(ws: Sequence[Workload], hw: HardwareParams, *,
+                 sustained: bool):
+    """Compute-rate array honoring each workload's matrix flag."""
+    keys = {(w.precision, w.matrix) for w in ws}
+    fn = hw.sustained_flops if sustained else hw.peak_flops
+    rmap = {k: fn(k[0], matrix=k[1]) for k in keys}
+    return _f([rmap[(w.precision, w.matrix)] for w in ws])
+
+
+def _tiled_gemm_rows(ws: Sequence[Workload],
+                     hw: HardwareParams) -> List[Row]:
+    from .workload import NV_BM, NV_BN, NV_BK, NV_K_TILES, NV_NUM_CTAS, \
+        NV_WS, NV_BYTES_PER_CTA, NV_TMA_P, NV_COMP_BYTES, NV_COMP_RATIO, \
+        NV_CONCURRENT, NV_DEVICES, NV_GMN, nvec_matrix
+    raw = nvec_matrix(ws)
+    bm, bn, bk = raw[:, NV_BM], raw[:, NV_BN], raw[:, NV_BK]
+    k_tiles = np.maximum(raw[:, NV_K_TILES].astype(np.int64), 1)
+    num_ctas = raw[:, NV_NUM_CTAS].astype(np.int64)
+    wsb = raw[:, NV_WS]
+
+    # compute_time_per_step (Eq. 3/6), two_sm=False, sustained=True
+    flops = 2.0 * bm * bn * bk
+    rate, eff, in_b = _rate_eff_inb(ws, hw)
+    r_sm = rate / hw.num_sms
+    t_mma = flops / (r_sm * 1.0 * eff)
+    d_accum = bm * bn * ACCUM_BYTES
+    spill = d_accum > hw.accum_capacity_bytes
+    bw_r = hw.accum_read_bw / hw.num_sms
+    bw_w = hw.accum_write_bw / hw.num_sms
+    t_tile = d_accum / bw_r + hw.cycles_to_seconds(hw.mma_latency_cycles) \
+        + d_accum / bw_w
+    t_tile = np.where(spill, t_tile * 2.0, t_tile)
+    t_tmem = np.where(spill, t_tile, t_tile / k_tiles)
+    t_comp = t_mma + t_tmem + hw.tmem_alloc_latency_s / k_tiles
+
+    # tma_time_per_step (Eq. 4)
+    m_a = bm * bk * in_b
+    m_b = bk * bn * in_b
+    bytes_step = m_a + m_b
+    bpc = raw[:, NV_BYTES_PER_CTA]
+    bytes_step = np.where(bpc > 0, bpc, bytes_step)
+    active = np.maximum(
+        1, np.minimum(np.where(num_ctas != 0, num_ctas, hw.num_sms),
+                      hw.num_sms))
+    b_tma = working_set_blend_batch(
+        wsb, hw, peak=hw.tma_bandwidth * 1.35, sustained=hw.tma_bandwidth)
+    per_cta_bw = b_tma / active
+    p = np.maximum(1.0, raw[:, NV_TMA_P])
+    t_tma = hw.cycles_to_seconds(hw.tma_latency_cycles) \
+        + bytes_step / (p * per_cta_bw)
+
+    # decompression (Eq. 5)
+    comp_b = raw[:, NV_COMP_BYTES]
+    if comp_b.any():
+        comp_r = raw[:, NV_COMP_RATIO]
+        link = max(
+            min(hw.hbm_sustained_bw, hw.decomp_engine_rate or math.inf), 1.0)
+        with np.errstate(divide="ignore", invalid="ignore"):
+            d_unc = comp_b * comp_r
+            t_de = np.where(
+                comp_b > 0,
+                d_unc / (comp_r * link * hw.decomp_efficiency), 0.0)
+        t_dec = t_de / np.maximum(num_ctas * k_tiles, 1)
+    else:
+        t_dec = 0.0  # scalar path yields exactly 0.0 here
+
+    t_sync = sync_time(hw, 1)
+    alpha = hw.pipeline_overlap_alpha
+    t_io_eff = (1.0 - alpha) * (t_tma + t_dec) + t_sync           # Eq. 7
+    t_step = np.maximum(t_comp, t_io_eff) + t_sync + 0.0          # Eq. 8
+
+    waves = np.maximum(1.0, np.maximum(num_ctas, 1) / hw.num_sms)
+    t_fill = t_tma + t_dec
+    t_body = waves * k_tiles * t_step
+
+    t_store = (1.0 - alpha) * (raw[:, NV_GMN] * in_b) / hw.hbm_sustained_bw
+
+    total = hw.launch_latency_s + t_fill + t_body + t_store
+    total = total + (raw[:, NV_CONCURRENT] - 1) * hw.tau_interference_s
+    total = total + (raw[:, NV_DEVICES] - 1) * hw.tau_interference_gpu_s
+
+    n = len(ws)
+    fields = zip(total.tolist(),
+                 (waves * k_tiles * t_comp).tolist(),
+                 (waves * k_tiles * t_tma).tolist(),
+                 (waves * k_tiles * t_io_eff).tolist(),
+                 (waves * k_tiles * t_sync).tolist(),
+                 repeat(hw.launch_latency_s, n),
+                 t_store.tolist(),
+                 repeat(0.0, n), repeat(0.0, n))
+    dkeys = ("t_step", "t_compute_step", "t_tma_step", "t_sync_step",
+             "waves", "k_tiles", "pipeline_fill")
+    dvals = zip(t_step.tolist(), t_comp.tolist(), t_tma.tolist(),
+                repeat(t_sync, n), waves.tolist(),
+                k_tiles.astype(np.float64).tolist(), t_fill.tolist())
+    return list(zip(fields, repeat(dkeys, n), dvals))
+
+
+def _streaming_rows(ws: Sequence[Workload],
+                    hw: HardwareParams) -> List[Row]:
+    from .workload import NV_BYTES, NV_WS_OR_BYTES, NV_FLOPS, \
+        NV_IRREGULAR, NV_CONCURRENT, NV_DEVICES, nvec_matrix
+    raw = nvec_matrix(ws)
+    nbytes, wsb, flops = raw[:, NV_BYTES], raw[:, NV_WS_OR_BYTES], \
+        raw[:, NV_FLOPS]
+    bw = working_set_blend_batch(wsb, hw)
+    t_mem = nbytes / bw
+    rate = _rate_arrays(ws, hw, sustained=True)
+    with np.errstate(divide="ignore", invalid="ignore"):
+        t_comp = np.where(flops > 0, flops / rate, 0.0)
+    t_mem = np.where(raw[:, NV_IRREGULAR] != 0, t_mem * 4.0, t_mem)
+    t_sync = sync_time(hw, 1)
+    total = hw.launch_latency_s + np.maximum(t_comp, t_mem) + t_sync
+    total = total + (raw[:, NV_CONCURRENT] - 1) * hw.tau_interference_s
+    total = total + (raw[:, NV_DEVICES] - 1) * hw.tau_interference_gpu_s
+
+    n = len(ws)
+    t_mem_l = t_mem.tolist()
+    fields = zip(total.tolist(), t_comp.tolist(), t_mem_l, t_mem_l,
+                 repeat(t_sync, n), repeat(hw.launch_latency_s, n),
+                 repeat(0.0, n), repeat(0.0, n), repeat(0.0, n))
+    dvals = zip(bw.tolist())
+    return list(zip(fields, repeat(("bw_eff",), n), dvals))
+
+
+def predict_rows(ws: Sequence[Workload], hw: HardwareParams) -> List[Row]:
+    """Vectorized ``predict`` over a workload batch, in row form (defaults
+    two_sm=False, n_bar=1).  Bit-identical to per-workload ``predict``."""
+    if hw.model_family not in ("blackwell", "tpu"):
+        raise ValueError(f"blackwell model mis-routed to {hw.name}")
+    is_tiled = [w.gemm is not None or (w.tile is not None and w.k_tiles > 0)
+                for w in ws]
+    if all(is_tiled):
+        return _tiled_gemm_rows(ws, hw)
+    if not any(is_tiled):
+        return _streaming_rows(ws, hw)
+    tiled = [i for i, t in enumerate(is_tiled) if t]
+    stream = [i for i, t in enumerate(is_tiled) if not t]
+    out: List[Optional[Row]] = [None] * len(ws)
+    for i, row in zip(tiled, _tiled_gemm_rows([ws[i] for i in tiled], hw)):
+        out[i] = row
+    for i, row in zip(stream, _streaming_rows([ws[i] for i in stream], hw)):
+        out[i] = row
+    return out  # type: ignore[return-value]
+
+
+def predict_batch(ws: Sequence[Workload],
+                  hw: HardwareParams) -> List[TimeBreakdown]:
+    """Materialized form of ``predict_rows``."""
+    return [tb_from_row(r) for r in predict_rows(ws, hw)]
 
 
 def two_sm_traffic_reduction(tile: TileConfig) -> float:

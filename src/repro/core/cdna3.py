@@ -20,11 +20,17 @@ selection, kernel fusion with tau_fusion.
 from __future__ import annotations
 
 import math
-from typing import Dict, Iterable, List, Optional, Tuple
+from typing import Dict, Iterable, List, Optional, Sequence, Tuple
 
-from .cache import effective_bandwidth_llc, hierarchy_latency_walk, llc_hit_rate
+import numpy as np
+
+from itertools import repeat
+
+from .cache import effective_bandwidth_llc, effective_bandwidth_llc_batch, \
+    hierarchy_latency_walk, llc_hit_rate, llc_hit_rate_batch
 from .hardware import BYTES_PER_ELEM, HardwareParams
-from .workload import GemmShape, TileConfig, TimeBreakdown, Workload
+from .workload import GemmShape, Row, TileConfig, TimeBreakdown, Workload, \
+    row_from_tb, tb_from_row
 
 MFMA_FLOPS_PER_INST = 512.0  # 32x32x8 fp64 MFMA ~= 2*32*32*8/128... canonical
                              # per-inst FLOP count used to convert FLOPs ->
@@ -149,6 +155,121 @@ def predict(w: Workload, hw: HardwareParams, *,
             "h_llc": llc_hit_rate(w.working_set_bytes or w.bytes, hw),
         },
     )
+
+
+# ---------------------------------------------------------------------------
+# Batched (NumPy-vectorized) wavefront model — the SweepEngine hot path.
+# Workloads carrying explicit hit rates or an Eq. 10 latency walk (per-
+# workload dicts) fall back to the scalar `predict`; everything else is
+# vectorized bit-identically to the scalar expressions.
+# ---------------------------------------------------------------------------
+
+def _f(vals) -> np.ndarray:
+    return np.array(vals, dtype=np.float64)
+
+
+def _compute_rates(ws: Sequence[Workload], hw: HardwareParams) -> np.ndarray:
+    """Per-workload compute rate mirroring mfma_compute_time /
+    vector_compute_time rate selection."""
+    rmap: Dict[Tuple[str, bool], float] = {}
+    for w in ws:
+        key = (w.precision, w.matrix)
+        if key in rmap:
+            continue
+        eff = hw.precision_efficiency.get(w.precision, 1.0)
+        if w.matrix:
+            if w.precision in hw.tensor_sustained_flops:
+                rmap[key] = hw.tensor_sustained_flops[w.precision] * eff
+            else:
+                rmap[key] = hw.peak_flops(w.precision, matrix=True) \
+                    * hw.mfma_utilization * eff
+        else:
+            rmap[key] = hw.sustained_flops(w.precision, matrix=False)
+    return _f([rmap[(w.precision, w.matrix)] for w in ws])
+
+
+def _vectorized_rows(ws: Sequence[Workload],
+                     hw: HardwareParams) -> List[Row]:
+    from .workload import NV_VGPR, NV_K_TILES, NV_BYTES, NV_WS_OR_BYTES, \
+        NV_FLOPS, NV_IRREGULAR, NV_GMN, NV_HAS_GEMM, NV_MATRIX, \
+        NV_CONCURRENT, NV_DEVICES, nvec_matrix
+    raw = nvec_matrix(ws)
+    vgpr_wf = np.maximum(1, raw[:, NV_VGPR].astype(np.int64)) * hw.warp_size
+    n_wf = np.maximum(
+        1, np.minimum(hw.max_resident_warps, hw.vgpr_per_cu // vgpr_wf))
+    k_tiles = np.maximum(raw[:, NV_K_TILES].astype(np.int64), 1)
+
+    nbytes, wsb, flops = raw[:, NV_BYTES], raw[:, NV_WS_OR_BYTES], \
+        raw[:, NV_FLOPS]
+    bw_eff = effective_bandwidth_llc_batch(wsb, hw)
+    t_mem_total = nbytes / bw_eff
+    t_mem_total = np.where(raw[:, NV_IRREGULAR] != 0, t_mem_total * 4.0,
+                           t_mem_total)
+    rate = _compute_rates(ws, hw)
+    with np.errstate(divide="ignore", invalid="ignore"):
+        t_comp_total = np.where((raw[:, NV_MATRIX] != 0) | (flops > 0),
+                                flops / rate, 0.0)
+
+    t_mem = t_mem_total / k_tiles
+    t_comp = t_comp_total / k_tiles
+    with np.errstate(divide="ignore", invalid="ignore"):
+        eta_raw = (n_wf - 1) * t_comp / t_mem
+        eta = np.where(t_mem <= 0, 1.0,
+                       np.minimum(1.0, np.maximum(0.0, eta_raw)))
+    t_step = (t_mem + t_comp) / (1.0 + eta)
+
+    if raw[:, NV_HAS_GEMM].any():
+        in_b = np.array([BYTES_PER_ELEM[w.precision] for w in ws],
+                        dtype=np.float64)
+        out_b = raw[:, NV_GMN] * in_b
+        t_writeback = np.where(raw[:, NV_HAS_GEMM] != 0,
+                               out_b / bw_eff, 0.0)
+    else:
+        t_writeback = np.zeros(len(ws))
+
+    total = hw.launch_latency_s + k_tiles * t_step + t_writeback \
+        + hw.coherence_latency_s + hw.cross_xcd_latency_s          # Eq. 13
+    total = total + (raw[:, NV_CONCURRENT] - 1) * hw.tau_interference_s
+    total = total + (raw[:, NV_DEVICES] - 1) * hw.tau_interference_gpu_s
+
+    h_llc = llc_hit_rate_batch(wsb, hw)
+    sync = hw.coherence_latency_s + hw.cross_xcd_latency_s
+    n = len(ws)
+    t_mem_l = t_mem_total.tolist()
+    fields = zip(total.tolist(), t_comp_total.tolist(), t_mem_l, t_mem_l,
+                 repeat(sync, n), repeat(hw.launch_latency_s, n),
+                 t_writeback.tolist(), repeat(0.0, n), repeat(0.0, n))
+    dkeys = ("n_wf_active", "eta_overlap", "t_step", "h_llc")
+    dvals = zip(n_wf.astype(np.float64).tolist(), eta.tolist(),
+                t_step.tolist(), h_llc.tolist())
+    return list(zip(fields, repeat(dkeys, n), dvals))
+
+
+def predict_rows(ws: Sequence[Workload], hw: HardwareParams) -> List[Row]:
+    """Vectorized ``predict`` over a workload batch, in row form (base
+    model, MWP=CWP=0).  Bit-identical to per-workload ``predict``;
+    workloads with explicit hit rates / Eq. 10 latency walks fall back to
+    the scalar path."""
+    if hw.model_family != "cdna":
+        raise ValueError(f"cdna3 model mis-routed to {hw.name}")
+    exotic = [bool(w.hit_rates) or w.num_loads > 0 for w in ws]
+    if not any(exotic):
+        return _vectorized_rows(ws, hw)
+    fast = [i for i, e in enumerate(exotic) if not e]
+    out: List[Optional[Row]] = [None] * len(ws)
+    for i, e in enumerate(exotic):
+        if e:
+            out[i] = row_from_tb(predict(ws[i], hw))
+    if fast:
+        for i, row in zip(fast, _vectorized_rows([ws[i] for i in fast], hw)):
+            out[i] = row
+    return out  # type: ignore[return-value]
+
+
+def predict_batch(ws: Sequence[Workload],
+                  hw: HardwareParams) -> List[TimeBreakdown]:
+    """Materialized form of ``predict_rows``."""
+    return [tb_from_row(r) for r in predict_rows(ws, hw)]
 
 
 # ---------------------------------------------------------------------------

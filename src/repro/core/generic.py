@@ -15,9 +15,15 @@ for upper-bound comparisons only (paper §V-A).
 """
 from __future__ import annotations
 
-from .cache import working_set_blend
+from itertools import repeat
+from typing import List, Sequence
+
+import numpy as np
+
+from .cache import working_set_blend, working_set_blend_batch
 from .hardware import HardwareParams
-from .workload import HostPhase, Segment, TimeBreakdown, Workload
+from .workload import HostPhase, Row, Segment, TimeBreakdown, Workload, \
+    tb_from_row
 
 
 def predict(w: Workload, hw: HardwareParams, *,
@@ -39,6 +45,50 @@ def predict(w: Workload, hw: HardwareParams, *,
                          io_effective=t_mem,
                          launch=hw.launch_latency_s,
                          detail={"bw_eff": bw, "class_scale": scale})
+
+
+def predict_rows(ws: Sequence[Workload],
+                 hw: HardwareParams) -> List[Row]:
+    """Vectorized ``predict`` over a workload batch, in row form
+    (class_scale taken from the parameter file, as in the scalar default).
+    Bit-identical to per-workload ``predict(w, hw)`` calls."""
+    from .workload import NV_BYTES, NV_WS_OR_BYTES, NV_FLOPS, \
+        NV_IRREGULAR, NV_CONCURRENT, NV_DEVICES, nvec_matrix
+    raw = nvec_matrix(ws)
+    nbytes, wsb, flops = raw[:, NV_BYTES], raw[:, NV_WS_OR_BYTES], \
+        raw[:, NV_FLOPS]
+    scale = np.array([hw.class_scales.get(w.wclass, 1.0) for w in ws],
+                     dtype=np.float64)
+    bw = working_set_blend_batch(wsb, hw)
+    t_mem = nbytes / bw
+
+    keys = {(w.precision, w.matrix) for w in ws}
+    emap = {p: hw.precision_efficiency.get(p, 1.0) for p, _ in keys}
+    rmap = {k: hw.sustained_flops(k[0], matrix=k[1]) * emap[k[0]]
+            for k in keys}
+    rate = np.array([rmap[(w.precision, w.matrix)] for w in ws],
+                    dtype=np.float64)
+    with np.errstate(divide="ignore", invalid="ignore"):
+        t_comp = np.where(flops > 0, flops / rate, 0.0)
+    t_mem = np.where(raw[:, NV_IRREGULAR] != 0, t_mem * 4.0, t_mem)
+    body = np.maximum(t_comp, t_mem) * scale
+    total = hw.launch_latency_s + body
+    total = total + (raw[:, NV_CONCURRENT] - 1) * hw.tau_interference_s
+    total = total + (raw[:, NV_DEVICES] - 1) * hw.tau_interference_gpu_s
+
+    n = len(ws)
+    t_mem_l = t_mem.tolist()
+    fields = zip(total.tolist(), t_comp.tolist(), t_mem_l, t_mem_l,
+                 repeat(0.0, n), repeat(hw.launch_latency_s, n),
+                 repeat(0.0, n), repeat(0.0, n), repeat(0.0, n))
+    dvals = zip(bw.tolist(), scale.tolist())
+    return list(zip(fields, repeat(("bw_eff", "class_scale"), n), dvals))
+
+
+def predict_batch(ws: Sequence[Workload],
+                  hw: HardwareParams) -> List[TimeBreakdown]:
+    """Materialized form of ``predict_rows``."""
+    return [tb_from_row(r) for r in predict_rows(ws, hw)]
 
 
 def host_phase_time(phase: HostPhase, hw: HardwareParams) -> float:

@@ -9,8 +9,13 @@ platforms).  We implement it verbatim so benchmarks can reproduce that gap.
 """
 from __future__ import annotations
 
+from itertools import repeat
+from typing import List, Sequence
+
+import numpy as np
+
 from .hardware import HardwareParams
-from .workload import TimeBreakdown, Workload
+from .workload import Row, TimeBreakdown, Workload, tb_from_row
 
 
 def predict(w: Workload, hw: HardwareParams) -> TimeBreakdown:
@@ -21,6 +26,38 @@ def predict(w: Workload, hw: HardwareParams) -> TimeBreakdown:
     total = max(t_compute, t_memory)
     return TimeBreakdown(total=total, compute=t_compute, memory=t_memory,
                          detail={"path": 0.0})
+
+
+def predict_rows(ws: Sequence[Workload],
+                 hw: HardwareParams) -> List[Row]:
+    """Vectorized ``predict`` over a workload batch, in row form
+    (bit-identical)."""
+    from .workload import NV_BYTES, NV_FLOPS, nvec_matrix
+    keys = {(w.precision, w.matrix) for w in ws}
+    pmap = {k: hw.peak_flops(k[0], matrix=k[1]) for k in keys}
+    peak = np.array([pmap[(w.precision, w.matrix)] for w in ws],
+                    dtype=np.float64)
+    raw = nvec_matrix(ws)
+    flops, nbytes = raw[:, NV_FLOPS], raw[:, NV_BYTES]
+    with np.errstate(divide="ignore", invalid="ignore"):
+        t_compute = np.where(peak > 0, flops / peak, 0.0)
+    if hw.hbm_peak_bw > 0:
+        t_memory = nbytes / hw.hbm_peak_bw
+    else:
+        t_memory = np.zeros_like(nbytes)
+    total = np.maximum(t_compute, t_memory)
+    n = len(ws)
+    fields = zip(total.tolist(), t_compute.tolist(), t_memory.tolist(),
+                 repeat(0.0, n), repeat(0.0, n), repeat(0.0, n),
+                 repeat(0.0, n), repeat(0.0, n), repeat(0.0, n))
+    dvals = repeat((0.0,), n)
+    return list(zip(fields, repeat(("path",), n), dvals))
+
+
+def predict_batch(ws: Sequence[Workload],
+                  hw: HardwareParams) -> List[TimeBreakdown]:
+    """Materialized form of ``predict_rows``."""
+    return [tb_from_row(r) for r in predict_rows(ws, hw)]
 
 
 def ridge_intensity(hw: HardwareParams, precision: str = "fp16",

@@ -1,0 +1,300 @@
+"""Batched sweep-prediction engine with keyed memoization.
+
+The paper's headline workflow prices thousands of candidate
+(workload x hardware x precision x tile) configurations through the
+analytical models and returns the argmin (§IV-B adaptive tile selection,
+§IV-D routing).  A scalar Python ``predict()`` call per configuration makes
+that the slowest path in the repo; microbenchmark sweeps span 10^3-10^4
+points per kernel family — exactly the regime where batching pays off.
+
+``SweepEngine.predict_batch(workloads, hw)`` routes a whole batch to the
+NumPy-vectorized model backends (``blackwell.predict_rows``,
+``cdna3.predict_rows``, ``tpu.predict_rows``, ``generic.predict_rows``,
+``roofline.predict_rows``).  Backends emit compact immutable row tuples
+(struct-of-arrays assembled by C-level zips); ``TimeBreakdown`` objects
+materialize lazily when a result is indexed, so argmin-style consumers
+never pay per-config Python object construction.  Each row is memoized
+under a content key (Workload fields + HardwareParams content + route) so
+repeated autotune/hillclimb queries are O(1) dictionary hits.
+
+Guarantees:
+  * batch-of-1 results are bit-identical to the pre-refactor scalar
+    ``predict(w, hw)`` for every route (verified by tests/test_sweep.py),
+  * cached rows are immutable tuples — no defensive copies, no
+    cache-poisoning via caller-mutated detail dicts,
+  * calibration is applied at materialization time, after the cache, so
+    one cache entry serves calibrated and uncalibrated callers.
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+from collections import OrderedDict
+from typing import Dict, Iterator, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from . import blackwell, cdna3, generic, roofline
+from .hardware import HardwareParams
+from .workload import Row, TimeBreakdown, Workload, row_from_tb, tb_from_row
+
+ROUTES = ("stage", "wavefront", "tpu", "generic", "roofline")
+
+#: below this many cache misses the engine evaluates via the scalar model
+#: functions — NumPy dispatch overhead on near-empty arrays costs more than
+#: the per-call Python it saves (crossover measured ~10-15 workloads).
+SCALAR_CUTOFF = 16
+
+_FAMILY_ROUTE = {
+    "blackwell": "stage",
+    "cdna": "wavefront",
+    "tpu": "tpu",
+    "generic": "generic",
+}
+
+
+def default_route(hw: HardwareParams) -> str:
+    """Architecture routing (paper §IV-D workflow step 2/3)."""
+    return _FAMILY_ROUTE.get(hw.model_family, "generic")
+
+
+def _rows_fn(route: str):
+    if route == "stage":
+        return blackwell.predict_rows
+    if route == "wavefront":
+        return cdna3.predict_rows
+    if route == "tpu":
+        from . import tpu  # local import: tpu.py depends on collectives
+        return tpu.predict_rows
+    if route == "generic":
+        return generic.predict_rows
+    if route == "roofline":
+        return roofline.predict_rows
+    raise ValueError(f"unknown model route {route!r}")
+
+
+def _scalar_fn(route: str):
+    if route == "stage":
+        return blackwell.predict
+    if route == "wavefront":
+        return cdna3.predict
+    if route == "tpu":
+        from . import tpu
+        return tpu.predict
+    if route == "generic":
+        return generic.predict
+    if route == "roofline":
+        return roofline.predict
+    raise ValueError(f"unknown model route {route!r}")
+
+
+def _eval_rows(route: str, ws: Sequence[Workload],
+               hw: HardwareParams) -> List[Row]:
+    """Vectorized for real batches, scalar-reference for tiny ones
+    (identical results either way — that equivalence is the engine's core
+    invariant, enforced by tests/test_sweep.py)."""
+    if len(ws) < SCALAR_CUTOFF:
+        fn = _scalar_fn(route)
+        return [row_from_tb(fn(w, hw)) for w in ws]
+    return _rows_fn(route)(ws, hw)
+
+
+def workload_key(w: Workload) -> Tuple:
+    """Content key for a workload: every model-visible field (``name`` is
+    excluded — predictions depend only on the characterization, so renamed
+    duplicates share cache entries)."""
+    g, t = w.gemm, w.tile
+    return (
+        w.wclass, w.flops, w.bytes, w.precision, w.matrix,
+        w.working_set_bytes,
+        (g.m, g.n, g.k) if g is not None else None,
+        (t.bm, t.bn, t.bk) if t is not None else None,
+        w.num_ctas, w.k_tiles, w.tma_participants, w.bytes_per_cta,
+        w.vgpr_per_workitem,
+        tuple(sorted(w.hit_rates.items())) if w.hit_rates else (),
+        w.num_loads, w.compressed_bytes, w.compression_ratio,
+        w.irregular, w.atomics, w.concurrent_kernels, w.num_devices,
+    )
+
+
+_HW_TOKENS: Dict[Tuple, Tuple[str, int]] = {}
+_HW_TOKENS_LOCK = threading.Lock()
+
+
+def hardware_key(hw: HardwareParams) -> Tuple[str, int]:
+    """Compact content token for a parameter file.  The registry allows
+    re-registering updated parameters under the same name (e.g. a
+    re-calibrated ``cpu_host``), so the name alone would serve stale
+    predictions.  The full field tuple is interned to a small (name, id)
+    token — cache keys must stay cheap to hash, and the content tuple is
+    ~50 nested fields — and the token is stashed on the (frozen) instance
+    so the content walk happens once per HardwareParams object."""
+    cached = getattr(hw, "_sweep_content_token", None)
+    if cached is not None:
+        return cached
+    out = []
+    for f in dataclasses.fields(hw):
+        v = getattr(hw, f.name)
+        if isinstance(v, dict):
+            v = tuple(sorted(v.items()))
+        out.append(v)
+    content = tuple(out)
+    with _HW_TOKENS_LOCK:
+        token = _HW_TOKENS.get(content)
+        if token is None:
+            token = (hw.name, len(_HW_TOKENS))
+            _HW_TOKENS[content] = token
+    try:
+        object.__setattr__(hw, "_sweep_content_token", token)
+    except Exception:
+        pass
+    return token
+
+
+class BatchResult(Sequence):
+    """Lazy sequence view over prediction rows.
+
+    Indexing / iterating materializes ``TimeBreakdown`` objects (with
+    calibration applied, when given); ``totals`` exposes the raw totals as
+    a NumPy array without materializing anything — the argmin fast path.
+    """
+
+    __slots__ = ("_rows", "_calibration", "_workloads")
+
+    def __init__(self, rows: List[Row], workloads: Sequence[Workload],
+                 calibration: Optional[object] = None):
+        self._rows = rows
+        self._workloads = workloads
+        self._calibration = calibration
+
+    def __len__(self) -> int:
+        return len(self._rows)
+
+    def _materialize(self, i: int) -> TimeBreakdown:
+        tb = tb_from_row(self._rows[i])
+        if self._calibration is not None:
+            tb = self._calibration.apply(self._workloads[i], tb)
+        return tb
+
+    def __getitem__(self, i):
+        if isinstance(i, slice):
+            return [self._materialize(j) for j in range(len(self))[i]]
+        return self._materialize(range(len(self))[i])
+
+    def __iter__(self) -> Iterator[TimeBreakdown]:
+        return (self._materialize(i) for i in range(len(self)))
+
+    @property
+    def totals(self) -> np.ndarray:
+        """Total seconds per workload (calibration applied if present)."""
+        t = np.fromiter((r[0][0] for r in self._rows), np.float64,
+                        len(self._rows))
+        if self._calibration is not None:
+            m = np.fromiter(
+                (self._calibration.multiplier(w) for w in self._workloads),
+                np.float64, len(self._rows))
+            t = t * m
+        return t
+
+    def argmin(self) -> int:
+        """Index of the cheapest configuration (the paper's argmin)."""
+        return int(np.argmin(self.totals))
+
+
+class SweepEngine:
+    """Batched, memoizing front end over the analytical model backends."""
+
+    def __init__(self, *, use_cache: bool = True,
+                 max_entries: int = 200_000):
+        self.use_cache = use_cache
+        self.max_entries = max_entries
+        self._cache: "OrderedDict[Tuple, Row]" = OrderedDict()
+        self._lock = threading.Lock()
+        self.hits = 0
+        self.misses = 0
+
+    # ------------------------------------------------------------- queries
+    def predict_batch(self, workloads: Sequence[Workload],
+                      hw: HardwareParams, *,
+                      model: Optional[str] = None,
+                      calibration: Optional[object] = None) -> BatchResult:
+        """Predict every workload on ``hw``; order-preserving.
+
+        ``model`` overrides routing exactly as in ``predict.predict``;
+        ``calibration`` (core.calibrate.Calibration) is applied per result
+        on materialization.  Returns a lazy ``BatchResult`` sequence whose
+        items equal the scalar ``predict`` outputs bit-for-bit.
+        """
+        route = model or default_route(hw)
+        _rows_fn(route)                       # raises on unknown route
+        n = len(workloads)
+
+        if not self.use_cache:
+            self.misses += n
+            return BatchResult(_eval_rows(route, workloads, hw),
+                               workloads, calibration)
+
+        hwk = hardware_key(hw)
+        rows: List[Optional[Row]] = [None] * n
+        miss_idx: List[int] = []
+        keys: List[Tuple] = [None] * n  # type: ignore[list-item]
+        cache_get = self._cache.get
+        with self._lock:
+            for i, w in enumerate(workloads):
+                k = (hwk, route, workload_key(w))
+                keys[i] = k
+                row = cache_get(k)
+                if row is not None:
+                    rows[i] = row
+                else:
+                    miss_idx.append(i)
+            self.hits += n - len(miss_idx)
+            self.misses += len(miss_idx)
+
+        if miss_idx:
+            if len(miss_idx) == n:
+                fresh = _eval_rows(route, workloads, hw)
+                rows = fresh
+            else:
+                fresh = _eval_rows(
+                    route, [workloads[i] for i in miss_idx], hw)
+                for i, row in zip(miss_idx, fresh):
+                    rows[i] = row
+            with self._lock:
+                for i, row in zip(miss_idx, fresh):
+                    self._cache[keys[i]] = row
+                while len(self._cache) > self.max_entries:
+                    self._cache.popitem(last=False)
+
+        return BatchResult(rows, workloads, calibration)  # type: ignore
+
+    def predict(self, w: Workload, hw: HardwareParams, *,
+                model: Optional[str] = None,
+                calibration: Optional[object] = None) -> TimeBreakdown:
+        """Scalar entry point: a batch of one."""
+        return self.predict_batch(
+            [w], hw, model=model, calibration=calibration)[0]
+
+    # --------------------------------------------------------------- admin
+    def cache_stats(self) -> Dict[str, int]:
+        return {"hits": self.hits, "misses": self.misses,
+                "entries": len(self._cache)}
+
+    def clear_cache(self) -> None:
+        with self._lock:
+            self._cache.clear()
+            self.hits = self.misses = 0
+
+
+_DEFAULT: Optional[SweepEngine] = None
+_DEFAULT_LOCK = threading.Lock()
+
+
+def default_engine() -> SweepEngine:
+    """Process-wide shared engine (what ``predict.predict`` delegates to)."""
+    global _DEFAULT
+    if _DEFAULT is None:
+        with _DEFAULT_LOCK:
+            if _DEFAULT is None:
+                _DEFAULT = SweepEngine()
+    return _DEFAULT

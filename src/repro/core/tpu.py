@@ -22,12 +22,16 @@ and ``roofline_report`` emits the three task-spec roofline terms.
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Dict, Optional, Sequence, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from itertools import repeat
 
 from . import collectives as coll
-from .cache import working_set_blend
+from .cache import working_set_blend, working_set_blend_batch
 from .hardware import BYTES_PER_ELEM, HardwareParams, TPU_V5E
-from .workload import TimeBreakdown, Workload
+from .workload import Row, TimeBreakdown, Workload, tb_from_row
 
 
 def mxu_utilization(w: Workload, hw: HardwareParams) -> float:
@@ -92,6 +96,80 @@ def predict(w: Workload, hw: HardwareParams = TPU_V5E, *,
                 "mxu_util": mxu_utilization(w, hw) if w.matrix else 0.0,
                 "alpha": alpha},
     )
+
+
+# ---------------------------------------------------------------------------
+# Batched (NumPy-vectorized) stage model — the SweepEngine hot path.
+# No mesh/collectives in batch mode (matching the scalar default); results
+# are bit-identical to per-workload ``predict(w, hw)`` calls.
+# ---------------------------------------------------------------------------
+
+def _mxu_utilization_batch(raw: np.ndarray, eff: np.ndarray) -> np.ndarray:
+    from .workload import NV_GM, NV_GN, NV_GK, NV_HAS_GEMM
+    has_gemm = raw[:, NV_HAS_GEMM] != 0
+    util = eff
+    for col in (NV_GM, NV_GN, NV_GK):
+        dim = np.where(has_gemm, raw[:, col], 128.0)
+        pad = 128 * -(-dim // 128)
+        factor = np.where(dim % 128 != 0, dim / pad, 1.0)
+        util = util * factor
+    return util
+
+
+def predict_rows(ws: Sequence[Workload],
+                 hw: HardwareParams = TPU_V5E) -> List[Row]:
+    """Vectorized ``predict`` over a workload batch, in row form (no
+    collectives — matching the scalar default)."""
+    from .workload import NV_FLOPS, NV_BYTES, NV_WS_OR_BYTES, NV_MATRIX, \
+        NV_IRREGULAR, nvec_matrix
+    raw = nvec_matrix(ws)
+    flops, nbytes, wsb = raw[:, NV_FLOPS], raw[:, NV_BYTES], \
+        raw[:, NV_WS_OR_BYTES]
+    is_mat = raw[:, NV_MATRIX] != 0
+
+    pmap = {}
+    for w in ws:
+        k = (w.precision, w.matrix)
+        if k not in pmap:
+            pmap[k] = (hw.sustained_flops(k[0], matrix=k[1]),
+                       hw.precision_efficiency.get(k[0], 1.0))
+    pair = np.array([pmap[(w.precision, w.matrix)] for w in ws],
+                    dtype=np.float64)
+    rate, eff = pair[:, 0], pair[:, 1]
+
+    util = _mxu_utilization_batch(raw, eff)
+    with np.errstate(divide="ignore", invalid="ignore"):
+        t_comp = np.where(
+            is_mat,
+            flops / (rate * util / eff),
+            np.where(flops > 0, flops / rate, 0.0))
+
+    bw = working_set_blend_batch(wsb, hw)
+    t_dma = hw.cycles_to_seconds(hw.tma_latency_cycles) + nbytes / bw
+    t_dma = np.where(raw[:, NV_IRREGULAR] != 0, t_dma * 4.0, t_dma)
+
+    alpha = hw.pipeline_overlap_alpha
+    t_sync = hw.cycles_to_seconds(hw.mbarrier_latency_cycles)
+    t_io_eff = (1.0 - alpha) * t_dma + t_sync                    # Eq. 7
+    t_step = np.maximum(np.maximum(t_comp, t_io_eff), 0.0) + t_sync
+    total = hw.launch_latency_s + t_step  # (N-1)*0.0 device term: no-op
+
+    n = len(ws)
+    fields = zip(total.tolist(), t_comp.tolist(), t_dma.tolist(),
+                 t_io_eff.tolist(), repeat(t_sync, n),
+                 repeat(hw.launch_latency_s, n), repeat(0.0, n),
+                 repeat(0.0, n), repeat(0.0, n))
+    dkeys = ("t_coll_exposed", "mxu_util", "alpha")
+    dvals = zip(repeat(0.0, n),
+                np.where(is_mat, util, 0.0).tolist(),
+                repeat(alpha, n))
+    return list(zip(fields, repeat(dkeys, n), dvals))
+
+
+def predict_batch(ws: Sequence[Workload],
+                  hw: HardwareParams = TPU_V5E) -> List[TimeBreakdown]:
+    """Materialized form of ``predict_rows``."""
+    return [tb_from_row(r) for r in predict_rows(ws, hw)]
 
 
 def straggler_budget(num_workers: int, hw: HardwareParams = TPU_V5E) -> float:

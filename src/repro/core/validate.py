@@ -10,7 +10,6 @@ from __future__ import annotations
 from dataclasses import dataclass, field
 from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
-from . import predict as predict_mod, roofline
 from .hardware import HardwareParams
 from .workload import TimeBreakdown, Workload
 
@@ -98,16 +97,25 @@ def validate_suite(platform_hw: HardwareParams,
                    measured: Sequence[float], *,
                    calibration=None,
                    model: Optional[str] = None) -> ValidationReport:
-    """Run model + naive roofline over a suite with known measured times."""
+    """Run model + naive roofline over a suite with known measured times.
+
+    Both models are priced through the shared SweepEngine as one batched
+    query per route (memoized — repeated validation of the same suite is
+    served from the cache).
+    """
+    from . import sweep
     assert len(workloads) == len(measured)
+    engine = sweep.default_engine()
+    t_models = engine.predict_batch(
+        workloads, platform_hw, model=model, calibration=calibration).totals
+    t_roofs = engine.predict_batch(
+        workloads, platform_hw, model="roofline").totals
     rep = ValidationReport(platform=platform_hw.name)
-    for w, t_meas in zip(workloads, measured):
-        t_model = predict_mod.predict(
-            w, platform_hw, model=model, calibration=calibration).total
-        t_roof = roofline.predict(w, platform_hw).total
+    for w, t_meas, t_model, t_roof in zip(workloads, measured,
+                                          t_models, t_roofs):
         rep.rows.append(ValidationRow(
             name=w.name, wclass=w.wclass, measured_s=t_meas,
-            model_s=t_model, roofline_s=t_roof))
+            model_s=float(t_model), roofline_s=float(t_roof)))
     return rep
 
 

@@ -11,10 +11,23 @@ applications are lists of Segments (``core/segments.py``).
 from __future__ import annotations
 
 import dataclasses
+import struct
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Tuple
 
+import numpy as np
+
 VALID_CLASSES = ("memory", "compute", "balanced", "stencil")
+
+# Layout of the packed numeric vector stashed on every Workload (column
+# indices into the float64 matrix the batch backends build with one
+# zero-copy np.frombuffer over the concatenated per-workload buffers).
+NV_FLOPS, NV_BYTES, NV_WS_OR_BYTES, NV_WS, NV_IRREGULAR, NV_CONCURRENT, \
+    NV_DEVICES, NV_K_TILES, NV_NUM_CTAS, NV_BYTES_PER_CTA, NV_TMA_P, \
+    NV_COMP_BYTES, NV_COMP_RATIO, NV_VGPR, NV_MATRIX, NV_HAS_GEMM, \
+    NV_GM, NV_GN, NV_GK, NV_GMN, NV_BM, NV_BN, NV_BK = range(23)
+
+_NVEC_PACK = struct.Struct("23d").pack
 
 
 @dataclass(frozen=True)
@@ -33,6 +46,9 @@ class TileConfig:
     def accum_bytes(self, accum_bytes_per_elem: float = 4.0) -> float:
         # accumulator tile resident in TMEM/VGPR: bM x bN
         return self.bm * self.bn * accum_bytes_per_elem
+
+
+_DEFAULT_TILE = TileConfig()
 
 
 @dataclass(frozen=True)
@@ -99,6 +115,20 @@ class Workload:
                 f"workload class {self.wclass!r} not in {VALID_CLASSES}")
         if self.flops < 0 or self.bytes < 0:
             raise ValueError("flops/bytes must be non-negative")
+        g, t = self.gemm, self.tile
+        object.__setattr__(self, "_nvec", _NVEC_PACK(
+            self.flops, self.bytes,
+            self.working_set_bytes or self.bytes, self.working_set_bytes,
+            self.irregular, self.concurrent_kernels, self.num_devices,
+            self.k_tiles, self.num_ctas, self.bytes_per_cta,
+            self.tma_participants, self.compressed_bytes,
+            self.compression_ratio, self.vgpr_per_workitem,
+            self.matrix, g is not None,
+            g.m if g is not None else 0, g.n if g is not None else 0,
+            g.k if g is not None else 0,
+            g.m * g.n if g is not None else 0,
+            (t or _DEFAULT_TILE).bm, (t or _DEFAULT_TILE).bn,
+            (t or _DEFAULT_TILE).bk))
 
     @property
     def arithmetic_intensity(self) -> float:
@@ -167,6 +197,48 @@ class TimeBreakdown:
             overhead=self.overhead * factor,
             detail={k: v * factor for k, v in self.detail.items()},
         )
+
+
+# ---------------------------------------------------------------------------
+# Compact row form of TimeBreakdown (SweepEngine hot path).
+#
+# A row is ((total, compute, memory, io_effective, sync, launch, writeback,
+# collective, overhead), detail_keys, detail_values) — three immutable
+# tuples.  Vectorized model backends emit rows via C-level zips of
+# ``.tolist()`` columns, the engine memoizes them without defensive copies,
+# and full TimeBreakdown objects materialize lazily on access.
+# ---------------------------------------------------------------------------
+
+TB_FIELDS = ("total", "compute", "memory", "io_effective", "sync", "launch",
+             "writeback", "collective", "overhead")
+
+#: (field_values, detail_keys, detail_values)
+Row = Tuple[Tuple[float, ...], Tuple[str, ...], Tuple[float, ...]]
+
+
+def nvec_matrix(ws) -> np.ndarray:
+    """(n, 23) float64 view over the packed per-workload vectors — the
+    zero-copy bulk extraction the batch backends build columns from."""
+    return np.frombuffer(b"".join([w._nvec for w in ws]),
+                         dtype=np.float64).reshape(len(ws), 23)
+
+
+def tb_from_row(row: Row) -> TimeBreakdown:
+    """Materialize a TimeBreakdown from its row form (bypasses the frozen
+    dataclass __init__/__setattr__ — the row is already validated model
+    output)."""
+    tb = TimeBreakdown.__new__(TimeBreakdown)
+    d = dict(zip(TB_FIELDS, row[0]))
+    d["detail"] = dict(zip(row[1], row[2]))
+    object.__setattr__(tb, "__dict__", d)
+    return tb
+
+
+def row_from_tb(tb: TimeBreakdown) -> Row:
+    """Inverse of ``tb_from_row`` (scalar-fallback paths)."""
+    return ((tb.total, tb.compute, tb.memory, tb.io_effective, tb.sync,
+             tb.launch, tb.writeback, tb.collective, tb.overhead),
+            tuple(tb.detail.keys()), tuple(tb.detail.values()))
 
 
 def gemm_workload(name: str, m: int, n: int, k: int, *,

@@ -1,0 +1,13 @@
+"""JAX API compatibility shims shared by the Pallas TPU kernels.
+
+The Pallas TPU compiler-params class was renamed across JAX releases:
+older releases expose ``pltpu.TPUCompilerParams``, newer ones
+``pltpu.CompilerParams``.  Kernels import ``CompilerParams`` from here so
+they run on either API without per-kernel version checks.
+"""
+from __future__ import annotations
+
+from jax.experimental.pallas import tpu as pltpu
+
+CompilerParams = getattr(pltpu, "CompilerParams", None) \
+    or getattr(pltpu, "TPUCompilerParams")

@@ -192,12 +192,14 @@ def ssd_apply_shard_map(xh, dt, a_log, bmat, cmat, cfg: ModelConfig, *,
     import functools
     from jax.sharding import PartitionSpec as P
 
+    from ..distributed.sharding import shard_map
+
     dp = tuple(dp_axes) if dp_axes else None
     body = functools.partial(
         _ssd_local_body, chunk=cfg.ssm_chunk,
         unroll_heads=cfg.attn_chunk_unroll,
         tile_dtype=jnp.bfloat16 if cfg.ssd_tile_bf16 else None)
-    return jax.shard_map(
+    return shard_map(
         body,
         mesh=mesh,
         in_specs=(P(dp, None, model_axis, None),   # x heads sharded

@@ -31,10 +31,20 @@ def clip_by_global_norm(grads, max_norm: float):
 
 def adamw_update(params, grads, state: Dict, *, lr,
                  b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8,
+                 eps_root: float = 0.0,
                  weight_decay: float = 0.1,
                  max_grad_norm: float = 1.0) -> Tuple[Any, Dict, Dict]:
     """Returns (new_params, new_state, metrics).  lr may be a scalar or a
-    callable step -> lr."""
+    callable step -> lr.
+
+    ``eps_root`` is added inside the square root (optax semantics, default
+    off): a nonzero value bounds the update's sensitivity to gradient
+    noise when the second moment is near zero.  Without it, the first
+    steps behave like sign(g) with an eps-wide transition, so two gradient
+    estimates that agree to fp32 round-off (e.g. accumulated microbatches
+    vs. the full batch) can produce updates differing by O(lr) on
+    near-zero-gradient elements.  The train substrate opts in
+    (train_step.EPS_ROOT)."""
     step = state["step"] + 1
     lr_t = lr(step) if callable(lr) else lr
     if max_grad_norm > 0:
@@ -51,8 +61,8 @@ def adamw_update(params, grads, state: Dict, *, lr,
         vf = b2 * v.astype(jnp.float32) + (1 - b2) * gf * gf
         mhat = mf / bc1
         vhat = vf / bc2
-        delta = mhat / (jnp.sqrt(vhat) + eps) + weight_decay \
-            * p.astype(jnp.float32)
+        delta = mhat / (jnp.sqrt(vhat + eps_root) + eps) \
+            + weight_decay * p.astype(jnp.float32)
         newp = p.astype(jnp.float32) - lr_t * delta
         return newp.astype(p.dtype), mf.astype(m.dtype), vf.astype(v.dtype)
 

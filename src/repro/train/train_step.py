@@ -17,6 +17,13 @@ from ..models import LanguageModel
 from ..optim import adamw_update, error_feedback_update
 from ..optim.adamw import adamw_init
 
+# Second-moment floor (optax-style eps_root, inside the sqrt) used by the
+# train substrate: sqrt(1e-8) = 1e-4 bounds the first-step update's
+# sensitivity to fp32 gradient noise, so grad-accumulated microbatch steps
+# match full-batch steps instead of amplifying round-off through Adam's
+# sign(g)-like cold-start update.
+EPS_ROOT = 1e-8
+
 
 class TrainState(dict):
     """params / opt / residuals / step as a plain dict pytree."""
@@ -78,17 +85,27 @@ def make_train_step(model: LanguageModel, *, lr, microbatches: int = 1,
             adt = jnp.dtype(accum_dtype)
 
             def body(carry, mb):
-                gsum, lsum = carry
+                gsum, lsum, nsum = carry
                 loss, _, grads = grads_of(params, mb)
+                # weight each microbatch by its valid-token count: the model
+                # loss is a mean over valid (label >= 0) tokens, so an
+                # unweighted mean-of-means diverges from the full-batch
+                # gradient whenever microbatches carry unequal valid counts.
+                if "labels" in mb:
+                    n = jnp.maximum(
+                        jnp.sum(mb["labels"] >= 0), 1).astype(adt)
+                else:
+                    n = jnp.ones((), adt)
                 gsum = jax.tree.map(
-                    lambda a, g: a + g.astype(adt), gsum, grads)
-                return (gsum, lsum + loss), None
+                    lambda a, g: a + g.astype(adt) * n, gsum, grads)
+                return (gsum, lsum + loss * n, nsum + n), None
 
             gzero = jax.tree.map(
                 lambda p: jnp.zeros(p.shape, adt), params)
-            (gsum, lsum), _ = jax.lax.scan(body, (gzero, 0.0), micro)
-            grads = jax.tree.map(lambda g: g / microbatches, gsum)
-            loss = lsum / microbatches
+            (gsum, lsum, nsum), _ = jax.lax.scan(
+                body, (gzero, jnp.zeros((), adt), jnp.zeros((), adt)), micro)
+            grads = jax.tree.map(lambda g: g / nsum, gsum)
+            loss = lsum / nsum
             metrics = {"xent": loss, "aux": jnp.zeros(())}
         else:
             loss, metrics, grads = grads_of(params, batch)
@@ -103,7 +120,7 @@ def make_train_step(model: LanguageModel, *, lr, microbatches: int = 1,
                 weight_decay=weight_decay, max_grad_norm=max_grad_norm)
         else:
             new_params, new_opt, opt_metrics = adamw_update(
-                params, grads, state["opt"], lr=lr,
+                params, grads, state["opt"], lr=lr, eps_root=EPS_ROOT,
                 weight_decay=weight_decay, max_grad_norm=max_grad_norm)
         new_state = dict(state, params=new_params, opt=new_opt)
         if compress_grads:

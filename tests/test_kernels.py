@@ -1,5 +1,8 @@
 """Per-kernel validation: shape/dtype sweeps vs pure-jnp oracles,
-interpret=True (TPU kernels executed in Python on CPU)."""
+interpret=True (TPU kernels executed in Python on CPU).
+
+The exhaustive interpret-mode sweeps take minutes and are marked ``slow``;
+the fast tier-1 gate (-m "not slow") keeps one cheap test per kernel."""
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -24,6 +27,7 @@ def tol_for(dtype):
 
 
 class TestFlashAttention:
+    @pytest.mark.slow
     @pytest.mark.parametrize("b,hq,hkv,s,d", [
         (1, 2, 2, 128, 64),
         (2, 4, 2, 256, 64),     # GQA group 2
@@ -43,6 +47,7 @@ class TestFlashAttention:
             np.asarray(out, np.float32), np.asarray(exp, np.float32),
             atol=tol_for(dtype), rtol=tol_for(dtype))
 
+    @pytest.mark.slow
     @pytest.mark.parametrize("window", [32, 64, 200])
     def test_sliding_window(self, window):
         b, h, s, d = 1, 2, 256, 64
@@ -67,6 +72,7 @@ class TestFlashAttention:
         np.testing.assert_allclose(np.asarray(out), np.asarray(exp),
                                    atol=5e-5, rtol=5e-5)
 
+    @pytest.mark.slow
     def test_block_size_invariance(self):
         """Output must not depend on the BlockSpec tiling."""
         b, h, s, d = 1, 2, 256, 64
@@ -93,6 +99,7 @@ class TestFlashAttention:
 
 
 class TestMatmul:
+    @pytest.mark.slow
     @pytest.mark.parametrize("m,n,k", [
         (128, 128, 128), (256, 512, 384), (512, 256, 1024), (64, 64, 64),
     ])
@@ -106,6 +113,7 @@ class TestMatmul:
             np.asarray(out, np.float32), np.asarray(exp, np.float32),
             atol=tol_for(dtype) * k ** 0.5, rtol=tol_for(dtype))
 
+    @pytest.mark.slow
     def test_block_invariance(self):
         a = jax.random.normal(KEY, (256, 256), jnp.float32)
         b = jax.random.normal(jax.random.PRNGKey(1), (256, 256), jnp.float32)
@@ -125,6 +133,7 @@ class TestMatmul:
 
 
 class TestRMSNorm:
+    @pytest.mark.slow
     @pytest.mark.parametrize("r,d", [(8, 64), (256, 512), (1024, 128),
                                      (100, 256)])
     @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
@@ -153,6 +162,7 @@ class TestRMSNorm:
 
 
 class TestSSD:
+    @pytest.mark.slow
     @pytest.mark.parametrize("b,s,h,p,n,chunk", [
         (1, 128, 2, 16, 32, 32),
         (2, 256, 3, 16, 32, 64),
@@ -171,6 +181,7 @@ class TestSSD:
         np.testing.assert_allclose(np.asarray(out), np.asarray(exp),
                                    atol=5e-4, rtol=5e-3)
 
+    @pytest.mark.slow
     def test_chunk_invariance(self):
         """Chunked SSD must equal the recurrence regardless of chunking."""
         b, s, h, p, n = 1, 128, 2, 16, 32

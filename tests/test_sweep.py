@@ -1,0 +1,216 @@
+"""SweepEngine parity + behavior tests.
+
+The engine's core invariant: ``SweepEngine.predict_batch([w], hw)[0]`` is
+bit-identical to the pre-refactor scalar ``predict(w, hw)`` (which is the
+per-architecture model function) for every route — stage, wavefront, tpu,
+generic, roofline — across all five registered hardware targets, and the
+vectorized row backends match element-for-element on real batches
+(including the detail dicts)."""
+import random
+
+import pytest
+
+from repro.core import autotune, blackwell, calibrate, cdna3, generic, \
+    hardware, predict as predict_mod, roofline, sweep, tpu
+from repro.core.workload import TileConfig, Workload, gemm_workload, \
+    streaming_workload, tb_from_row
+
+HW_ALL = [hardware.B200, hardware.H200, hardware.MI300A, hardware.MI250X,
+          hardware.TPU_V5E]
+
+SCALAR = {"stage": blackwell.predict, "wavefront": cdna3.predict,
+          "tpu": tpu.predict, "generic": generic.predict,
+          "roofline": roofline.predict}
+
+
+def routes_for(hw):
+    routes = ["generic", "roofline"]
+    if hw.model_family in ("blackwell", "tpu"):
+        routes.append("stage")
+    if hw.model_family == "cdna":
+        routes.append("wavefront")
+    if hw.model_family == "tpu":
+        routes.append("tpu")
+    return routes
+
+
+def mixed_workloads(hw, n=80, seed=1):
+    """GEMM / streaming / tiled / plain workloads with per-target-valid
+    precisions (exotic precisions raise identically on both paths)."""
+    rng = random.Random(seed)
+    vec_precs = ["fp32"] if hw.model_family == "tpu" else ["fp32", "fp64"]
+    mat_precs = ["fp16", "bf16", "fp8"]
+    out = []
+    for i in range(n):
+        kind = rng.choice(["gemm", "stream", "tiled", "plain"])
+        if kind == "gemm":
+            m, nn, k = (rng.choice([100, 512, 2048, 8192]) for _ in range(3))
+            out.append(gemm_workload(
+                f"g{i}", m, nn, k, precision=rng.choice(mat_precs),
+                tile=TileConfig(rng.choice([64, 128, 256]),
+                                rng.choice([64, 128, 256]),
+                                rng.choice([16, 32, 64]))))
+        elif kind == "stream":
+            out.append(streaming_workload(
+                f"s{i}", rng.uniform(1e4, 1e12),
+                precision=rng.choice(vec_precs),
+                irregular=rng.random() < 0.3))
+        elif kind == "tiled":
+            out.append(Workload(
+                name=f"t{i}", wclass="compute",
+                flops=rng.uniform(1e6, 1e15), bytes=rng.uniform(1e4, 1e12),
+                precision=rng.choice(mat_precs), matrix=True,
+                tile=TileConfig(128, 128, 64),
+                k_tiles=rng.randint(1, 256), num_ctas=rng.randint(0, 5000),
+                working_set_bytes=rng.uniform(0, 1e9),
+                compressed_bytes=rng.choice([0.0, 1e8]),
+                compression_ratio=2.0,
+                tma_participants=rng.choice([1, 2, 4]),
+                concurrent_kernels=rng.choice([1, 2]),
+                num_devices=rng.choice([1, 4])))
+        else:
+            out.append(Workload(
+                name=f"p{i}",
+                wclass=rng.choice(["memory", "compute", "balanced",
+                                   "stencil"]),
+                flops=rng.uniform(0, 1e14), bytes=rng.uniform(1e3, 1e12),
+                precision=rng.choice(vec_precs), matrix=False,
+                working_set_bytes=rng.uniform(0, 1e10),
+                vgpr_per_workitem=rng.choice([32, 64, 128, 256]),
+                hit_rates={"llc": 0.7} if rng.random() < 0.2 else {},
+                num_loads=rng.choice([0.0, 1e6]),
+                irregular=rng.random() < 0.2))
+    return out
+
+
+def assert_identical(got, expected):
+    assert got == expected, (got, expected)
+    assert got.detail == expected.detail, (got.detail, expected.detail)
+
+
+class TestBatchOfOneParity:
+    @pytest.mark.parametrize("hw", HW_ALL, ids=lambda h: h.name)
+    def test_every_route_bit_identical(self, hw):
+        for route in routes_for(hw):
+            for w in mixed_workloads(hw, n=12, seed=7):
+                got = sweep.SweepEngine().predict_batch(
+                    [w], hw, model=route)[0]
+                assert_identical(got, SCALAR[route](w, hw))
+
+    @pytest.mark.parametrize("hw", HW_ALL, ids=lambda h: h.name)
+    def test_default_route_matches_predict(self, hw):
+        w = gemm_workload("g", 4096, 4096, 4096, precision="fp16")
+        assert_identical(sweep.SweepEngine().predict_batch([w], hw)[0],
+                         predict_mod.predict(w, hw))
+
+
+class TestVectorizedParity:
+    """Real batches exercise the vectorized row backends (above the
+    scalar-fallback cutoff) against the scalar model functions."""
+
+    @pytest.mark.parametrize("hw", HW_ALL, ids=lambda h: h.name)
+    def test_batch_matches_scalar_elementwise(self, hw):
+        for route in routes_for(hw):
+            ws = mixed_workloads(hw, n=80, seed=3)
+            rows = sweep._rows_fn(route)(ws, hw)
+            assert len(rows) == len(ws)
+            for w, row in zip(ws, rows):
+                assert_identical(tb_from_row(row), SCALAR[route](w, hw))
+
+    def test_engine_large_batch_uses_vectorized_path(self):
+        ws = mixed_workloads(hardware.B200, n=64, seed=5)
+        got = sweep.SweepEngine().predict_batch(ws, hardware.B200)
+        for w, g in zip(ws, got):
+            assert_identical(g, blackwell.predict(w, hardware.B200))
+
+
+class TestEngineBehavior:
+    def test_unknown_route_raises(self):
+        w = streaming_workload("s", 1e9)
+        with pytest.raises(ValueError, match="unknown model route"):
+            sweep.SweepEngine().predict_batch([w], hardware.B200,
+                                              model="nope")
+
+    def test_misrouted_hw_raises(self):
+        w = streaming_workload("s", 1e9)
+        with pytest.raises(ValueError, match="mis-routed"):
+            sweep.SweepEngine().predict_batch(
+                [w] * 32, hardware.MI300A, model="stage")
+
+    def test_cache_hits_are_identical_and_counted(self):
+        eng = sweep.SweepEngine()
+        ws = mixed_workloads(hardware.MI300A, n=40, seed=9)
+        first = list(eng.predict_batch(ws, hardware.MI300A))
+        assert eng.cache_stats()["misses"] == 40
+        second = list(eng.predict_batch(ws, hardware.MI300A))
+        assert eng.cache_stats()["hits"] == 40
+        for a, b in zip(first, second):
+            assert_identical(a, b)
+
+    def test_cache_entries_immune_to_caller_mutation(self):
+        eng = sweep.SweepEngine()
+        w = streaming_workload("s", 1e9)
+        a = eng.predict(w, hardware.B200)
+        a.detail["poison"] = 1.0
+        b = eng.predict(w, hardware.B200)
+        assert "poison" not in b.detail
+
+    def test_content_keyed_not_name_keyed(self):
+        """Same characterization under two names shares one entry; a
+        re-registered parameter file with changed content must NOT serve
+        stale results."""
+        eng = sweep.SweepEngine()
+        w1 = streaming_workload("a", 1e9)
+        w2 = streaming_workload("b", 1e9)
+        eng.predict(w1, hardware.B200)
+        eng.predict(w2, hardware.B200)
+        assert eng.cache_stats()["hits"] == 1
+        hw2 = hardware.B200.with_updates(hbm_sustained_bw=1e12)
+        t1 = eng.predict(w1, hardware.B200).total
+        t2 = eng.predict(w1, hw2).total
+        assert t1 != t2
+
+    def test_calibration_applied_after_cache(self):
+        eng = sweep.SweepEngine()
+        w = gemm_workload("g", 2048, 2048, 2048, precision="fp16")
+        cal = calibrate.Calibration(per_case={"g": 2.0})
+        plain = eng.predict(w, hardware.B200)
+        scaled = eng.predict(w, hardware.B200, calibration=cal)
+        assert scaled.total == plain.total * 2.0
+        assert scaled.detail["m_case"] == 2.0
+        again = eng.predict(w, hardware.B200)
+        assert "m_case" not in again.detail
+        assert again.total == plain.total
+
+    def test_batchresult_sequence_api(self):
+        eng = sweep.SweepEngine()
+        ws = mixed_workloads(hardware.B200, n=20, seed=11)
+        res = eng.predict_batch(ws, hardware.B200)
+        assert len(res) == 20
+        assert res[-1] == list(res)[-1]
+        totals = res.totals
+        assert len(totals) == 20
+        assert totals[res.argmin()] == min(totals)
+        for t, tb in zip(totals, res):
+            assert t == tb.total
+
+    def test_scalar_predict_delegates_to_engine(self):
+        eng = sweep.default_engine()
+        before = eng.cache_stats()["misses"] + eng.cache_stats()["hits"]
+        w = streaming_workload("delegate_check", 12345.0)
+        predict_mod.predict(w, hardware.H200)
+        after = eng.cache_stats()["misses"] + eng.cache_stats()["hits"]
+        assert after == before + 1
+
+
+class TestAutotuneBatched:
+    def test_select_tile_matches_scalar_argmin(self):
+        base = gemm_workload("sel", 4096, 4096, 4096, precision="fp16")
+        tiles = [TileConfig(s, s, 32) for s in (64, 128, 256)] * 8
+        best, costs = autotune.select_tile(base, hardware.B200, tiles)
+        from repro.core.cdna3 import _retile
+        scalar = {f"{t.bm}x{t.bn}x{t.bk}":
+                  blackwell.predict(_retile(base, t), hardware.B200).total
+                  for t in tiles}
+        assert costs == scalar
+        assert costs[f"{best.bm}x{best.bn}x{best.bk}"] == min(costs.values())
