@@ -120,11 +120,12 @@ def screen(names, json_out: str | None = None):
     full screen costs milliseconds vs minutes per compile).
 
     Experiments are grouped by cell so each cell's config/param maths is
-    computed once; plans are priced one enumerate_plans call at a time
-    because ``opt_state_bytes`` (the int8-moments HBM-fit input) differs
-    per plan.  Kernel-level what-ifs ride the shared SweepEngine cache.
-    Model changes hidden behind ``cfg_overrides`` (e.g. shard_map SSD) are
-    not visible to the analytical plan model and are marked as such.
+    computed once; each cell prices all its plans in ONE columnar
+    enumerate_plans call — ``opt_state_bytes`` (the int8-moments HBM-fit
+    input) is passed per plan.  Kernel-level what-ifs ride the shared
+    SweepEngine cache.  Model changes hidden behind ``cfg_overrides``
+    (e.g. shard_map SSD) are not visible to the analytical plan model and
+    are marked as such.
     """
     from repro.configs import SHAPES, get_config
     from repro.core import autotune, collectives
@@ -154,16 +155,14 @@ def screen(names, json_out: str | None = None):
             opt_bytes.append(2.05 * n if ov.get("moment_dtype") == "int8"
                              else 4.0 * n)
 
-        costs = []
-        for plan, ob in zip(plans, opt_bytes):
-            costs += autotune.enumerate_plans(
-                [plan],
-                model_flops=6.0 * n * tokens,
-                param_bytes=2.0 * n,
-                activation_bytes=2.0 * tokens * cfg.d_model
-                * cfg.n_layers * 4,
-                opt_state_bytes=ob,
-                activation_peak_bytes=2.0 * tokens * cfg.d_model * 2)
+        costs = autotune.enumerate_plans(
+            plans,
+            model_flops=6.0 * n * tokens,
+            param_bytes=2.0 * n,
+            activation_bytes=2.0 * tokens * cfg.d_model
+            * cfg.n_layers * 4,
+            opt_state_bytes=opt_bytes,
+            activation_peak_bytes=2.0 * tokens * cfg.d_model * 2)
         base = costs[0]
         print(f"=== screen: {arch} x {shape_name} "
               f"(baseline step {base.total_s:.3f}s) ===")

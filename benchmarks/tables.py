@@ -33,13 +33,18 @@ def _timeit(fn):
 
 def _batched_pf(ws, hw):
     """Scalar predict-fn for the calibrate.fit_* APIs, backed by ONE
-    batched engine query — every subsequent per-workload call is a cache
-    hit."""
-    engine = sweep.default_engine()
-    engine.predict_batch(ws, hw)
+    columnar WorkloadTable query — every subsequent per-workload call
+    materializes a row from the table result (identity-matched), falling
+    back to the memoized engine for foreign workloads."""
+    from repro.core.workload import WorkloadTable
+    res = sweep.predict_table(WorkloadTable.from_workloads(ws), hw)
+    index = {id(w): i for i, w in enumerate(ws)}
 
     def pf(w):
-        return engine.predict(w, hw)
+        i = index.get(id(w))
+        if i is not None:
+            return res[i]
+        return sweep.default_engine().predict(w, hw)
     return pf
 
 

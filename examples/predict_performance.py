@@ -4,9 +4,11 @@ comparison between B200 and MI300A without access to both').
 Sweeps a workload portfolio (GEMMs across sizes/precisions, bandwidth
 kernels, a stencil app segment) over every parameter file, reporting
 predicted time + bottleneck per platform — plus the TPU-v5e adaptation
-with its collective stage on the production mesh, and a vectorized tile
-sweep through the batched SweepEngine (§IV-B adaptive tile selection at
-sweep scale; benchmarks/sweep_bench.py is the 1,000-point version).
+with its collective stage on the production mesh, and two columnar sweeps
+through ``WorkloadTable``: a ``tile_lattice`` + fused ``argmin_table``
+tile search and a ``cartesian`` precision-x-concurrency what-if grid with
+``topk_table``/``pareto_table`` (§IV-B adaptive tile selection at sweep
+scale; benchmarks/sweep_bench.py is the 1,000-point version).
 
 Run:  PYTHONPATH=src python examples/predict_performance.py
 """
@@ -14,7 +16,7 @@ import time
 
 from repro.core import collectives, hardware, predict, sweep, tpu
 from repro.core.workload import Segment, TileConfig, Workload, \
-    gemm_workload, streaming_workload
+    WorkloadTable, gemm_workload, streaming_workload
 from repro.core.segments import predict_app
 
 PLATFORMS = ("b200", "h200", "mi300a", "mi250x", "tpu_v5e")
@@ -66,25 +68,40 @@ def main():
           f"(exposed {out.detail['t_coll_exposed'] * 1e3:.3f} ms)")
 
     print()
-    print("Vectorized tile sweep (SweepEngine.predict_batch): price every")
-    print("(bM, bN, bK) tile candidate for an 8192^3 fp16 GEMM in one call")
-    print("and take the argmin (paper §IV-B adaptive tile selection):")
-    engine = sweep.default_engine()
-    candidates = [gemm_workload(f"tile_{bm}x{bn}x{bk}", 8192, 8192, 8192,
-                                precision="fp16",
-                                tile=TileConfig(bm, bn, bk))
-                  for bm in (32, 64, 128, 256, 512)
-                  for bn in (32, 64, 128, 256, 512)
-                  for bk in (16, 32, 64, 128, 256)]
+    print("Columnar tile sweep (WorkloadTable.tile_lattice + argmin_table):")
+    print("price every (bM, bN, bK) tile candidate for an 8192^3 fp16 GEMM")
+    print("without building per-config Workload objects, and take the fused")
+    print("argmin (paper §IV-B adaptive tile selection at sweep scale):")
+    base = gemm_workload("gemm8k", 8192, 8192, 8192, precision="fp16")
+    tiles = [TileConfig(bm, bn, bk)
+             for bm in (32, 64, 128, 256, 512)
+             for bn in (32, 64, 128, 256, 512)
+             for bk in (16, 32, 64, 128, 256)]
+    table = WorkloadTable.tile_lattice(base, tiles)
     for plat in ("b200", "mi300a", "tpu_v5e"):
         hw = hardware.get(plat)
         t0 = time.perf_counter()
-        res = engine.predict_batch(candidates, hw)
-        best = res.argmin()
+        win = sweep.argmin_table(table, hw)
         dt = time.perf_counter() - t0
-        print(f"  {plat:8s}: {len(candidates)} tiles in {dt * 1e3:6.2f} ms"
-              f" ({len(candidates) / dt:9.0f} cfg/s) -> best"
-              f" {candidates[best].name} @ {res.totals[best] * 1e3:.3f} ms")
+        t = tiles[win.index]
+        print(f"  {plat:8s}: {len(table)} tiles in {dt * 1e3:6.2f} ms"
+              f" ({len(table) / dt:9.0f} cfg/s) -> best"
+              f" {t.bm}x{t.bn}x{t.bk} @ {win.total * 1e3:.3f} ms"
+              f" ({win.breakdown.dominant}-bound)")
+
+    print()
+    print("Cartesian what-if grid (WorkloadTable.cartesian): sweep the same")
+    print("GEMM over precision x concurrency in one columnar cross-product,")
+    print("then read the top-3 and the compute/memory pareto front:")
+    grid = WorkloadTable.cartesian(
+        base, precision=["fp16", "bf16", "fp8"],
+        concurrent_kernels=[1, 2, 4])
+    top = sweep.topk_table(grid, hardware.B200, 3)
+    for w in top:
+        print(f"  top: row {w.index} ({w.name}) @ {w.total * 1e3:.3f} ms")
+    front = sweep.pareto_table(grid, hardware.B200,
+                               objectives=("compute", "memory"))
+    print(f"  pareto(compute, memory): {[w.index for w in front]}")
 
     print()
     print("Application segments (hotspot-like stencil app, 1000 iters):")

@@ -13,6 +13,8 @@ Public API:
     collectives.MeshSpec / collective_time     mesh collective costs
     autotune.select_plan                       model-driven plan selection
     sweep.SweepEngine                          batched + memoized prediction
+    workload.WorkloadTable                     columnar sweep batches
+    sweep.argmin_table / topk_table            fused sweep reductions
     microbench.calibrate_host                  real host microbenchmarks
 """
 from . import (autotune, blackwell, cache, calibrate, cdna3, collectives,

@@ -12,12 +12,14 @@ from __future__ import annotations
 
 import math
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple, Union
+
+import numpy as np
 
 from . import collectives as coll
 from . import tpu
 from .hardware import HardwareParams, TPU_V5E
-from .workload import TileConfig, Workload
+from .workload import TileConfig, Workload, WorkloadTable
 
 
 @dataclass(frozen=True)
@@ -52,14 +54,10 @@ class StepCost:
     detail: Dict[str, float] = field(default_factory=dict)
 
 
-def price_train_step(plan: PlanCandidate, *,
-                     model_flops: float,          # 6*N*D useful flops (global)
-                     param_bytes: float,          # total param bytes (global)
-                     activation_bytes: float,     # per-step act traffic (global)
-                     hw: HardwareParams = TPU_V5E) -> StepCost:
-    """Price one training step under a plan.
-
-    Collective schedule priced:
+def _collective_ops(plan: PlanCandidate, *, param_bytes: float,
+                    activation_bytes: float) -> List[Tuple[str, float, str]]:
+    """The plan's collective schedule (shared by ``price_train_step`` and
+    the columnar ``enumerate_plans``):
       * FSDP all-gather of params (per microbatch, fwd + bwd if remat=full)
       * reduce-scatter of grads over data axes (+ pod axis)
       * TP activation all-reduces: ~2 per layer-equivalent, approximated as
@@ -68,21 +66,6 @@ def price_train_step(plan: PlanCandidate, *,
     mesh = plan.mesh
     chips = mesh.num_devices
     data_axes = [a for a, _ in mesh.axes if a in ("data", "pod")]
-    dp = 1
-    for a in data_axes:
-        dp *= mesh.size(a)
-
-    remat_f = REMAT_FLOP_FACTOR[plan.remat]
-    flops_per_chip = model_flops * remat_f / chips
-    t_compute = flops_per_chip / hw.sustained_flops("bf16", matrix=True)
-
-    # HBM traffic per chip: params touched fwd+bwd+opt (3x) + activations
-    act_factor = {"none": 1.0, "block": 0.6, "full": 0.35}[plan.remat]
-    hbm_bytes = (3.0 * param_bytes / chips
-                 + activation_bytes * act_factor / chips)
-    t_memory = hbm_bytes / hw.hbm_sustained_bw
-
-    # collective schedule
     ops: List[Tuple[str, float, str]] = []
     shard_param_bytes = param_bytes / chips
     for axis in data_axes:
@@ -100,14 +83,43 @@ def price_train_step(plan: PlanCandidate, *,
         ops.append(("all-reduce",
                     activation_bytes / chips / max(plan.microbatches, 1),
                     "model"))
+    return ops
 
-    alpha = hw.pipeline_overlap_alpha
-    sched = coll.schedule_time(ops, mesh, hw, overlap_alpha=alpha)
-    t_coll, t_exposed = sched["total"], sched["exposed"]
 
+def _step_total(t_compute: float, t_memory: float, t_exposed: float,
+                alpha: float, hw: HardwareParams) -> float:
+    """Step-time roofline: overlapped max + exposed remainder + launch."""
     t_step = max(t_compute, (1 - alpha) * t_memory, t_exposed) \
         + min(t_compute, (1 - alpha) * t_memory)
-    total = t_step + hw.launch_latency_s
+    return t_step + hw.launch_latency_s
+
+
+def price_train_step(plan: PlanCandidate, *,
+                     model_flops: float,          # 6*N*D useful flops (global)
+                     param_bytes: float,          # total param bytes (global)
+                     activation_bytes: float,     # per-step act traffic (global)
+                     hw: HardwareParams = TPU_V5E) -> StepCost:
+    """Price one training step under a plan (collective schedule per
+    ``_collective_ops``)."""
+    chips = plan.mesh.num_devices
+
+    remat_f = REMAT_FLOP_FACTOR[plan.remat]
+    flops_per_chip = model_flops * remat_f / chips
+    t_compute = flops_per_chip / hw.sustained_flops("bf16", matrix=True)
+
+    # HBM traffic per chip: params touched fwd+bwd+opt (3x) + activations
+    act_factor = _REMAT_ACT_FACTOR[plan.remat]
+    hbm_bytes = (3.0 * param_bytes / chips
+                 + activation_bytes * act_factor / chips)
+    t_memory = hbm_bytes / hw.hbm_sustained_bw
+
+    ops = _collective_ops(plan, param_bytes=param_bytes,
+                          activation_bytes=activation_bytes)
+    alpha = hw.pipeline_overlap_alpha
+    sched = coll.schedule_time(ops, plan.mesh, hw, overlap_alpha=alpha)
+    t_coll, t_exposed = sched["total"], sched["exposed"]
+
+    total = _step_total(t_compute, t_memory, t_exposed, alpha, hw)
     return StepCost(plan=plan, compute_s=t_compute, memory_s=t_memory,
                     collective_s=t_coll, exposed_collective_s=t_exposed,
                     total_s=total, hbm_bytes_per_chip=hbm_bytes,
@@ -127,10 +139,14 @@ def hbm_fits(plan: PlanCandidate, *, param_bytes: float,
     return per_chip <= hw.hbm_capacity * 0.9
 
 
+_REMAT_ACT_FACTOR = {"none": 1.0, "block": 0.6, "full": 0.35}
+_REMAT_PEAK_FACTOR = {"none": 1.0, "block": 0.4, "full": 0.15}
+
+
 def enumerate_plans(candidates: Sequence[PlanCandidate], *,
                     model_flops: float, param_bytes: float,
                     activation_bytes: float,
-                    opt_state_bytes: float = 0.0,
+                    opt_state_bytes: Union[float, Sequence[float]] = 0.0,
                     activation_peak_bytes: float = 0.0,
                     hw: HardwareParams = TPU_V5E) -> List[StepCost]:
     """Price every candidate plan (collective schedule + HBM-fit gate).
@@ -138,18 +154,58 @@ def enumerate_plans(candidates: Sequence[PlanCandidate], *,
     This is the enumeration half of the paper's argmin: callers that only
     need the winner use ``select_plan``; hillclimb-style consumers read the
     whole priced list to order their experiments.
+
+    The arithmetic runs columnar over the candidate set (one NumPy block
+    for the compute/memory/HBM-fit terms, matching ``price_train_step``
+    expression-for-expression); only the per-plan collective schedule walks
+    Python.  ``opt_state_bytes`` may be a per-plan sequence (e.g. int8 vs
+    fp32 optimizer moments) so heterogeneous what-if screens price in a
+    single call.
     """
+    n = len(candidates)
+    if not n:
+        return []
+    opt_b = np.full(n, opt_state_bytes, dtype=np.float64) \
+        if np.isscalar(opt_state_bytes) \
+        else np.asarray(opt_state_bytes, dtype=np.float64)
+    if opt_b.shape != (n,):
+        raise ValueError(f"opt_state_bytes: expected scalar or {n} values")
+
+    chips = np.array([p.mesh.num_devices for p in candidates],
+                     dtype=np.float64)
+    ubatch = np.array([p.microbatches for p in candidates], dtype=np.float64)
+    remat_f = np.array([REMAT_FLOP_FACTOR[p.remat] for p in candidates])
+    act_f = np.array([_REMAT_ACT_FACTOR[p.remat] for p in candidates])
+    peak_f = np.array([_REMAT_PEAK_FACTOR[p.remat] for p in candidates])
+
+    flops_per_chip = model_flops * remat_f / chips
+    t_compute = flops_per_chip / hw.sustained_flops("bf16", matrix=True)
+    hbm_bytes = (3.0 * param_bytes / chips
+                 + activation_bytes * act_f / chips)
+    t_memory = hbm_bytes / hw.hbm_sustained_bw
+    alpha = hw.pipeline_overlap_alpha
+
+    # HBM-fit gate (mirrors hbm_fits per element)
+    per_chip = ((param_bytes + opt_b) / chips
+                + activation_peak_bytes * peak_f
+                / chips / np.maximum(ubatch, 1))
+    feasible = per_chip <= hw.hbm_capacity * 0.9
+
     costs = []
-    for plan in candidates:
-        c = price_train_step(plan, model_flops=model_flops,
-                             param_bytes=param_bytes,
-                             activation_bytes=activation_bytes, hw=hw)
-        feasible = hbm_fits(plan, param_bytes=param_bytes,
-                            opt_state_bytes=opt_state_bytes,
-                            activation_peak_bytes=activation_peak_bytes,
-                            hw=hw)
-        c.detail["feasible"] = 1.0 if feasible else 0.0
-        costs.append(c)
+    for i, plan in enumerate(candidates):
+        ops = _collective_ops(plan, param_bytes=param_bytes,
+                              activation_bytes=activation_bytes)
+        sched = coll.schedule_time(ops, plan.mesh, hw, overlap_alpha=alpha)
+        t_coll, t_exposed = sched["total"], sched["exposed"]
+        t_c, t_m = float(t_compute[i]), float(t_memory[i])
+        detail = {k: v for k, v in sched.items()
+                  if k not in ("total", "exposed")}
+        detail["feasible"] = 1.0 if feasible[i] else 0.0
+        costs.append(StepCost(
+            plan=plan, compute_s=t_c, memory_s=t_m, collective_s=t_coll,
+            exposed_collective_s=t_exposed,
+            total_s=_step_total(t_c, t_m, t_exposed, alpha, hw),
+            hbm_bytes_per_chip=float(hbm_bytes[i]), detail=detail))
     return costs
 
 
@@ -173,21 +229,21 @@ def select_plan(candidates: Sequence[PlanCandidate], *,
 
 
 # ---------------------------------------------------------------------------
-# Batched kernel-level sweeps (paper §IV-B adaptive tile selection, served
-# by the SweepEngine so 10^3-10^4-point searches stay off the scalar path).
+# Columnar kernel-level sweeps (paper §IV-B adaptive tile selection, served
+# by the table path so 10^3-10^4-point searches never instantiate
+# per-config Workload objects).
 # ---------------------------------------------------------------------------
 
 def enumerate_tiles(base: Workload, hw: HardwareParams,
                     candidate_tiles: Sequence["TileConfig"], *,
                     model: Optional[str] = None,
                     engine=None) -> Dict[str, float]:
-    """Price ``base`` re-tiled with every candidate through the batched
-    engine; returns {"bMxbNxbK": seconds}."""
+    """Price ``base`` re-tiled with every candidate through the columnar
+    table path; returns {"bMxbNxbK": seconds}."""
     from . import sweep
-    from .cdna3 import _retile
-    engine = engine or sweep.default_engine()
-    ws = [_retile(base, t) for t in candidate_tiles]
-    totals = engine.predict_batch(ws, hw, model=model).totals
+    table = WorkloadTable.tile_lattice(base, candidate_tiles)
+    totals = sweep.predict_table(table, hw, model=model,
+                                 engine=engine).totals
     return {f"{t.bm}x{t.bn}x{t.bk}": float(s)
             for t, s in zip(candidate_tiles, totals)}
 
@@ -196,12 +252,13 @@ def select_tile(base: Workload, hw: HardwareParams,
                 candidate_tiles: Sequence["TileConfig"], *,
                 model: Optional[str] = None,
                 engine=None) -> Tuple["TileConfig", Dict[str, float]]:
-    """Batched argmin over candidate tiles (the paper's adaptive tile
-    selection, engine-served)."""
-    costs = enumerate_tiles(base, hw, candidate_tiles, model=model,
-                            engine=engine)
-    best_i = min(range(len(candidate_tiles)),
-                 key=lambda i: costs[f"{candidate_tiles[i].bm}x"
-                                     f"{candidate_tiles[i].bn}x"
-                                     f"{candidate_tiles[i].bk}"])
+    """Fused argmin over candidate tiles (the paper's adaptive tile
+    selection): one columnar sweep, one reduction on the totals column."""
+    from . import sweep
+    table = WorkloadTable.tile_lattice(base, candidate_tiles)
+    res = sweep.predict_table(table, hw, model=model, engine=engine)
+    totals = res.totals
+    best_i = int(np.argmin(totals))
+    costs = {f"{t.bm}x{t.bn}x{t.bk}": float(s)
+             for t, s in zip(candidate_tiles, totals)}
     return candidate_tiles[best_i], costs

@@ -32,11 +32,10 @@ deviations/disambiguations):
 from __future__ import annotations
 
 import math
-from typing import List, Optional, Sequence
+from typing import List, Sequence
 
 import numpy as np
 
-from itertools import repeat
 
 from .cache import working_set_blend, working_set_blend_batch
 from .hardware import BYTES_PER_ELEM, HardwareParams
@@ -223,45 +222,17 @@ def predict(w: Workload, hw: HardwareParams, *,
 
 
 # ---------------------------------------------------------------------------
-# Batched (NumPy-vectorized) stage model — the SweepEngine hot path.
-# Bit-identical to the scalar functions above: every elementwise expression
-# mirrors the scalar operation order, and transcendentals ride the libm-exact
-# helpers in core.cache.
+# Columnar (NumPy-vectorized) stage model — the WorkloadTable / SweepEngine
+# hot path.  Bit-identical to the scalar functions above: every elementwise
+# expression mirrors the scalar operation order, and transcendentals ride the
+# libm-exact helpers in core.cache.
 # ---------------------------------------------------------------------------
 
-def _f(vals) -> np.ndarray:
-    return np.array(vals, dtype=np.float64)
-
-
-def _rate_eff_inb(ws: Sequence[Workload], hw: HardwareParams):
-    """(rate, efficiency, bytes/elem) arrays for matrix workloads via one
-    registry lookup per precision (one listcomp over the batch)."""
-    pmap = {}
-    for w in ws:
-        p = w.precision
-        if p not in pmap:
-            pmap[p] = (hw.sustained_flops(p, matrix=True),
-                       hw.precision_efficiency.get(p, 1.0),
-                       BYTES_PER_ELEM[p])
-    trip = np.array([pmap[w.precision] for w in ws], dtype=np.float64)
-    return trip[:, 0], trip[:, 1], trip[:, 2]
-
-
-def _rate_arrays(ws: Sequence[Workload], hw: HardwareParams, *,
-                 sustained: bool):
-    """Compute-rate array honoring each workload's matrix flag."""
-    keys = {(w.precision, w.matrix) for w in ws}
-    fn = hw.sustained_flops if sustained else hw.peak_flops
-    rmap = {k: fn(k[0], matrix=k[1]) for k in keys}
-    return _f([rmap[(w.precision, w.matrix)] for w in ws])
-
-
-def _tiled_gemm_rows(ws: Sequence[Workload],
-                     hw: HardwareParams) -> List[Row]:
+def _tiled_gemm_cols(table, hw: HardwareParams):
     from .workload import NV_BM, NV_BN, NV_BK, NV_K_TILES, NV_NUM_CTAS, \
         NV_WS, NV_BYTES_PER_CTA, NV_TMA_P, NV_COMP_BYTES, NV_COMP_RATIO, \
-        NV_CONCURRENT, NV_DEVICES, NV_GMN, nvec_matrix
-    raw = nvec_matrix(ws)
+        NV_CONCURRENT, NV_DEVICES, NV_GMN, TableCols
+    raw = table.cols
     bm, bn, bk = raw[:, NV_BM], raw[:, NV_BN], raw[:, NV_BK]
     k_tiles = np.maximum(raw[:, NV_K_TILES].astype(np.int64), 1)
     num_ctas = raw[:, NV_NUM_CTAS].astype(np.int64)
@@ -269,7 +240,11 @@ def _tiled_gemm_rows(ws: Sequence[Workload],
 
     # compute_time_per_step (Eq. 3/6), two_sm=False, sustained=True
     flops = 2.0 * bm * bn * bk
-    rate, eff, in_b = _rate_eff_inb(ws, hw)
+    rate = table.per_precision(
+        lambda p: hw.sustained_flops(p, matrix=True))
+    eff = table.per_precision(
+        lambda p: hw.precision_efficiency.get(p, 1.0))
+    in_b = table.per_precision(lambda p: BYTES_PER_ELEM[p])
     r_sm = rate / hw.num_sms
     t_mma = flops / (r_sm * 1.0 * eff)
     d_accum = bm * bn * ACCUM_BYTES
@@ -328,33 +303,27 @@ def _tiled_gemm_rows(ws: Sequence[Workload],
     total = total + (raw[:, NV_CONCURRENT] - 1) * hw.tau_interference_s
     total = total + (raw[:, NV_DEVICES] - 1) * hw.tau_interference_gpu_s
 
-    n = len(ws)
-    fields = zip(total.tolist(),
-                 (waves * k_tiles * t_comp).tolist(),
-                 (waves * k_tiles * t_tma).tolist(),
-                 (waves * k_tiles * t_io_eff).tolist(),
-                 (waves * k_tiles * t_sync).tolist(),
-                 repeat(hw.launch_latency_s, n),
-                 t_store.tolist(),
-                 repeat(0.0, n), repeat(0.0, n))
-    dkeys = ("t_step", "t_compute_step", "t_tma_step", "t_sync_step",
-             "waves", "k_tiles", "pipeline_fill")
-    dvals = zip(t_step.tolist(), t_comp.tolist(), t_tma.tolist(),
-                repeat(t_sync, n), waves.tolist(),
-                k_tiles.astype(np.float64).tolist(), t_fill.tolist())
-    return list(zip(fields, repeat(dkeys, n), dvals))
+    return TableCols(
+        len(table),
+        (total, waves * k_tiles * t_comp, waves * k_tiles * t_tma,
+         waves * k_tiles * t_io_eff, waves * k_tiles * t_sync,
+         hw.launch_latency_s, t_store, 0.0, 0.0),
+        ("t_step", "t_compute_step", "t_tma_step", "t_sync_step",
+         "waves", "k_tiles", "pipeline_fill"),
+        (t_step, t_comp, t_tma, t_sync, waves,
+         k_tiles.astype(np.float64), t_fill))
 
 
-def _streaming_rows(ws: Sequence[Workload],
-                    hw: HardwareParams) -> List[Row]:
+def _streaming_cols(table, hw: HardwareParams):
     from .workload import NV_BYTES, NV_WS_OR_BYTES, NV_FLOPS, \
-        NV_IRREGULAR, NV_CONCURRENT, NV_DEVICES, nvec_matrix
-    raw = nvec_matrix(ws)
+        NV_IRREGULAR, NV_CONCURRENT, NV_DEVICES, TableCols
+    raw = table.cols
     nbytes, wsb, flops = raw[:, NV_BYTES], raw[:, NV_WS_OR_BYTES], \
         raw[:, NV_FLOPS]
     bw = working_set_blend_batch(wsb, hw)
     t_mem = nbytes / bw
-    rate = _rate_arrays(ws, hw, sustained=True)
+    rate = table.per_precision_matrix(
+        lambda p, m: hw.sustained_flops(p, matrix=m))
     with np.errstate(divide="ignore", invalid="ignore"):
         t_comp = np.where(flops > 0, flops / rate, 0.0)
     t_mem = np.where(raw[:, NV_IRREGULAR] != 0, t_mem * 4.0, t_mem)
@@ -363,34 +332,38 @@ def _streaming_rows(ws: Sequence[Workload],
     total = total + (raw[:, NV_CONCURRENT] - 1) * hw.tau_interference_s
     total = total + (raw[:, NV_DEVICES] - 1) * hw.tau_interference_gpu_s
 
-    n = len(ws)
-    t_mem_l = t_mem.tolist()
-    fields = zip(total.tolist(), t_comp.tolist(), t_mem_l, t_mem_l,
-                 repeat(t_sync, n), repeat(hw.launch_latency_s, n),
-                 repeat(0.0, n), repeat(0.0, n), repeat(0.0, n))
-    dvals = zip(bw.tolist())
-    return list(zip(fields, repeat(("bw_eff",), n), dvals))
+    return TableCols(
+        len(table),
+        (total, t_comp, t_mem, t_mem, t_sync, hw.launch_latency_s,
+         0.0, 0.0, 0.0),
+        ("bw_eff",), (bw,))
+
+
+def predict_table_cols(table, hw: HardwareParams):
+    """Columnar ``predict`` over a WorkloadTable (defaults two_sm=False,
+    n_bar=1).  Bit-identical per row to scalar ``predict``."""
+    from .workload import NV_HAS_GEMM, NV_HAS_TILE, NV_K_TILES, SegmentedCols
+    if hw.model_family not in ("blackwell", "tpu"):
+        raise ValueError(f"blackwell model mis-routed to {hw.name}")
+    raw = table.cols
+    tiled = (raw[:, NV_HAS_GEMM] != 0) | \
+        ((raw[:, NV_HAS_TILE] != 0) & (raw[:, NV_K_TILES] > 0))
+    if tiled.all():
+        return _tiled_gemm_cols(table, hw)
+    if not tiled.any():
+        return _streaming_cols(table, hw)
+    idx_t = np.flatnonzero(tiled)
+    idx_s = np.flatnonzero(~tiled)
+    return SegmentedCols(len(table), [
+        (idx_t, _tiled_gemm_cols(table.take(idx_t), hw)),
+        (idx_s, _streaming_cols(table.take(idx_s), hw))])
 
 
 def predict_rows(ws: Sequence[Workload], hw: HardwareParams) -> List[Row]:
     """Vectorized ``predict`` over a workload batch, in row form (defaults
     two_sm=False, n_bar=1).  Bit-identical to per-workload ``predict``."""
-    if hw.model_family not in ("blackwell", "tpu"):
-        raise ValueError(f"blackwell model mis-routed to {hw.name}")
-    is_tiled = [w.gemm is not None or (w.tile is not None and w.k_tiles > 0)
-                for w in ws]
-    if all(is_tiled):
-        return _tiled_gemm_rows(ws, hw)
-    if not any(is_tiled):
-        return _streaming_rows(ws, hw)
-    tiled = [i for i, t in enumerate(is_tiled) if t]
-    stream = [i for i, t in enumerate(is_tiled) if not t]
-    out: List[Optional[Row]] = [None] * len(ws)
-    for i, row in zip(tiled, _tiled_gemm_rows([ws[i] for i in tiled], hw)):
-        out[i] = row
-    for i, row in zip(stream, _streaming_rows([ws[i] for i in stream], hw)):
-        out[i] = row
-    return out  # type: ignore[return-value]
+    from .workload import WorkloadTable
+    return predict_table_cols(WorkloadTable.from_workloads(ws), hw).rows()
 
 
 def predict_batch(ws: Sequence[Workload],

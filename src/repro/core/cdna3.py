@@ -24,7 +24,6 @@ from typing import Dict, Iterable, List, Optional, Sequence, Tuple
 
 import numpy as np
 
-from itertools import repeat
 
 from .cache import effective_bandwidth_llc, effective_bandwidth_llc_batch, \
     hierarchy_latency_walk, llc_hit_rate, llc_hit_rate_batch
@@ -158,42 +157,30 @@ def predict(w: Workload, hw: HardwareParams, *,
 
 
 # ---------------------------------------------------------------------------
-# Batched (NumPy-vectorized) wavefront model — the SweepEngine hot path.
-# Workloads carrying explicit hit rates or an Eq. 10 latency walk (per-
-# workload dicts) fall back to the scalar `predict`; everything else is
-# vectorized bit-identically to the scalar expressions.
+# Columnar (NumPy-vectorized) wavefront model — the WorkloadTable /
+# SweepEngine hot path.  Workloads carrying explicit hit rates or an Eq. 10
+# latency walk (per-workload dicts) fall back to the scalar `predict`;
+# everything else is vectorized bit-identically to the scalar expressions.
 # ---------------------------------------------------------------------------
 
-def _f(vals) -> np.ndarray:
-    return np.array(vals, dtype=np.float64)
-
-
-def _compute_rates(ws: Sequence[Workload], hw: HardwareParams) -> np.ndarray:
-    """Per-workload compute rate mirroring mfma_compute_time /
+def _rate_fn(hw: HardwareParams):
+    """Compute rate per (precision, matrix) mirroring mfma_compute_time /
     vector_compute_time rate selection."""
-    rmap: Dict[Tuple[str, bool], float] = {}
-    for w in ws:
-        key = (w.precision, w.matrix)
-        if key in rmap:
-            continue
-        eff = hw.precision_efficiency.get(w.precision, 1.0)
-        if w.matrix:
-            if w.precision in hw.tensor_sustained_flops:
-                rmap[key] = hw.tensor_sustained_flops[w.precision] * eff
-            else:
-                rmap[key] = hw.peak_flops(w.precision, matrix=True) \
-                    * hw.mfma_utilization * eff
-        else:
-            rmap[key] = hw.sustained_flops(w.precision, matrix=False)
-    return _f([rmap[(w.precision, w.matrix)] for w in ws])
+    def fn(p: str, matrix: bool) -> float:
+        if matrix:
+            eff = hw.precision_efficiency.get(p, 1.0)
+            if p in hw.tensor_sustained_flops:
+                return hw.tensor_sustained_flops[p] * eff
+            return hw.peak_flops(p, matrix=True) * hw.mfma_utilization * eff
+        return hw.sustained_flops(p, matrix=False)
+    return fn
 
 
-def _vectorized_rows(ws: Sequence[Workload],
-                     hw: HardwareParams) -> List[Row]:
+def _vectorized_cols(table, hw: HardwareParams):
     from .workload import NV_VGPR, NV_K_TILES, NV_BYTES, NV_WS_OR_BYTES, \
         NV_FLOPS, NV_IRREGULAR, NV_GMN, NV_HAS_GEMM, NV_MATRIX, \
-        NV_CONCURRENT, NV_DEVICES, nvec_matrix
-    raw = nvec_matrix(ws)
+        NV_CONCURRENT, NV_DEVICES, TableCols
+    raw = table.cols
     vgpr_wf = np.maximum(1, raw[:, NV_VGPR].astype(np.int64)) * hw.warp_size
     n_wf = np.maximum(
         1, np.minimum(hw.max_resident_warps, hw.vgpr_per_cu // vgpr_wf))
@@ -205,7 +192,7 @@ def _vectorized_rows(ws: Sequence[Workload],
     t_mem_total = nbytes / bw_eff
     t_mem_total = np.where(raw[:, NV_IRREGULAR] != 0, t_mem_total * 4.0,
                            t_mem_total)
-    rate = _compute_rates(ws, hw)
+    rate = table.per_precision_matrix(_rate_fn(hw))
     with np.errstate(divide="ignore", invalid="ignore"):
         t_comp_total = np.where((raw[:, NV_MATRIX] != 0) | (flops > 0),
                                 flops / rate, 0.0)
@@ -219,13 +206,12 @@ def _vectorized_rows(ws: Sequence[Workload],
     t_step = (t_mem + t_comp) / (1.0 + eta)
 
     if raw[:, NV_HAS_GEMM].any():
-        in_b = np.array([BYTES_PER_ELEM[w.precision] for w in ws],
-                        dtype=np.float64)
+        in_b = table.per_precision(lambda p: BYTES_PER_ELEM[p])
         out_b = raw[:, NV_GMN] * in_b
         t_writeback = np.where(raw[:, NV_HAS_GEMM] != 0,
                                out_b / bw_eff, 0.0)
     else:
-        t_writeback = np.zeros(len(ws))
+        t_writeback = np.zeros(len(table))
 
     total = hw.launch_latency_s + k_tiles * t_step + t_writeback \
         + hw.coherence_latency_s + hw.cross_xcd_latency_s          # Eq. 13
@@ -234,15 +220,34 @@ def _vectorized_rows(ws: Sequence[Workload],
 
     h_llc = llc_hit_rate_batch(wsb, hw)
     sync = hw.coherence_latency_s + hw.cross_xcd_latency_s
-    n = len(ws)
-    t_mem_l = t_mem_total.tolist()
-    fields = zip(total.tolist(), t_comp_total.tolist(), t_mem_l, t_mem_l,
-                 repeat(sync, n), repeat(hw.launch_latency_s, n),
-                 t_writeback.tolist(), repeat(0.0, n), repeat(0.0, n))
-    dkeys = ("n_wf_active", "eta_overlap", "t_step", "h_llc")
-    dvals = zip(n_wf.astype(np.float64).tolist(), eta.tolist(),
-                t_step.tolist(), h_llc.tolist())
-    return list(zip(fields, repeat(dkeys, n), dvals))
+    return TableCols(
+        len(table),
+        (total, t_comp_total, t_mem_total, t_mem_total, sync,
+         hw.launch_latency_s, t_writeback, 0.0, 0.0),
+        ("n_wf_active", "eta_overlap", "t_step", "h_llc"),
+        (n_wf.astype(np.float64), eta, t_step, h_llc))
+
+
+def predict_table_cols(table, hw: HardwareParams):
+    """Columnar ``predict`` over a WorkloadTable (base model, MWP=CWP=0).
+    Bit-identical per row to scalar ``predict``; rows with explicit hit
+    rates / Eq. 10 latency walks fall back to the scalar path per row."""
+    from .workload import NV_NUM_LOADS, RowsCols, SegmentedCols
+    if hw.model_family != "cdna":
+        raise ValueError(f"cdna3 model mis-routed to {hw.name}")
+    exotic = table.cols[:, NV_NUM_LOADS] > 0
+    if table.hit_rates is not None:
+        exotic = exotic | np.array([bool(h) for h in table.hit_rates])
+    if not exotic.any():
+        return _vectorized_cols(table, hw)
+    idx_e = np.flatnonzero(exotic)
+    idx_f = np.flatnonzero(~exotic)
+    segments = [(idx_e, RowsCols(
+        [row_from_tb(predict(table.workload(int(i)), hw))
+         for i in idx_e]))]
+    if len(idx_f):
+        segments.append((idx_f, _vectorized_cols(table.take(idx_f), hw)))
+    return SegmentedCols(len(table), segments)
 
 
 def predict_rows(ws: Sequence[Workload], hw: HardwareParams) -> List[Row]:
@@ -250,20 +255,8 @@ def predict_rows(ws: Sequence[Workload], hw: HardwareParams) -> List[Row]:
     model, MWP=CWP=0).  Bit-identical to per-workload ``predict``;
     workloads with explicit hit rates / Eq. 10 latency walks fall back to
     the scalar path."""
-    if hw.model_family != "cdna":
-        raise ValueError(f"cdna3 model mis-routed to {hw.name}")
-    exotic = [bool(w.hit_rates) or w.num_loads > 0 for w in ws]
-    if not any(exotic):
-        return _vectorized_rows(ws, hw)
-    fast = [i for i, e in enumerate(exotic) if not e]
-    out: List[Optional[Row]] = [None] * len(ws)
-    for i, e in enumerate(exotic):
-        if e:
-            out[i] = row_from_tb(predict(ws[i], hw))
-    if fast:
-        for i, row in zip(fast, _vectorized_rows([ws[i] for i in fast], hw)):
-            out[i] = row
-    return out  # type: ignore[return-value]
+    from .workload import WorkloadTable
+    return predict_table_cols(WorkloadTable.from_workloads(ws), hw).rows()
 
 
 def predict_batch(ws: Sequence[Workload],

@@ -15,7 +15,6 @@ for upper-bound comparisons only (paper §V-A).
 """
 from __future__ import annotations
 
-from itertools import repeat
 from typing import List, Sequence
 
 import numpy as np
@@ -47,27 +46,22 @@ def predict(w: Workload, hw: HardwareParams, *,
                          detail={"bw_eff": bw, "class_scale": scale})
 
 
-def predict_rows(ws: Sequence[Workload],
-                 hw: HardwareParams) -> List[Row]:
-    """Vectorized ``predict`` over a workload batch, in row form
-    (class_scale taken from the parameter file, as in the scalar default).
-    Bit-identical to per-workload ``predict(w, hw)`` calls."""
+def predict_table_cols(table, hw: HardwareParams):
+    """Columnar ``predict`` over a WorkloadTable (class_scale taken from the
+    parameter file, as in the scalar default).  Bit-identical per row to
+    scalar ``predict(w, hw)``."""
     from .workload import NV_BYTES, NV_WS_OR_BYTES, NV_FLOPS, \
-        NV_IRREGULAR, NV_CONCURRENT, NV_DEVICES, nvec_matrix
-    raw = nvec_matrix(ws)
+        NV_IRREGULAR, NV_CONCURRENT, NV_DEVICES, TableCols
+    raw = table.cols
     nbytes, wsb, flops = raw[:, NV_BYTES], raw[:, NV_WS_OR_BYTES], \
         raw[:, NV_FLOPS]
-    scale = np.array([hw.class_scales.get(w.wclass, 1.0) for w in ws],
-                     dtype=np.float64)
+    scale = table.per_wclass(lambda c: hw.class_scales.get(c, 1.0))
     bw = working_set_blend_batch(wsb, hw)
     t_mem = nbytes / bw
 
-    keys = {(w.precision, w.matrix) for w in ws}
-    emap = {p: hw.precision_efficiency.get(p, 1.0) for p, _ in keys}
-    rmap = {k: hw.sustained_flops(k[0], matrix=k[1]) * emap[k[0]]
-            for k in keys}
-    rate = np.array([rmap[(w.precision, w.matrix)] for w in ws],
-                    dtype=np.float64)
+    rate = table.per_precision_matrix(
+        lambda p, m: hw.sustained_flops(p, matrix=m)
+        * hw.precision_efficiency.get(p, 1.0))
     with np.errstate(divide="ignore", invalid="ignore"):
         t_comp = np.where(flops > 0, flops / rate, 0.0)
     t_mem = np.where(raw[:, NV_IRREGULAR] != 0, t_mem * 4.0, t_mem)
@@ -76,13 +70,19 @@ def predict_rows(ws: Sequence[Workload],
     total = total + (raw[:, NV_CONCURRENT] - 1) * hw.tau_interference_s
     total = total + (raw[:, NV_DEVICES] - 1) * hw.tau_interference_gpu_s
 
-    n = len(ws)
-    t_mem_l = t_mem.tolist()
-    fields = zip(total.tolist(), t_comp.tolist(), t_mem_l, t_mem_l,
-                 repeat(0.0, n), repeat(hw.launch_latency_s, n),
-                 repeat(0.0, n), repeat(0.0, n), repeat(0.0, n))
-    dvals = zip(bw.tolist(), scale.tolist())
-    return list(zip(fields, repeat(("bw_eff", "class_scale"), n), dvals))
+    return TableCols(
+        len(table),
+        (total, t_comp, t_mem, t_mem, 0.0, hw.launch_latency_s,
+         0.0, 0.0, 0.0),
+        ("bw_eff", "class_scale"), (bw, scale))
+
+
+def predict_rows(ws: Sequence[Workload],
+                 hw: HardwareParams) -> List[Row]:
+    """Vectorized ``predict`` over a workload batch, in row form.
+    Bit-identical to per-workload ``predict(w, hw)`` calls."""
+    from .workload import WorkloadTable
+    return predict_table_cols(WorkloadTable.from_workloads(ws), hw).rows()
 
 
 def predict_batch(ws: Sequence[Workload],

@@ -9,7 +9,6 @@ platforms).  We implement it verbatim so benchmarks can reproduce that gap.
 """
 from __future__ import annotations
 
-from itertools import repeat
 from typing import List, Sequence
 
 import numpy as np
@@ -28,16 +27,12 @@ def predict(w: Workload, hw: HardwareParams) -> TimeBreakdown:
                          detail={"path": 0.0})
 
 
-def predict_rows(ws: Sequence[Workload],
-                 hw: HardwareParams) -> List[Row]:
-    """Vectorized ``predict`` over a workload batch, in row form
-    (bit-identical)."""
-    from .workload import NV_BYTES, NV_FLOPS, nvec_matrix
-    keys = {(w.precision, w.matrix) for w in ws}
-    pmap = {k: hw.peak_flops(k[0], matrix=k[1]) for k in keys}
-    peak = np.array([pmap[(w.precision, w.matrix)] for w in ws],
-                    dtype=np.float64)
-    raw = nvec_matrix(ws)
+def predict_table_cols(table, hw: HardwareParams):
+    """Columnar ``predict`` over a WorkloadTable (bit-identical per row)."""
+    from .workload import NV_BYTES, NV_FLOPS, TableCols
+    raw = table.cols
+    peak = table.per_precision_matrix(
+        lambda p, m: hw.peak_flops(p, matrix=m))
     flops, nbytes = raw[:, NV_FLOPS], raw[:, NV_BYTES]
     with np.errstate(divide="ignore", invalid="ignore"):
         t_compute = np.where(peak > 0, flops / peak, 0.0)
@@ -46,12 +41,18 @@ def predict_rows(ws: Sequence[Workload],
     else:
         t_memory = np.zeros_like(nbytes)
     total = np.maximum(t_compute, t_memory)
-    n = len(ws)
-    fields = zip(total.tolist(), t_compute.tolist(), t_memory.tolist(),
-                 repeat(0.0, n), repeat(0.0, n), repeat(0.0, n),
-                 repeat(0.0, n), repeat(0.0, n), repeat(0.0, n))
-    dvals = repeat((0.0,), n)
-    return list(zip(fields, repeat(("path",), n), dvals))
+    return TableCols(
+        len(table),
+        (total, t_compute, t_memory, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0),
+        ("path",), (0.0,))
+
+
+def predict_rows(ws: Sequence[Workload],
+                 hw: HardwareParams) -> List[Row]:
+    """Vectorized ``predict`` over a workload batch, in row form
+    (bit-identical)."""
+    from .workload import WorkloadTable
+    return predict_table_cols(WorkloadTable.from_workloads(ws), hw).rows()
 
 
 def predict_batch(ws: Sequence[Workload],

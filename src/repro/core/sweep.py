@@ -1,4 +1,4 @@
-"""Batched sweep-prediction engine with keyed memoization.
+"""Batched + columnar sweep-prediction engine with two-tier memoization.
 
 The paper's headline workflow prices thousands of candidate
 (workload x hardware x precision x tile) configurations through the
@@ -7,36 +7,70 @@ analytical models and returns the argmin (§IV-B adaptive tile selection,
 that the slowest path in the repo; microbenchmark sweeps span 10^3-10^4
 points per kernel family — exactly the regime where batching pays off.
 
-``SweepEngine.predict_batch(workloads, hw)`` routes a whole batch to the
-NumPy-vectorized model backends (``blackwell.predict_rows``,
-``cdna3.predict_rows``, ``tpu.predict_rows``, ``generic.predict_rows``,
-``roofline.predict_rows``).  Backends emit compact immutable row tuples
-(struct-of-arrays assembled by C-level zips); ``TimeBreakdown`` objects
-materialize lazily when a result is indexed, so argmin-style consumers
-never pay per-config Python object construction.  Each row is memoized
-under a content key (Workload fields + HardwareParams content + route) so
-repeated autotune/hillclimb queries are O(1) dictionary hits.
+Two batched front ends share the NumPy-vectorized model backends
+(``blackwell``/``cdna3``/``tpu``/``generic``/``roofline``):
+
+``SweepEngine.predict_batch(workloads, hw)``
+    List-of-``Workload`` batches.  Backends emit compact immutable row
+    tuples; ``TimeBreakdown`` objects materialize lazily when a result is
+    indexed.  Rows are memoized per row under a content key (the workload's
+    packed ``_nvec`` buffer + non-numeric fields + HardwareParams content +
+    route) in a bounded LRU, and whole batches short-circuit through a
+    batch-digest tier so replaying an identical sweep never walks the
+    per-row cache.
+
+``predict_table(table, hw)`` / ``SweepEngine.predict_table``
+    Columnar ``WorkloadTable`` sweeps.  The backends run directly on the
+    table's column arrays and return columns; nothing per-row is built
+    until a winner is materialized.  Fused reductions ``argmin_table``,
+    ``topk_table`` and ``pareto_table`` reduce on the column arrays and
+    materialize only the winning rows' ``TimeBreakdown``s.  Whole tables
+    memoize under a per-table content token (tier 1); there is no per-row
+    tier for tables — a table is the unit of reuse.
+
+Columnar-table contract (when to use what):
+
+  * scalar ``predict.predict(w, hw)`` — one-off questions, host phases,
+    anything that wants a single ``TimeBreakdown`` now.  Delegates here as
+    a batch of one and is memoized per row.
+  * ``predict_batch`` — you already hold ``Workload`` objects (validation
+    suites, calibration fits that need per-case TimeBreakdowns).
+  * ``WorkloadTable`` + ``predict_table``/``argmin_table``/``topk_table``
+    — sweeps you *construct*: tile lattices (``WorkloadTable.tile_lattice``),
+    cartesian what-if grids (``WorkloadTable.cartesian``).  Never builds
+    per-config Workload dataclasses, never builds per-config rows; ~an
+    order of magnitude faster end to end than predict_batch over a
+    freshly-built Workload list (benchmarks/sweep_bench.py).
 
 Guarantees:
   * batch-of-1 results are bit-identical to the pre-refactor scalar
     ``predict(w, hw)`` for every route (verified by tests/test_sweep.py),
+    and table results are bit-identical per row to predict_batch
+    (tests/test_workload_table.py),
   * cached rows are immutable tuples — no defensive copies, no
     cache-poisoning via caller-mutated detail dicts,
   * calibration is applied at materialization time, after the cache, so
-    one cache entry serves calibrated and uncalibrated callers.
+    one cache entry serves calibrated and uncalibrated callers,
+  * all caches are LRU-bounded (``max_entries`` rows, ``max_batch_entries``
+    batch digests, ``max_table_entries`` table results) and lock-protected;
+    concurrent ``predict_batch`` calls from many threads return identical
+    results with the bounds maintained.
 """
 from __future__ import annotations
 
 import dataclasses
+import hashlib
 import threading
 from collections import OrderedDict
+from dataclasses import dataclass
 from typing import Dict, Iterator, List, Optional, Sequence, Tuple
 
 import numpy as np
 
 from . import blackwell, cdna3, generic, roofline
 from .hardware import HardwareParams
-from .workload import Row, TimeBreakdown, Workload, row_from_tb, tb_from_row
+from .workload import Row, TB_FIELDS, TimeBreakdown, Workload, \
+    WorkloadTable, row_from_tb, tb_from_row
 
 ROUTES = ("stage", "wavefront", "tpu", "generic", "roofline")
 
@@ -73,6 +107,21 @@ def _rows_fn(route: str):
     raise ValueError(f"unknown model route {route!r}")
 
 
+def _cols_fn(route: str):
+    if route == "stage":
+        return blackwell.predict_table_cols
+    if route == "wavefront":
+        return cdna3.predict_table_cols
+    if route == "tpu":
+        from . import tpu
+        return tpu.predict_table_cols
+    if route == "generic":
+        return generic.predict_table_cols
+    if route == "roofline":
+        return roofline.predict_table_cols
+    raise ValueError(f"unknown model route {route!r}")
+
+
 def _scalar_fn(route: str):
     if route == "stage":
         return blackwell.predict
@@ -100,21 +149,12 @@ def _eval_rows(route: str, ws: Sequence[Workload],
 
 
 def workload_key(w: Workload) -> Tuple:
-    """Content key for a workload: every model-visible field (``name`` is
-    excluded — predictions depend only on the characterization, so renamed
-    duplicates share cache entries)."""
-    g, t = w.gemm, w.tile
-    return (
-        w.wclass, w.flops, w.bytes, w.precision, w.matrix,
-        w.working_set_bytes,
-        (g.m, g.n, g.k) if g is not None else None,
-        (t.bm, t.bn, t.bk) if t is not None else None,
-        w.num_ctas, w.k_tiles, w.tma_participants, w.bytes_per_cta,
-        w.vgpr_per_workitem,
-        tuple(sorted(w.hit_rates.items())) if w.hit_rates else (),
-        w.num_loads, w.compressed_bytes, w.compression_ratio,
-        w.irregular, w.atomics, w.concurrent_kernels, w.num_devices,
-    )
+    """Content key for a workload: the packed numeric vector (every
+    model-visible numeric field, one memoized bytes object) plus the
+    non-numeric fields.  ``name`` is excluded — predictions depend only on
+    the characterization, so renamed duplicates share cache entries."""
+    return (w._nvec, w.wclass, w.precision,
+            tuple(sorted(w.hit_rates.items())) if w.hit_rates else ())
 
 
 _HW_TOKENS: Dict[Tuple, Tuple[str, int]] = {}
@@ -201,14 +241,103 @@ class BatchResult(Sequence):
         return int(np.argmin(self.totals))
 
 
+class TableResult(Sequence):
+    """Lazy sequence view over a columnar table prediction.
+
+    ``totals`` (and ``field_totals``) are whole-column NumPy reads with
+    calibration folded in; indexing materializes a single row's
+    ``TimeBreakdown`` — the only per-row Python in the table path.
+    """
+
+    __slots__ = ("_cols", "_table", "_calibration", "_mult", "_totals")
+
+    def __init__(self, cols, table: WorkloadTable,
+                 calibration: Optional[object] = None):
+        self._cols = cols
+        self._table = table
+        self._calibration = calibration
+        self._mult = None
+        self._totals = None
+
+    def __len__(self) -> int:
+        return self._cols.n
+
+    def _multipliers(self) -> Optional[np.ndarray]:
+        """Per-row calibration multipliers replicating
+        ``Calibration.multiplier`` (exact name, then class, then global)."""
+        cal = self._calibration
+        if cal is None:
+            return None
+        m = self._mult
+        if m is None:
+            t = self._table
+            if cal.per_class:
+                m = t.per_wclass(
+                    lambda c: cal.per_class.get(c, cal.global_scale))
+            else:
+                m = np.full(len(t), cal.global_scale)
+            if cal.per_case:
+                m = m.copy()
+                for i in range(len(t)):
+                    v = cal.per_case.get(t.name(i))
+                    if v is not None:
+                        m[i] = v
+            self._mult = m
+        return m
+
+    @property
+    def totals(self) -> np.ndarray:
+        t = self._totals
+        if t is None:
+            t = self._cols.totals()
+            m = self._multipliers()
+            if m is not None:
+                t = t * m
+            self._totals = t
+        return t
+
+    def field_totals(self, field: str) -> np.ndarray:
+        """One TimeBreakdown field as a column (calibration applied) —
+        the pareto-front input."""
+        t = self._cols.field_col(TB_FIELDS.index(field))
+        m = self._multipliers()
+        return t if m is None else t * m
+
+    def _materialize(self, i: int) -> TimeBreakdown:
+        tb = tb_from_row(self._cols.row(i))
+        m = self._multipliers()
+        if m is not None:
+            scale = float(m[i])
+            tb = tb.scaled(scale)
+            tb.detail["m_case"] = scale
+        return tb
+
+    def __getitem__(self, i):
+        if isinstance(i, slice):
+            return [self._materialize(j) for j in range(len(self))[i]]
+        return self._materialize(range(len(self))[i])
+
+    def __iter__(self) -> Iterator[TimeBreakdown]:
+        return (self._materialize(i) for i in range(len(self)))
+
+    def argmin(self) -> int:
+        return int(np.argmin(self.totals))
+
+
 class SweepEngine:
     """Batched, memoizing front end over the analytical model backends."""
 
     def __init__(self, *, use_cache: bool = True,
-                 max_entries: int = 200_000):
+                 max_entries: int = 200_000,
+                 max_batch_entries: int = 32,
+                 max_table_entries: int = 32):
         self.use_cache = use_cache
         self.max_entries = max_entries
+        self.max_batch_entries = max_batch_entries
+        self.max_table_entries = max_table_entries
         self._cache: "OrderedDict[Tuple, Row]" = OrderedDict()
+        self._batch_cache: "OrderedDict[Tuple, List[Row]]" = OrderedDict()
+        self._table_cache: "OrderedDict[Tuple, object]" = OrderedDict()
         self._lock = threading.Lock()
         self.hits = 0
         self.misses = 0
@@ -235,16 +364,42 @@ class SweepEngine:
                                workloads, calibration)
 
         hwk = hardware_key(hw)
+
+        # tier 1: whole-batch digest — an identical replayed sweep returns
+        # its cached rows without touching the per-row cache at all.  The
+        # key is a fixed-size blake2b digest (plus the tiny string tuples),
+        # not the concatenated buffers, so cached batches don't pin a raw
+        # copy of every workload vector.
+        bkey = None
+        if n >= SCALAR_CUTOFF:
+            h = hashlib.blake2b(b"".join([w._nvec for w in workloads]),
+                                digest_size=16)
+            bkey = (hwk, route, h.digest(), n,
+                    tuple(w.precision for w in workloads),
+                    tuple(w.wclass for w in workloads),
+                    tuple(tuple(sorted(w.hit_rates.items()))
+                          if w.hit_rates else () for w in workloads)
+                    if any(w.hit_rates for w in workloads) else None)
+            with self._lock:
+                hit = self._batch_cache.get(bkey)
+                if hit is not None:
+                    self._batch_cache.move_to_end(bkey)
+                    self.hits += n
+                    return BatchResult(hit, workloads, calibration)
+
+        # tier 2: per-row content keys (LRU)
         rows: List[Optional[Row]] = [None] * n
         miss_idx: List[int] = []
         keys: List[Tuple] = [None] * n  # type: ignore[list-item]
         cache_get = self._cache.get
+        move_to_end = self._cache.move_to_end
         with self._lock:
             for i, w in enumerate(workloads):
                 k = (hwk, route, workload_key(w))
                 keys[i] = k
                 row = cache_get(k)
                 if row is not None:
+                    move_to_end(k)
                     rows[i] = row
                 else:
                     miss_idx.append(i)
@@ -266,7 +421,46 @@ class SweepEngine:
                 while len(self._cache) > self.max_entries:
                     self._cache.popitem(last=False)
 
+        if bkey is not None:
+            with self._lock:
+                self._batch_cache[bkey] = rows
+                while len(self._batch_cache) > self.max_batch_entries:
+                    self._batch_cache.popitem(last=False)
+
         return BatchResult(rows, workloads, calibration)  # type: ignore
+
+    def predict_table(self, table: WorkloadTable, hw: HardwareParams, *,
+                      model: Optional[str] = None,
+                      calibration: Optional[object] = None) -> TableResult:
+        """Columnar prediction over a WorkloadTable.
+
+        Runs the route's table core directly on the column arrays; the
+        result is memoized whole under the table's content token, so
+        replaying a sweep is one token hash + dict hit (strictly faster
+        than recomputing — benchmarks/sweep_bench.py asserts it).
+        """
+        route = model or default_route(hw)
+        cols_fn = _cols_fn(route)
+        n = len(table)
+
+        if not self.use_cache:
+            self.misses += n
+            return TableResult(cols_fn(table, hw), table, calibration)
+
+        key = (hardware_key(hw), route, table.content_token())
+        with self._lock:
+            hit = self._table_cache.get(key)
+            if hit is not None:
+                self._table_cache.move_to_end(key)
+                self.hits += n
+                return TableResult(hit, table, calibration)
+        cols = cols_fn(table, hw)
+        with self._lock:
+            self.misses += n
+            self._table_cache[key] = cols
+            while len(self._table_cache) > self.max_table_entries:
+                self._table_cache.popitem(last=False)
+        return TableResult(cols, table, calibration)
 
     def predict(self, w: Workload, hw: HardwareParams, *,
                 model: Optional[str] = None,
@@ -278,11 +472,15 @@ class SweepEngine:
     # --------------------------------------------------------------- admin
     def cache_stats(self) -> Dict[str, int]:
         return {"hits": self.hits, "misses": self.misses,
-                "entries": len(self._cache)}
+                "entries": len(self._cache),
+                "batch_entries": len(self._batch_cache),
+                "table_entries": len(self._table_cache)}
 
     def clear_cache(self) -> None:
         with self._lock:
             self._cache.clear()
+            self._batch_cache.clear()
+            self._table_cache.clear()
             self.hits = self.misses = 0
 
 
@@ -298,3 +496,91 @@ def default_engine() -> SweepEngine:
             if _DEFAULT is None:
                 _DEFAULT = SweepEngine()
     return _DEFAULT
+
+
+# ---------------------------------------------------------------------------
+# Table-native entry points + fused reductions (paper's argmin, columnar).
+# ---------------------------------------------------------------------------
+
+def predict_table(table: WorkloadTable, hw: HardwareParams, *,
+                  model: Optional[str] = None,
+                  calibration: Optional[object] = None,
+                  engine: Optional[SweepEngine] = None) -> TableResult:
+    """Module-level columnar prediction through the shared engine."""
+    return (engine or default_engine()).predict_table(
+        table, hw, model=model, calibration=calibration)
+
+
+@dataclass(frozen=True)
+class SweepWinner:
+    """One selected configuration from a fused table reduction."""
+
+    index: int
+    name: str
+    total: float
+    breakdown: TimeBreakdown
+
+
+def _winner(res: TableResult, table: WorkloadTable, i: int) -> SweepWinner:
+    return SweepWinner(index=i, name=table.name(i),
+                       total=float(res.totals[i]), breakdown=res[i])
+
+
+def argmin_table(table: WorkloadTable, hw: HardwareParams, *,
+                 model: Optional[str] = None,
+                 calibration: Optional[object] = None,
+                 engine: Optional[SweepEngine] = None) -> SweepWinner:
+    """Fused argmin: reduce on the totals column, materialize one row.
+
+    Ties resolve to the lowest row index (matching a stable sort of the
+    full materialization)."""
+    res = predict_table(table, hw, model=model, calibration=calibration,
+                        engine=engine)
+    return _winner(res, table, int(np.argmin(res.totals)))
+
+
+def topk_table(table: WorkloadTable, hw: HardwareParams, k: int, *,
+               model: Optional[str] = None,
+               calibration: Optional[object] = None,
+               engine: Optional[SweepEngine] = None) -> List[SweepWinner]:
+    """Fused top-k cheapest configurations, ascending; ties break by row
+    index (stable argsort — bit-identical ordering to sorting a full
+    materialization by (total, index))."""
+    res = predict_table(table, hw, model=model, calibration=calibration,
+                        engine=engine)
+    order = np.argsort(res.totals, kind="stable")[:max(k, 0)]
+    return [_winner(res, table, int(i)) for i in order]
+
+
+def pareto_table(table: WorkloadTable, hw: HardwareParams, *,
+                 objectives: Sequence[str] = ("compute", "memory"),
+                 model: Optional[str] = None,
+                 calibration: Optional[object] = None,
+                 engine: Optional[SweepEngine] = None) -> List[SweepWinner]:
+    """Non-dominated (all objectives minimized) configurations.
+
+    ``objectives`` are TimeBreakdown field names (``total``, ``compute``,
+    ``memory``, ...).  A row is dominated if some other row is <= on every
+    objective and < on at least one.  Duplicate points are all kept.
+    Returns winners ordered by (first objective, index).  Reduction runs on
+    the column arrays (chunked O(n^2/chunk) dominance test); only the
+    front's rows materialize.
+    """
+    if not objectives:
+        raise ValueError("pareto_table needs at least one objective")
+    res = predict_table(table, hw, model=model, calibration=calibration,
+                        engine=engine)
+    pts = np.stack([res.field_totals(f) for f in objectives], axis=1)
+    n = pts.shape[0]
+    keep = np.ones(n, dtype=bool)
+    chunk = max(1, 262_144 // max(n, 1))
+    for lo in range(0, n, chunk):
+        hi = min(lo + chunk, n)
+        block = pts[lo:hi]                       # (c, d)
+        le = (pts[None, :, :] <= block[:, None, :]).all(-1)   # (c, n)
+        lt = (pts[None, :, :] < block[:, None, :]).any(-1)
+        dominated = (le & lt).any(1)
+        keep[lo:hi] &= ~dominated
+    front = np.flatnonzero(keep)
+    order = front[np.argsort(pts[front, 0], kind="stable")]
+    return [_winner(res, table, int(i)) for i in order]

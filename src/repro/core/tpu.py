@@ -26,7 +26,6 @@ from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
-from itertools import repeat
 
 from . import collectives as coll
 from .cache import working_set_blend, working_set_blend_batch
@@ -99,9 +98,9 @@ def predict(w: Workload, hw: HardwareParams = TPU_V5E, *,
 
 
 # ---------------------------------------------------------------------------
-# Batched (NumPy-vectorized) stage model — the SweepEngine hot path.
-# No mesh/collectives in batch mode (matching the scalar default); results
-# are bit-identical to per-workload ``predict(w, hw)`` calls.
+# Columnar (NumPy-vectorized) stage model — the WorkloadTable / SweepEngine
+# hot path.  No mesh/collectives in batch mode (matching the scalar
+# default); results are bit-identical to per-workload ``predict(w, hw)``.
 # ---------------------------------------------------------------------------
 
 def _mxu_utilization_batch(raw: np.ndarray, eff: np.ndarray) -> np.ndarray:
@@ -116,26 +115,20 @@ def _mxu_utilization_batch(raw: np.ndarray, eff: np.ndarray) -> np.ndarray:
     return util
 
 
-def predict_rows(ws: Sequence[Workload],
-                 hw: HardwareParams = TPU_V5E) -> List[Row]:
-    """Vectorized ``predict`` over a workload batch, in row form (no
-    collectives — matching the scalar default)."""
+def predict_table_cols(table, hw: HardwareParams = TPU_V5E):
+    """Columnar ``predict`` over a WorkloadTable (no collectives — matching
+    the scalar default).  Bit-identical per row to scalar ``predict``."""
     from .workload import NV_FLOPS, NV_BYTES, NV_WS_OR_BYTES, NV_MATRIX, \
-        NV_IRREGULAR, nvec_matrix
-    raw = nvec_matrix(ws)
+        NV_IRREGULAR, TableCols
+    raw = table.cols
     flops, nbytes, wsb = raw[:, NV_FLOPS], raw[:, NV_BYTES], \
         raw[:, NV_WS_OR_BYTES]
     is_mat = raw[:, NV_MATRIX] != 0
 
-    pmap = {}
-    for w in ws:
-        k = (w.precision, w.matrix)
-        if k not in pmap:
-            pmap[k] = (hw.sustained_flops(k[0], matrix=k[1]),
-                       hw.precision_efficiency.get(k[0], 1.0))
-    pair = np.array([pmap[(w.precision, w.matrix)] for w in ws],
-                    dtype=np.float64)
-    rate, eff = pair[:, 0], pair[:, 1]
+    rate = table.per_precision_matrix(
+        lambda p, m: hw.sustained_flops(p, matrix=m))
+    eff = table.per_precision(
+        lambda p: hw.precision_efficiency.get(p, 1.0))
 
     util = _mxu_utilization_batch(raw, eff)
     with np.errstate(divide="ignore", invalid="ignore"):
@@ -154,16 +147,20 @@ def predict_rows(ws: Sequence[Workload],
     t_step = np.maximum(np.maximum(t_comp, t_io_eff), 0.0) + t_sync
     total = hw.launch_latency_s + t_step  # (N-1)*0.0 device term: no-op
 
-    n = len(ws)
-    fields = zip(total.tolist(), t_comp.tolist(), t_dma.tolist(),
-                 t_io_eff.tolist(), repeat(t_sync, n),
-                 repeat(hw.launch_latency_s, n), repeat(0.0, n),
-                 repeat(0.0, n), repeat(0.0, n))
-    dkeys = ("t_coll_exposed", "mxu_util", "alpha")
-    dvals = zip(repeat(0.0, n),
-                np.where(is_mat, util, 0.0).tolist(),
-                repeat(alpha, n))
-    return list(zip(fields, repeat(dkeys, n), dvals))
+    return TableCols(
+        len(table),
+        (total, t_comp, t_dma, t_io_eff, t_sync, hw.launch_latency_s,
+         0.0, 0.0, 0.0),
+        ("t_coll_exposed", "mxu_util", "alpha"),
+        (0.0, np.where(is_mat, util, 0.0), alpha))
+
+
+def predict_rows(ws: Sequence[Workload],
+                 hw: HardwareParams = TPU_V5E) -> List[Row]:
+    """Vectorized ``predict`` over a workload batch, in row form (no
+    collectives — matching the scalar default)."""
+    from .workload import WorkloadTable
+    return predict_table_cols(WorkloadTable.from_workloads(ws), hw).rows()
 
 
 def predict_batch(ws: Sequence[Workload],

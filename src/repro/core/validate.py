@@ -99,17 +99,19 @@ def validate_suite(platform_hw: HardwareParams,
                    model: Optional[str] = None) -> ValidationReport:
     """Run model + naive roofline over a suite with known measured times.
 
-    Both models are priced through the shared SweepEngine as one batched
-    query per route (memoized — repeated validation of the same suite is
-    served from the cache).
+    The suite is lifted into one columnar ``WorkloadTable`` and priced
+    through the shared SweepEngine's table path — one column query per
+    route, memoized whole, so repeated validation of the same suite is a
+    single content-token hit per route.
     """
     from . import sweep
+    from .workload import WorkloadTable
     assert len(workloads) == len(measured)
-    engine = sweep.default_engine()
-    t_models = engine.predict_batch(
-        workloads, platform_hw, model=model, calibration=calibration).totals
-    t_roofs = engine.predict_batch(
-        workloads, platform_hw, model="roofline").totals
+    table = WorkloadTable.from_workloads(workloads)
+    t_models = sweep.predict_table(
+        table, platform_hw, model=model, calibration=calibration).totals
+    t_roofs = sweep.predict_table(table, platform_hw,
+                                  model="roofline").totals
     rep = ValidationReport(platform=platform_hw.name)
     for w, t_meas, t_model, t_roof in zip(workloads, measured,
                                           t_models, t_roofs):

@@ -11,9 +11,10 @@ applications are lists of Segments (``core/segments.py``).
 from __future__ import annotations
 
 import dataclasses
+import hashlib
 import struct
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -22,12 +23,17 @@ VALID_CLASSES = ("memory", "compute", "balanced", "stencil")
 # Layout of the packed numeric vector stashed on every Workload (column
 # indices into the float64 matrix the batch backends build with one
 # zero-copy np.frombuffer over the concatenated per-workload buffers).
+# This is also the column layout of ``WorkloadTable.cols`` — the two forms
+# are interconvertible row-for-row, byte-for-byte.
 NV_FLOPS, NV_BYTES, NV_WS_OR_BYTES, NV_WS, NV_IRREGULAR, NV_CONCURRENT, \
     NV_DEVICES, NV_K_TILES, NV_NUM_CTAS, NV_BYTES_PER_CTA, NV_TMA_P, \
     NV_COMP_BYTES, NV_COMP_RATIO, NV_VGPR, NV_MATRIX, NV_HAS_GEMM, \
-    NV_GM, NV_GN, NV_GK, NV_GMN, NV_BM, NV_BN, NV_BK = range(23)
+    NV_GM, NV_GN, NV_GK, NV_GMN, NV_BM, NV_BN, NV_BK, \
+    NV_NUM_LOADS, NV_ATOMICS, NV_HAS_TILE = range(26)
 
-_NVEC_PACK = struct.Struct("23d").pack
+NV_COLS = 26
+
+_NVEC_PACK = struct.Struct(f"{NV_COLS}d").pack
 
 
 @dataclass(frozen=True)
@@ -115,20 +121,32 @@ class Workload:
                 f"workload class {self.wclass!r} not in {VALID_CLASSES}")
         if self.flops < 0 or self.bytes < 0:
             raise ValueError("flops/bytes must be non-negative")
-        g, t = self.gemm, self.tile
-        object.__setattr__(self, "_nvec", _NVEC_PACK(
-            self.flops, self.bytes,
-            self.working_set_bytes or self.bytes, self.working_set_bytes,
-            self.irregular, self.concurrent_kernels, self.num_devices,
-            self.k_tiles, self.num_ctas, self.bytes_per_cta,
-            self.tma_participants, self.compressed_bytes,
-            self.compression_ratio, self.vgpr_per_workitem,
-            self.matrix, g is not None,
-            g.m if g is not None else 0, g.n if g is not None else 0,
-            g.k if g is not None else 0,
-            g.m * g.n if g is not None else 0,
-            (t or _DEFAULT_TILE).bm, (t or _DEFAULT_TILE).bn,
-            (t or _DEFAULT_TILE).bk))
+
+    @property
+    def _nvec(self) -> bytes:
+        """Packed NV_COLS-double numeric vector, memoized on the (frozen)
+        instance.  Lazy so plain construction / ``replace()`` round-trips do
+        not pay the struct repack; the buffer is built once on first use by
+        the batch backends or the engine's content keys."""
+        buf = self.__dict__.get("_nvec_buf")
+        if buf is None:
+            g, t = self.gemm, self.tile
+            buf = _NVEC_PACK(
+                self.flops, self.bytes,
+                self.working_set_bytes or self.bytes, self.working_set_bytes,
+                self.irregular, self.concurrent_kernels, self.num_devices,
+                self.k_tiles, self.num_ctas, self.bytes_per_cta,
+                self.tma_participants, self.compressed_bytes,
+                self.compression_ratio, self.vgpr_per_workitem,
+                self.matrix, g is not None,
+                g.m if g is not None else 0, g.n if g is not None else 0,
+                g.k if g is not None else 0,
+                g.m * g.n if g is not None else 0,
+                (t or _DEFAULT_TILE).bm, (t or _DEFAULT_TILE).bn,
+                (t or _DEFAULT_TILE).bk,
+                self.num_loads, self.atomics, t is not None)
+            object.__setattr__(self, "_nvec_buf", buf)
+        return buf
 
     @property
     def arithmetic_intensity(self) -> float:
@@ -217,10 +235,10 @@ Row = Tuple[Tuple[float, ...], Tuple[str, ...], Tuple[float, ...]]
 
 
 def nvec_matrix(ws) -> np.ndarray:
-    """(n, 23) float64 view over the packed per-workload vectors — the
+    """(n, NV_COLS) float64 view over the packed per-workload vectors — the
     zero-copy bulk extraction the batch backends build columns from."""
     return np.frombuffer(b"".join([w._nvec for w in ws]),
-                         dtype=np.float64).reshape(len(ws), 23)
+                         dtype=np.float64).reshape(len(ws), NV_COLS)
 
 
 def tb_from_row(row: Row) -> TimeBreakdown:
@@ -239,6 +257,423 @@ def row_from_tb(tb: TimeBreakdown) -> Row:
     return ((tb.total, tb.compute, tb.memory, tb.io_effective, tb.sync,
              tb.launch, tb.writeback, tb.collective, tb.overhead),
             tuple(tb.detail.keys()), tuple(tb.detail.values()))
+
+
+# ---------------------------------------------------------------------------
+# Columnar prediction output (WorkloadTable hot path).
+#
+# A model backend's table core returns its nine TimeBreakdown fields and its
+# detail terms as whole columns — NumPy arrays, or plain floats for terms
+# constant across the batch.  Reductions (argmin/top-k/pareto) run on these
+# columns directly; per-row ``Row`` tuples / TimeBreakdowns materialize only
+# for the winners.
+# ---------------------------------------------------------------------------
+
+class TableCols:
+    """Columnar prediction result: one route, uniform detail keys."""
+
+    __slots__ = ("n", "fields", "detail_keys", "detail_vals")
+
+    def __init__(self, n: int, fields: Tuple, detail_keys: Tuple[str, ...],
+                 detail_vals: Tuple):
+        self.n = n
+        self.fields = fields            # 9 items: ndarray or python float
+        self.detail_keys = detail_keys
+        self.detail_vals = detail_vals  # ndarray or python float each
+        # results are cached whole by the engine and column reads hand out
+        # these arrays directly — freeze them so a caller's in-place edit
+        # (res.totals *= 1e3) raises instead of poisoning the cache
+        for c in fields + detail_vals:
+            if isinstance(c, np.ndarray) and c.flags.writeable:
+                c.flags.writeable = False
+
+    def totals(self) -> np.ndarray:
+        t = self.fields[0]
+        return t if isinstance(t, np.ndarray) else np.full(self.n, t)
+
+    def field_col(self, j: int) -> np.ndarray:
+        f = self.fields[j]
+        return f if isinstance(f, np.ndarray) else np.full(self.n, f)
+
+    def row(self, i: int) -> Row:
+        f = tuple(float(c[i]) if isinstance(c, np.ndarray) else c
+                  for c in self.fields)
+        d = tuple(float(v[i]) if isinstance(v, np.ndarray) else v
+                  for v in self.detail_vals)
+        return (f, self.detail_keys, d)
+
+    def rows(self) -> List[Row]:
+        from itertools import repeat
+        n = self.n
+        cols = [c.tolist() if isinstance(c, np.ndarray) else repeat(c, n)
+                for c in self.fields]
+        dcols = [v.tolist() if isinstance(v, np.ndarray) else repeat(v, n)
+                 for v in self.detail_vals]
+        return list(zip(zip(*cols), repeat(self.detail_keys, n),
+                        zip(*dcols)))
+
+
+class RowsCols:
+    """Column-interface adapter over precomputed Row tuples (scalar-fallback
+    segments, e.g. CDNA3 workloads with explicit hit rates)."""
+
+    __slots__ = ("n", "_rows")
+
+    def __init__(self, rows: List[Row]):
+        self._rows = rows
+        self.n = len(rows)
+
+    def totals(self) -> np.ndarray:
+        return np.fromiter((r[0][0] for r in self._rows), np.float64, self.n)
+
+    def field_col(self, j: int) -> np.ndarray:
+        return np.fromiter((r[0][j] for r in self._rows), np.float64, self.n)
+
+    def row(self, i: int) -> Row:
+        return self._rows[i]
+
+    def rows(self) -> List[Row]:
+        return self._rows
+
+
+class SegmentedCols:
+    """Columnar result assembled from disjoint row-index segments (mixed
+    routing inside one table, e.g. tiled-GEMM vs streaming rows on the
+    Blackwell stage model — the segments carry different detail keys)."""
+
+    __slots__ = ("n", "segments", "_owner", "_local")
+
+    def __init__(self, n: int, segments: List[Tuple[np.ndarray, object]]):
+        self.n = n
+        self.segments = segments
+        owner = np.empty(n, dtype=np.intp)
+        local = np.empty(n, dtype=np.intp)
+        for s, (idx, _) in enumerate(segments):
+            owner[idx] = s
+            local[idx] = np.arange(len(idx))
+        self._owner = owner
+        self._local = local
+
+    def totals(self) -> np.ndarray:
+        out = np.empty(self.n, dtype=np.float64)
+        for idx, seg in self.segments:
+            out[idx] = seg.totals()
+        return out
+
+    def field_col(self, j: int) -> np.ndarray:
+        out = np.empty(self.n, dtype=np.float64)
+        for idx, seg in self.segments:
+            out[idx] = seg.field_col(j)
+        return out
+
+    def row(self, i: int) -> Row:
+        return self.segments[self._owner[i]][1].row(int(self._local[i]))
+
+    def rows(self) -> List[Row]:
+        out: List[Optional[Row]] = [None] * self.n
+        for idx, seg in self.segments:
+            for i, row in zip(idx.tolist(), seg.rows()):
+                out[i] = row
+        return out  # type: ignore[return-value]
+
+
+# ---------------------------------------------------------------------------
+# WorkloadTable: struct-of-arrays workload batch.
+#
+# Sweeps (tile lattices, precision ladders, cartesian what-if grids) never
+# need per-config ``Workload`` dataclasses: the table holds the NV_COLS
+# float64 matrix directly plus vocab-coded non-numeric columns, and the
+# model backends consume the columns as-is.  Scalar ``Workload`` objects
+# materialize lazily (``workload(i)``) for winners only.
+# ---------------------------------------------------------------------------
+
+#: Workload fields settable as cartesian grid axes -> their NV column.
+CARTESIAN_COLS = {
+    "flops": NV_FLOPS, "bytes": NV_BYTES,
+    "working_set_bytes": NV_WS, "k_tiles": NV_K_TILES,
+    "num_ctas": NV_NUM_CTAS, "bytes_per_cta": NV_BYTES_PER_CTA,
+    "tma_participants": NV_TMA_P, "compressed_bytes": NV_COMP_BYTES,
+    "compression_ratio": NV_COMP_RATIO, "vgpr_per_workitem": NV_VGPR,
+    "num_loads": NV_NUM_LOADS, "concurrent_kernels": NV_CONCURRENT,
+    "num_devices": NV_DEVICES, "irregular": NV_IRREGULAR,
+    "matrix": NV_MATRIX,
+}
+
+
+def _encode(values: List[str]):
+    """Small-vocabulary string column -> (codes intp array, vocab tuple)."""
+    vocab: Dict[str, int] = {}
+    sd = vocab.setdefault
+    codes = [sd(v, len(vocab)) for v in values]
+    return np.array(codes, dtype=np.intp), tuple(vocab)
+
+
+class WorkloadTable:
+    """Struct-of-arrays batch of workloads (the columnar sweep unit).
+
+    Treat instances as immutable: the engine caches results under a content
+    token computed once per table.  ``cols`` is the (n, NV_COLS) float64
+    matrix in ``NV_*`` column order; ``precision``/``wclass`` are vocab-coded
+    per-row; ``hit_rates`` (rarely used — CDNA3 Eq. 10 inputs) is either
+    None or a per-row tuple of dicts.
+    """
+
+    __slots__ = ("cols", "precision_codes", "precision_vocab",
+                 "wclass_codes", "wclass_vocab", "names", "hit_rates",
+                 "_token")
+
+    def __init__(self, cols: np.ndarray, precision_codes: np.ndarray,
+                 precision_vocab: Tuple[str, ...],
+                 wclass_codes: np.ndarray, wclass_vocab: Tuple[str, ...],
+                 names=None, hit_rates=None):
+        self.cols = cols
+        self.precision_codes = precision_codes
+        self.precision_vocab = precision_vocab
+        self.wclass_codes = wclass_codes
+        self.wclass_vocab = wclass_vocab
+        self.names = names          # tuple per-row | shared str | None
+        self.hit_rates = hit_rates  # None | tuple of (dict | None)
+        self._token = None
+        if cols.flags.writeable:
+            cols.flags.writeable = False
+
+    # ------------------------------------------------------------ basics
+    def __len__(self) -> int:
+        return self.cols.shape[0]
+
+    @property
+    def n(self) -> int:
+        return self.cols.shape[0]
+
+    def name(self, i: int) -> str:
+        if isinstance(self.names, tuple):
+            return self.names[i]
+        return f"{self.names or 'table'}#{i}"
+
+    def content_token(self) -> Tuple:
+        """Hashable content identity (what the engine's whole-table cache is
+        keyed on): a fixed-size blake2b digest of the column bytes + the
+        small vocab/hit-rate tuples, so neither the token nor the cache key
+        retains a raw copy of the table.  Computed once and cached —
+        replays of the same table object skip even the digest."""
+        tok = self._token
+        if tok is None:
+            hr = None if self.hit_rates is None else tuple(
+                tuple(sorted(h.items())) if h else ()
+                for h in self.hit_rates)
+            h = hashlib.blake2b(digest_size=16)
+            h.update(self.cols.tobytes())
+            h.update(self.precision_codes.tobytes())
+            h.update(self.wclass_codes.tobytes())
+            tok = (h.digest(), len(self), self.precision_vocab,
+                   self.wclass_vocab, hr)
+            self._token = tok
+        return tok
+
+    # --------------------------------------------------- vocab broadcasts
+    def per_precision(self, fn) -> np.ndarray:
+        """Broadcast fn(precision) over rows — fn runs once per distinct
+        precision, exactly like the list-path per-batch lookup maps."""
+        vals = np.array([fn(p) for p in self.precision_vocab],
+                        dtype=np.float64)
+        return vals[self.precision_codes]
+
+    def per_precision_matrix(self, fn) -> np.ndarray:
+        """Broadcast fn(precision, matrix_flag) over rows; fn runs once per
+        distinct (precision, matrix) pair actually present."""
+        mat = (self.cols[:, NV_MATRIX] != 0).astype(np.intp)
+        pair = self.precision_codes * 2 + mat
+        vals = np.empty(2 * len(self.precision_vocab), dtype=np.float64)
+        for pid in np.unique(pair):
+            vals[pid] = fn(self.precision_vocab[int(pid) // 2],
+                           bool(int(pid) % 2))
+        return vals[pair]
+
+    def per_wclass(self, fn) -> np.ndarray:
+        vals = np.array([fn(c) for c in self.wclass_vocab], dtype=np.float64)
+        return vals[self.wclass_codes]
+
+    # ------------------------------------------------------------- views
+    def take(self, idx: np.ndarray) -> "WorkloadTable":
+        """Row-subset table (mixed-route splits inside the backends)."""
+        names = self.names
+        if isinstance(names, tuple):
+            names = tuple(names[i] for i in idx.tolist())
+        hr = self.hit_rates
+        if hr is not None:
+            hr = tuple(hr[i] for i in idx.tolist())
+        return WorkloadTable(
+            np.ascontiguousarray(self.cols[idx]),
+            self.precision_codes[idx], self.precision_vocab,
+            self.wclass_codes[idx], self.wclass_vocab, names, hr)
+
+    def workload(self, i: int) -> Workload:
+        """Materialize row ``i`` as a scalar Workload (winners / scalar
+        fallbacks only — never the sweep hot path)."""
+        r = self.cols[i]
+        g = GemmShape(int(r[NV_GM]), int(r[NV_GN]), int(r[NV_GK])) \
+            if r[NV_HAS_GEMM] != 0 else None
+        t = TileConfig(int(r[NV_BM]), int(r[NV_BN]), int(r[NV_BK])) \
+            if r[NV_HAS_TILE] != 0 else None
+        hr = {}
+        if self.hit_rates is not None and self.hit_rates[i]:
+            hr = dict(self.hit_rates[i])
+        return Workload(
+            name=self.name(i),
+            wclass=self.wclass_vocab[self.wclass_codes[i]],
+            flops=float(r[NV_FLOPS]), bytes=float(r[NV_BYTES]),
+            precision=self.precision_vocab[self.precision_codes[i]],
+            matrix=bool(r[NV_MATRIX]),
+            working_set_bytes=float(r[NV_WS]),
+            gemm=g, tile=t,
+            num_ctas=int(r[NV_NUM_CTAS]), k_tiles=int(r[NV_K_TILES]),
+            tma_participants=int(r[NV_TMA_P]),
+            bytes_per_cta=float(r[NV_BYTES_PER_CTA]),
+            vgpr_per_workitem=int(r[NV_VGPR]),
+            hit_rates=hr, num_loads=float(r[NV_NUM_LOADS]),
+            compressed_bytes=float(r[NV_COMP_BYTES]),
+            compression_ratio=float(r[NV_COMP_RATIO]),
+            irregular=bool(r[NV_IRREGULAR]), atomics=bool(r[NV_ATOMICS]),
+            concurrent_kernels=int(r[NV_CONCURRENT]),
+            num_devices=int(r[NV_DEVICES]))
+
+    # ------------------------------------------------------ constructors
+    @classmethod
+    def from_workloads(cls, ws: Sequence[Workload]) -> "WorkloadTable":
+        """Columnar view over existing Workload objects (one zero-copy
+        frombuffer over the packed per-workload vectors)."""
+        pc, pv = _encode([w.precision for w in ws])
+        wc, wv = _encode([w.wclass for w in ws])
+        hit_rates = None
+        if any(w.hit_rates for w in ws):
+            hit_rates = tuple(w.hit_rates or None for w in ws)
+        return cls(nvec_matrix(ws), pc, pv, wc, wv,
+                   tuple(w.name for w in ws), hit_rates)
+
+    @classmethod
+    def _from_base(cls, base: Workload, n: int) -> "WorkloadTable":
+        cols = np.tile(np.frombuffer(base._nvec, dtype=np.float64), (n, 1))
+        codes = np.zeros(n, dtype=np.intp)
+        hr = tuple([base.hit_rates] * n) if base.hit_rates else None
+        return cls(cols, codes, (base.precision,), codes.copy(),
+                   (base.wclass,), base.name, hr)
+
+    @classmethod
+    def tile_lattice(cls, base: Workload,
+                     tiles: Sequence[TileConfig]) -> "WorkloadTable":
+        """Re-tile ``base`` with every candidate tile — columnar analogue of
+        ``cdna3._retile`` per candidate, with the derived grid quantities
+        (num_ctas, k_tiles, bytes_per_cta) recomputed vectorized when the
+        base carries a GEMM shape."""
+        from .hardware import BYTES_PER_ELEM
+        n = len(tiles)
+        t = cls._from_base(base, n)
+        cols = t.cols
+        cols.flags.writeable = True
+        bm = np.array([c.bm for c in tiles], dtype=np.int64)
+        bn = np.array([c.bn for c in tiles], dtype=np.int64)
+        bk = np.array([c.bk for c in tiles], dtype=np.int64)
+        cols[:, NV_BM] = bm
+        cols[:, NV_BN] = bn
+        cols[:, NV_BK] = bk
+        cols[:, NV_HAS_TILE] = 1.0
+        if base.gemm is not None:
+            g = base.gemm
+            cols[:, NV_NUM_CTAS] = (-(-g.m // bm)) * (-(-g.n // bn))
+            cols[:, NV_K_TILES] = -(-g.k // bk)
+            in_b = BYTES_PER_ELEM[base.precision]
+            cols[:, NV_BYTES_PER_CTA] = (bm * bk + bk * bn) * in_b
+        cols.flags.writeable = False
+        return t
+
+    @classmethod
+    def cartesian(cls, base: Workload, **field_grids) -> "WorkloadTable":
+        """Cross-product sweep over Workload fields, columnar end to end.
+
+        Grid keys: any numeric field in ``CARTESIAN_COLS``, plus
+        ``precision`` / ``wclass`` (strings, vocab-coded) and ``tile``
+        (TileConfig — sets the raw bM/bN/bK columns only; use
+        ``tile_lattice`` when the GEMM grid quantities must follow the
+        tile).  Row order is C-order over the grids in keyword order.
+        """
+        keys = list(field_grids)
+        grids = [list(field_grids[k]) for k in keys]
+        sizes = [len(g) for g in grids]
+        n = 1
+        for s in sizes:
+            n *= s
+        if n == 0:
+            raise ValueError("empty cartesian grid")
+        t = cls._from_base(base, n)
+        cols = t.cols
+        cols.flags.writeable = True
+        idx = np.indices(sizes).reshape(len(sizes), -1)
+        prec_codes, prec_vocab = t.precision_codes, t.precision_vocab
+        wcls_codes, wcls_vocab = t.wclass_codes, t.wclass_vocab
+        for dim, (key, vals) in enumerate(zip(keys, grids)):
+            take = idx[dim]
+            if key == "precision":
+                codes, vocab = _encode([str(v) for v in vals])
+                prec_codes, prec_vocab = codes[take], vocab
+            elif key == "wclass":
+                for v in vals:
+                    if v not in VALID_CLASSES:
+                        raise ValueError(f"workload class {v!r} not in "
+                                         f"{VALID_CLASSES}")
+                codes, vocab = _encode([str(v) for v in vals])
+                wcls_codes, wcls_vocab = codes[take], vocab
+            elif key == "tile":
+                cols[:, NV_BM] = np.array([c.bm for c in vals],
+                                          dtype=np.float64)[take]
+                cols[:, NV_BN] = np.array([c.bn for c in vals],
+                                          dtype=np.float64)[take]
+                cols[:, NV_BK] = np.array([c.bk for c in vals],
+                                          dtype=np.float64)[take]
+                cols[:, NV_HAS_TILE] = 1.0
+            elif key in CARTESIAN_COLS:
+                arr = np.array(vals, dtype=np.float64)[take]
+                cols[:, CARTESIAN_COLS[key]] = arr
+            else:
+                raise ValueError(
+                    f"cartesian cannot sweep field {key!r}; valid: "
+                    f"{sorted(CARTESIAN_COLS)} + precision/wclass/tile")
+        if "bytes" in field_grids or "working_set_bytes" in field_grids:
+            ws_col = cols[:, NV_WS]
+            cols[:, NV_WS_OR_BYTES] = np.where(ws_col != 0, ws_col,
+                                               cols[:, NV_BYTES])
+        cols.flags.writeable = False
+        return cls(cols, prec_codes, prec_vocab, wcls_codes, wcls_vocab,
+                   base.name, t.hit_rates)
+
+    @classmethod
+    def concat(cls, tables: Sequence["WorkloadTable"]) -> "WorkloadTable":
+        """Stack tables row-wise (e.g. per-shape tile lattices into one
+        sweep).  Vocabularies are merged and re-coded."""
+        if not tables:
+            raise ValueError("concat of zero tables")
+        cols = np.vstack([t.cols for t in tables])
+
+        def merge(code_attr, vocab_attr):
+            vocab: Dict[str, int] = {}
+            parts = []
+            for t in tables:
+                tv = getattr(t, vocab_attr)
+                remap = np.array([vocab.setdefault(v, len(vocab))
+                                  for v in tv], dtype=np.intp)
+                parts.append(remap[getattr(t, code_attr)])
+            return np.concatenate(parts), tuple(vocab)
+
+        pc, pv = merge("precision_codes", "precision_vocab")
+        wc, wv = merge("wclass_codes", "wclass_vocab")
+        names = None
+        if all(isinstance(t.names, tuple) for t in tables):
+            names = tuple(nm for t in tables for nm in t.names)
+        hit_rates = None
+        if any(t.hit_rates is not None for t in tables):
+            hit_rates = tuple(
+                h for t in tables
+                for h in (t.hit_rates or (None,) * len(t)))
+        return cls(cols, pc, pv, wc, wv, names, hit_rates)
 
 
 def gemm_workload(name: str, m: int, n: int, k: int, *,

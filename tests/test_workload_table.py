@@ -1,0 +1,352 @@
+"""WorkloadTable columnar-sweep tests.
+
+Covers: constructor equivalence (from_workloads / tile_lattice / cartesian
+vs the Workload-object path), fused reductions (argmin/topk/pareto) parity
+with a sorted full materialization on randomized sweeps across all five
+routes including ties, the two-tier memo cache (whole-table and whole-batch
+replay, LRU bound), thread safety under concurrent predict_batch, the lazy
+``_nvec`` memoization, and columnar enumerate_plans parity."""
+import random
+import threading
+
+import numpy as np
+import pytest
+
+from repro.core import autotune, collectives, hardware, sweep
+from repro.core.cdna3 import _retile
+from repro.core.workload import NV_BYTES, NV_COLS, NV_WS_OR_BYTES, \
+    TileConfig, Workload, WorkloadTable, gemm_workload, nvec_matrix, \
+    streaming_workload
+from tests.test_sweep import HW_ALL, SCALAR, assert_identical, \
+    mixed_workloads, routes_for
+
+
+def fresh_engine():
+    return sweep.SweepEngine(use_cache=False)
+
+
+class TestConstructors:
+    def test_from_workloads_matches_nvec_matrix(self):
+        ws = mixed_workloads(hardware.B200, n=40, seed=2)
+        t = WorkloadTable.from_workloads(ws)
+        assert t.cols.shape == (40, NV_COLS)
+        assert np.array_equal(t.cols, nvec_matrix(ws))
+        assert [t.name(i) for i in range(len(t))] == [w.name for w in ws]
+
+    def test_workload_roundtrip(self):
+        ws = mixed_workloads(hardware.MI300A, n=30, seed=3)
+        t = WorkloadTable.from_workloads(ws)
+        for i, w in enumerate(ws):
+            assert t.workload(i) == w
+
+    def test_tile_lattice_matches_retile(self):
+        base = gemm_workload("g", 4000, 4096, 4096, precision="fp16")
+        tiles = [TileConfig(bm, bn, bk) for bm in (64, 128, 512)
+                 for bn in (128, 256) for bk in (16, 64)]
+        t = WorkloadTable.tile_lattice(base, tiles)
+        assert np.array_equal(
+            t.cols, nvec_matrix([_retile(base, c) for c in tiles]))
+
+    def test_tile_lattice_gemmless_base(self):
+        base = streaming_workload("s", 1e9)
+        tiles = [TileConfig(64, 64, 16), TileConfig(128, 128, 32)]
+        t = WorkloadTable.tile_lattice(base, tiles)
+        assert np.array_equal(
+            t.cols, nvec_matrix([base.replace(tile=c) for c in tiles]))
+
+    def test_cartesian_grid(self):
+        base = streaming_workload("s", 1e9)
+        t = WorkloadTable.cartesian(
+            base, bytes=[1e6, 1e9, 1e12], precision=["fp32", "fp64"])
+        assert len(t) == 6
+        ref = [base.replace(bytes=b, flops=base.flops, precision=p)
+               for b in (1e6, 1e9, 1e12) for p in ("fp32", "fp64")]
+        got_bytes = t.cols[:, NV_BYTES].tolist()
+        assert got_bytes == [w.bytes for w in ref]
+        assert [t.precision_vocab[c] for c in t.precision_codes] \
+            == [w.precision for w in ref]
+
+    def test_cartesian_ws_or_bytes_recomputed(self):
+        # working_set_bytes == 0 must fall back to bytes, mirroring the
+        # `working_set_bytes or bytes` packing rule
+        base = Workload(name="p", wclass="memory", flops=0.0, bytes=5.0,
+                        working_set_bytes=0.0)
+        t = WorkloadTable.cartesian(base, bytes=[7.0, 11.0])
+        assert t.cols[:, NV_WS_OR_BYTES].tolist() == [7.0, 11.0]
+
+    def test_cartesian_rejects_unknown_field(self):
+        with pytest.raises(ValueError, match="cannot sweep field"):
+            WorkloadTable.cartesian(streaming_workload("s", 1e9),
+                                    gemm=[None])
+
+    def test_concat_merges_vocabs(self):
+        a = WorkloadTable.from_workloads(
+            [streaming_workload("a", 1e9, precision="fp64")])
+        b = WorkloadTable.from_workloads(
+            [streaming_workload("b", 1e9, precision="fp32"),
+             streaming_workload("c", 1e9, precision="fp64")])
+        t = WorkloadTable.concat([a, b])
+        assert len(t) == 3
+        assert [t.precision_vocab[c] for c in t.precision_codes] \
+            == ["fp64", "fp32", "fp64"]
+        assert [t.name(i) for i in range(3)] == ["a", "b", "c"]
+
+    def test_lazy_nvec_memoized(self):
+        w = streaming_workload("lazy", 1e9)
+        assert "_nvec_buf" not in w.__dict__
+        first = w._nvec
+        assert "_nvec_buf" in w.__dict__
+        assert w._nvec is first                 # memoized, not repacked
+        assert w.replace(bytes=2e9)._nvec != first
+
+
+class TestPredictTableParity:
+    @pytest.mark.parametrize("hw", HW_ALL, ids=lambda h: h.name)
+    def test_table_matches_batch_every_route(self, hw):
+        ws = mixed_workloads(hw, n=60, seed=11)
+        t = WorkloadTable.from_workloads(ws)
+        for route in routes_for(hw):
+            res = fresh_engine().predict_table(t, hw, model=route)
+            assert np.array_equal(
+                res.totals,
+                fresh_engine().predict_batch(ws, hw, model=route).totals)
+            # materialized rows equal the scalar model, detail included
+            for i in (0, len(ws) // 2, len(ws) - 1):
+                assert_identical(res[i], SCALAR[route](ws[i], hw))
+
+    def test_cdna3_exotic_rows_fall_back_per_row(self):
+        hw = hardware.MI300A
+        ws = mixed_workloads(hw, n=50, seed=13)
+        assert any(w.hit_rates or w.num_loads > 0 for w in ws)
+        t = WorkloadTable.from_workloads(ws)
+        res = fresh_engine().predict_table(t, hw, model="wavefront")
+        for i, w in enumerate(ws):
+            assert_identical(res[i], SCALAR["wavefront"](w, hw))
+
+    def test_misrouted_table_raises(self):
+        t = WorkloadTable.from_workloads([streaming_workload("s", 1e9)] * 4)
+        with pytest.raises(ValueError, match="mis-routed"):
+            fresh_engine().predict_table(t, hardware.MI300A, model="stage")
+
+    def test_calibration_applied_like_batch(self):
+        from repro.core import calibrate
+        hw = hardware.B200
+        ws = mixed_workloads(hw, n=24, seed=17)
+        cal = calibrate.Calibration(per_case={ws[3].name: 2.5},
+                                    per_class={"memory": 1.5},
+                                    global_scale=0.5)
+        t = WorkloadTable.from_workloads(ws)
+        res_t = fresh_engine().predict_table(t, hw, calibration=cal)
+        res_b = fresh_engine().predict_batch(ws, hw, calibration=cal)
+        assert np.array_equal(res_t.totals, res_b.totals)
+        for i in range(len(ws)):
+            assert_identical(res_t[i], res_b[i])
+
+
+class TestFusedReductions:
+    @pytest.mark.parametrize("hw", HW_ALL, ids=lambda h: h.name)
+    def test_topk_parity_with_sorted_materialization(self, hw):
+        rng = random.Random(23)
+        ws = mixed_workloads(hw, n=40, seed=23)
+        ws = ws + [ws[i] for i in (rng.randrange(40),) * 3]  # forced ties
+        t = WorkloadTable.from_workloads(ws)
+        for route in routes_for(hw):
+            full = list(fresh_engine().predict_batch(ws, hw, model=route))
+            order = sorted(range(len(ws)), key=lambda i: full[i].total)
+            k = 7
+            got = sweep.topk_table(t, hw, k, model=route,
+                                   engine=fresh_engine())
+            assert [w.index for w in got] == order[:k]
+            for w in got:
+                assert_identical(w.breakdown, full[w.index])
+            win = sweep.argmin_table(t, hw, model=route,
+                                     engine=fresh_engine())
+            assert win.index == order[0]
+            assert_identical(win.breakdown, full[order[0]])
+
+    def test_topk_tie_order_is_stable_by_index(self):
+        w = gemm_workload("g", 2048, 2048, 2048, precision="fp16")
+        t = WorkloadTable.from_workloads([w] * 5)
+        got = sweep.topk_table(t, hardware.B200, 3, engine=fresh_engine())
+        assert [x.index for x in got] == [0, 1, 2]
+
+    def test_pareto_matches_bruteforce(self):
+        hw = hardware.B200
+        ws = mixed_workloads(hw, n=50, seed=29)
+        t = WorkloadTable.from_workloads(ws)
+        res = fresh_engine().predict_table(t, hw)
+        pts = np.stack([res.field_totals("compute"),
+                        res.field_totals("memory")], axis=1)
+
+        def dominated(i):
+            return any((pts[j] <= pts[i]).all() and (pts[j] < pts[i]).any()
+                       for j in range(len(ws)) if j != i)
+
+        expect = sorted((i for i in range(len(ws)) if not dominated(i)),
+                        key=lambda i: (pts[i, 0], i))
+        got = sweep.pareto_table(t, hw, engine=fresh_engine())
+        assert [w.index for w in got] == expect
+
+    def test_pareto_single_objective_is_argmin_set(self):
+        hw = hardware.B200
+        ws = mixed_workloads(hw, n=30, seed=31)
+        t = WorkloadTable.from_workloads(ws)
+        got = sweep.pareto_table(t, hw, objectives=("total",),
+                                 engine=fresh_engine())
+        totals = fresh_engine().predict_table(t, hw).totals
+        assert all(w.total == totals.min() for w in got)
+
+
+class TestTwoTierCache:
+    def test_whole_table_replay_hits(self):
+        eng = sweep.SweepEngine()
+        ws = mixed_workloads(hardware.B200, n=30, seed=37)
+        t = WorkloadTable.from_workloads(ws)
+        first = eng.predict_table(t, hardware.B200)
+        assert eng.cache_stats()["misses"] == 30
+        again = eng.predict_table(t, hardware.B200)
+        assert eng.cache_stats()["hits"] == 30
+        assert eng.cache_stats()["table_entries"] == 1
+        assert np.array_equal(first.totals, again.totals)
+        # content-keyed: an equal-content table built separately also hits
+        t2 = WorkloadTable.from_workloads(ws)
+        eng.predict_table(t2, hardware.B200)
+        assert eng.cache_stats()["hits"] == 60
+
+    def test_whole_batch_replay_short_circuits(self):
+        eng = sweep.SweepEngine()
+        ws = mixed_workloads(hardware.B200, n=40, seed=41)
+        first = eng.predict_batch(ws, hardware.B200)
+        assert eng.cache_stats()["batch_entries"] == 1
+        again = eng.predict_batch(ws, hardware.B200)
+        assert eng.cache_stats()["hits"] == 40
+        assert again._rows is first._rows      # tier-1: same rows object
+        for a, b in zip(first, again):
+            assert_identical(a, b)
+
+    def test_table_totals_immune_to_caller_mutation(self):
+        # uniform-route table: column reads hand out the cached arrays,
+        # which are frozen — in-place edits raise instead of poisoning
+        eng = sweep.SweepEngine()
+        ws = [gemm_workload(f"g{i}", 2048 + 128 * i, 2048, 2048,
+                            precision="fp16") for i in range(8)]
+        t = WorkloadTable.from_workloads(ws)
+        res = eng.predict_table(t, hardware.B200)
+        before = res.totals.copy()
+        with pytest.raises(ValueError):
+            res.totals *= 1e3
+        assert np.array_equal(eng.predict_table(t, hardware.B200).totals,
+                              before)
+        # mixed-route (segmented) results assemble fresh arrays per read;
+        # mutating the returned array must not reach the cache either
+        t2 = WorkloadTable.from_workloads(
+            mixed_workloads(hardware.B200, n=20, seed=43))
+        b2 = eng.predict_table(t2, hardware.B200).totals.copy()
+        tot = eng.predict_table(t2, hardware.B200).totals
+        try:
+            tot *= 1e3
+        except ValueError:
+            pass
+        assert np.array_equal(eng.predict_table(t2, hardware.B200).totals,
+                              b2)
+
+    def test_table_cache_lru_bounded(self):
+        eng = sweep.SweepEngine(max_table_entries=2)
+        for nbytes in (1e6, 2e6, 3e6, 4e6):
+            t = WorkloadTable.from_workloads(
+                [streaming_workload("s", nbytes)] * 4)
+            eng.predict_table(t, hardware.B200)
+        assert eng.cache_stats()["table_entries"] == 2
+
+    def test_row_cache_lru_keeps_recent(self):
+        eng = sweep.SweepEngine(max_entries=4)
+        recent = streaming_workload("r", 123.0)
+        eng.predict(recent, hardware.B200)
+        for i in range(8):
+            eng.predict(recent, hardware.B200)     # refresh recency
+            eng.predict(streaming_workload("x", 1e3 + i), hardware.B200)
+        assert len(eng._cache) <= 4
+        h0 = eng.cache_stats()["hits"]
+        eng.predict(recent, hardware.B200)
+        assert eng.cache_stats()["hits"] == h0 + 1  # survived eviction
+
+    def test_thread_hammer_identical_results_bounded_cache(self):
+        bound = 500
+        eng = sweep.SweepEngine(max_entries=bound)
+        hw = hardware.B200
+        batches = [mixed_workloads(hw, n=40, seed=s) for s in range(6)]
+        expect = [fresh_engine().predict_batch(ws, hw).totals
+                  for ws in batches]
+        errors = []
+
+        def hammer(tid):
+            rng = random.Random(tid)
+            try:
+                for _ in range(30):
+                    j = rng.randrange(len(batches))
+                    got = eng.predict_batch(batches[j], hw).totals
+                    if not np.array_equal(got, expect[j]):
+                        errors.append((tid, j))
+            except Exception as e:               # pragma: no cover
+                errors.append((tid, repr(e)))
+
+        threads = [threading.Thread(target=hammer, args=(i,))
+                   for i in range(8)]
+        for th in threads:
+            th.start()
+        for th in threads:
+            th.join()
+        assert not errors
+        assert len(eng._cache) <= bound
+        stats = eng.cache_stats()
+        assert stats["hits"] + stats["misses"] == 8 * 30 * 40
+
+
+class TestAutotunePlans:
+    def test_enumerate_plans_matches_price_train_step(self):
+        mesh = collectives.MeshSpec(axes=(("data", 8), ("model", 4)))
+        plans = [autotune.PlanCandidate(name=f"p{i}", mesh=mesh, tp_degree=4,
+                                        microbatches=m, remat=r,
+                                        compressed_grads=c)
+                 for i, (m, r, c) in enumerate(
+                     [(1, "none", False), (8, "full", True),
+                      (4, "block", False)])]
+        kw = dict(model_flops=1e18, param_bytes=2e11,
+                  activation_bytes=5e12)
+        costs = autotune.enumerate_plans(
+            plans, opt_state_bytes=4e11, activation_peak_bytes=1e12, **kw)
+        for plan, c in zip(plans, costs):
+            ref = autotune.price_train_step(plan, **kw)
+            assert c.total_s == ref.total_s
+            assert c.compute_s == ref.compute_s
+            assert c.memory_s == ref.memory_s
+            assert c.collective_s == ref.collective_s
+            feasible = autotune.hbm_fits(
+                plan, param_bytes=2e11, opt_state_bytes=4e11,
+                activation_peak_bytes=1e12)
+            assert c.detail["feasible"] == (1.0 if feasible else 0.0)
+
+    def test_enumerate_plans_per_plan_opt_state_bytes(self):
+        mesh = collectives.MeshSpec(axes=(("data", 4), ("model", 1)))
+        plans = [autotune.PlanCandidate(name=f"p{i}", mesh=mesh, tp_degree=1)
+                 for i in range(2)]
+        kw = dict(model_flops=1e15, param_bytes=1e10,
+                  activation_bytes=1e10, activation_peak_bytes=0.0)
+        lo, hi = autotune.enumerate_plans(
+            plans, opt_state_bytes=[1e9, 1e15], **kw)
+        assert lo.detail["feasible"] == 1.0
+        assert hi.detail["feasible"] == 0.0
+        with pytest.raises(ValueError, match="opt_state_bytes"):
+            autotune.enumerate_plans(plans, opt_state_bytes=[1e9], **kw)
+
+    def test_select_tile_table_path_matches_scalar(self):
+        from repro.core import blackwell
+        base = gemm_workload("sel", 4096, 4096, 4096, precision="fp16")
+        tiles = [TileConfig(s, s, 32) for s in (64, 128, 256)]
+        best, costs = autotune.select_tile(base, hardware.B200, tiles,
+                                           engine=fresh_engine())
+        scalar = {f"{t.bm}x{t.bn}x{t.bk}":
+                  blackwell.predict(_retile(base, t), hardware.B200).total
+                  for t in tiles}
+        assert costs == scalar
+        assert costs[f"{best.bm}x{best.bn}x{best.bk}"] == min(costs.values())
