@@ -17,8 +17,14 @@ all of them.  Fails (exit 1) on:
     meaningful on hardware comparable to (and as idle as) the machine
     that committed the baseline; shared/throttled runners swing absolute
     throughput ~1.5x with zero code change,
-  * any correctness flag in the fresh run being false (bit-identity,
-    cached-replay-beats-cold, table/list config parity).
+  * any correctness flag in the fresh run being false (bit-identity of
+    the fused AND streamed/sharded reductions, cached-replay-beats-cold,
+    table/list config parity, O(chunk) streamed peak memory).
+
+The streamed/sharded routes add ``speedup_stream_vs_table`` and
+``speedup_parallel_vs_table`` (big-lattice, within-run) to the gated
+ratio set, plus ``big_*_bit_identical`` / ``stream_peak_bounded`` /
+``stream_reduction_bit_identical`` to the correctness set.
 
 ``speedup_table_vs_pr1_batch`` is excluded from gating: it divides by a
 frozen historical constant, so it is an absolute measurement in disguise
@@ -41,8 +47,13 @@ DEFAULT_BASELINE = os.path.normpath(os.path.join(
 #: fields that must be true in the fresh run regardless of timing
 CORRECTNESS_FLAGS = ("cached_faster_than_cold",
                      "table_cached_faster_than_cold",
-                     "table_same_configs_as_list")
-CORRECTNESS_DICTS = ("bit_identical_batch_of_1", "argmin_table_bit_identical")
+                     "table_same_configs_as_list",
+                     "big_stream_bit_identical",
+                     "big_parallel_bit_identical",
+                     "stream_peak_bounded")
+CORRECTNESS_DICTS = ("bit_identical_batch_of_1",
+                     "argmin_table_bit_identical",
+                     "stream_reduction_bit_identical")
 
 #: not gated: ratios against frozen cross-run constants (absolute
 #: measurements in disguise) and microsecond-scale replay throughputs

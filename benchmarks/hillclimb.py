@@ -114,7 +114,8 @@ EXPERIMENTS = {
 }
 
 
-def screen(names, json_out: str | None = None):
+def screen(names, json_out: str | None = None, *, jobs=None,
+           chunk_size: int | None = None):
     """Napkin-math pre-screen: price every experiment's plan against its
     cell's baseline through ``autotune.enumerate_plans`` (no lowering — a
     full screen costs milliseconds vs minutes per compile).
@@ -126,6 +127,11 @@ def screen(names, json_out: str | None = None):
     SweepEngine cache.  Model changes hidden behind ``cfg_overrides``
     (e.g. shard_map SSD) are not visible to the analytical plan model and
     are marked as such.
+
+    ``jobs``/``chunk_size`` thread through to the sharded plan executor
+    (``--jobs``/``--chunk-size``; auto-sized pools only engage once a cell
+    has enough plans to amortize them, so small screens stay serial and
+    millisecond-fast while arbitrarily large what-if grids scale out).
     """
     from repro.configs import SHAPES, get_config
     from repro.core import autotune, collectives
@@ -162,7 +168,8 @@ def screen(names, json_out: str | None = None):
             activation_bytes=2.0 * tokens * cfg.d_model
             * cfg.n_layers * 4,
             opt_state_bytes=opt_bytes,
-            activation_peak_bytes=2.0 * tokens * cfg.d_model * 2)
+            activation_peak_bytes=2.0 * tokens * cfg.d_model * 2,
+            chunk_size=chunk_size, jobs=jobs)
         base = costs[0]
         print(f"=== screen: {arch} x {shape_name} "
               f"(baseline step {base.total_s:.3f}s) ===")
@@ -231,10 +238,18 @@ def main():
     ap.add_argument("--screen", action="store_true",
                     help="napkin-price the plans via the batched engine "
                          "instead of lowering (fast pre-screen)")
+    ap.add_argument("--jobs", type=int, default=0,
+                    help="screen worker processes (0 = auto from "
+                         "os.cpu_count(); pools engage only when a cell "
+                         "has enough plans to amortize them)")
+    ap.add_argument("--chunk-size", type=int, default=0,
+                    help="plans per columnar pricing block "
+                         "(0 = whole candidate list)")
     args = ap.parse_args()
     names = list(EXPERIMENTS) if args.exp == "all" else args.exp.split(",")
     if args.screen:
-        screen(names, args.json)
+        screen(names, args.json, jobs=args.jobs,
+               chunk_size=args.chunk_size or None)
         return
     for n in names:
         run(n, args.json)

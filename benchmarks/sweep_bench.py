@@ -1,4 +1,5 @@
-"""SweepEngine microbenchmark: 1,000-point matmul tile sweep.
+"""SweepEngine microbenchmark: 1,000-point matmul tile sweep + a 1M-point
+streamed lattice.
 
 Measures configs/sec for the paper's headline pricing workflow (§IV-B
 adaptive tile selection: price candidates, return argmin) six ways:
@@ -24,11 +25,28 @@ Construction cost is measured separately (``workload_build_s`` vs
 ``table_build_s``): the table path removes the per-config dataclass
 construction that dominated the old end-to-end sweep.
 
+The big section prices a ``BIG_N``-row (~1M) lazy ``LatticeSpec`` three
+ways, end to end (lattice build + pricing + argmin):
+
+  big_table     materialize the whole table, then fused ``argmin_table``
+                — the PR 2 single-core way, peak memory O(n)
+  big_stream    ``argmin_stream`` chunk by chunk — peak memory O(chunk),
+                and faster than big_table because LLC-resident chunks skip
+                the per-column DRAM round-trips of a 200+ MB table
+  big_parallel  ``argmin_stream(jobs=auto)`` — chunk shards priced across
+                a worker-process pool (``core.parallel``), partial argmins
+                merged in the parent
+
+plus tracemalloc peak-memory for the table vs stream paths and
+bit-identity of all three winners.
+
 Emits BENCH_sweep.json next to this file; headline criteria:
 ``speedup_table_vs_pr1_batch >= 3`` (table throughput vs the committed
 PR 1 ``configs_per_sec_batch`` baseline), ``cached_faster_than_cold``,
-and argmin winners bit-identical to a full materialization on all five
-routes.
+argmin winners bit-identical to a full materialization on all five
+routes, streamed reductions bit-identical to fused table reductions on
+all five routes, and ``speedup_parallel_vs_table >= 1.5`` at >= 1M
+configs.
 
 Run:  PYTHONPATH=src python -m benchmarks.sweep_bench
 (benchmarks/check_regression.py wraps this as a CI gate.)
@@ -37,13 +55,16 @@ from __future__ import annotations
 
 import json
 import os
+import resource
+import sys
 import time
+import tracemalloc
 
 import numpy as np
 
 from repro.core import blackwell, hardware, predict as predict_mod, sweep
-from repro.core.workload import TileConfig, WorkloadTable, gemm_workload, \
-    nvec_matrix
+from repro.core.workload import LatticeSpec, TileConfig, WorkloadTable, \
+    gemm_workload, nvec_matrix
 
 N_POINTS = 1000
 HW_TARGETS = ("b200", "h200", "mi300a", "mi250x", "tpu_v5e")
@@ -127,6 +148,116 @@ def _argmin_parity(ws) -> dict:
     return out
 
 
+def _same_winners(a, b) -> bool:
+    a = a if isinstance(a, list) else [a]
+    b = b if isinstance(b, list) else [b]
+    return (len(a) == len(b)
+            and all(x.index == y.index and x.total == y.total
+                    and x.name == y.name and x.breakdown == y.breakdown
+                    and x.breakdown.detail == y.breakdown.detail
+                    for x, y in zip(a, b)))
+
+
+def _stream_parity(ws, chunk_size: int = 96) -> dict:
+    """Streamed argmin/topk/pareto vs the fused table reductions, per
+    route, with a chunk size that forces many chunk boundaries."""
+    out = {}
+    table = WorkloadTable.from_workloads(ws)
+    for route, hw_name in ROUTE_HW.items():
+        hw = hardware.get(hw_name)
+        eng = sweep.SweepEngine(use_cache=False)
+        ok = _same_winners(
+            sweep.argmin_stream(table, hw, model=route, engine=eng,
+                                chunk_size=chunk_size),
+            sweep.argmin_table(table, hw, model=route, engine=eng))
+        ok = ok and _same_winners(
+            sweep.topk_stream(table, hw, 10, model=route, engine=eng,
+                              chunk_size=chunk_size),
+            sweep.topk_table(table, hw, 10, model=route, engine=eng))
+        ok = ok and _same_winners(
+            sweep.pareto_stream(table, hw, model=route, engine=eng,
+                                chunk_size=chunk_size),
+            sweep.pareto_table(table, hw, model=route, engine=eng))
+        out[route] = bool(ok)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Big section: ~1M-config lazy lattice, streamed and sharded.
+# ---------------------------------------------------------------------------
+
+BIG_N = 1_048_576
+
+
+def big_lattice() -> LatticeSpec:
+    """64 x 64 x 16 x 16 cartesian occupancy grid over an 8192^3 fp16 GEMM
+    (every row keeps the tiled-GEMM route on the stage model)."""
+    base = gemm_workload("big", 8192, 8192, 8192, precision="fp16")
+    return LatticeSpec.cartesian(
+        base,
+        k_tiles=[8 + 4 * i for i in range(64)],
+        num_ctas=[32 + 8 * i for i in range(64)],
+        tma_participants=[1, 2, 4, 8] * 4,
+        concurrent_kernels=[1, 2] * 8)
+
+
+def _traced_peak(fn) -> float:
+    """tracemalloc peak (MB) across one call — NumPy buffers included."""
+    tracemalloc.start()
+    try:
+        fn()
+        return tracemalloc.get_traced_memory()[1] / 1e6
+    finally:
+        tracemalloc.stop()
+
+
+def run_big_bench(rounds: int = 3) -> dict:
+    spec = big_lattice()
+    hw = hardware.B200
+    n = len(spec)
+
+    def table_path():
+        return sweep.argmin_table(spec.materialize(), hw,
+                                  engine=sweep.SweepEngine(use_cache=False))
+
+    def stream_path():
+        return sweep.argmin_stream(spec, hw)
+
+    def parallel_path():
+        return sweep.argmin_stream(spec, hw, jobs=0)
+
+    win_table = table_path()        # warm + parity reference
+    win_stream = stream_path()
+    win_parallel = parallel_path()
+
+    t = _interleaved_best({"table": table_path, "stream": stream_path,
+                           "parallel": parallel_path}, rounds=rounds)
+
+    peak_table = _traced_peak(table_path)
+    peak_stream = _traced_peak(stream_path)
+
+    return {
+        "big_n_configs": n,
+        "big_table_s": t["table"],
+        "big_stream_s": t["stream"],
+        "big_parallel_s": t["parallel"],
+        "configs_per_sec_big_table": n / t["table"],
+        "configs_per_sec_big_stream": n / t["stream"],
+        "configs_per_sec_big_parallel": n / t["parallel"],
+        "speedup_stream_vs_table": t["table"] / t["stream"],
+        "speedup_parallel_vs_table": t["table"] / t["parallel"],
+        "peak_mb_big_table": peak_table,
+        "peak_mb_big_stream": peak_stream,
+        # ru_maxrss is kilobytes on Linux, bytes on macOS
+        "ru_maxrss_mb": resource.getrusage(resource.RUSAGE_SELF).ru_maxrss
+        / (1024.0 ** 2 if sys.platform == "darwin" else 1024.0),
+        "big_stream_bit_identical": _same_winners(win_stream, win_table),
+        "big_parallel_bit_identical": _same_winners(win_parallel,
+                                                    win_table),
+        "stream_peak_bounded": bool(peak_stream < peak_table / 4.0),
+    }
+
+
 def run_bench(n_points: int = N_POINTS) -> dict:
     ws = tile_sweep(n_points)
     hw = hardware.B200
@@ -178,6 +309,7 @@ def run_bench(n_points: int = N_POINTS) -> dict:
         parity[name] = bool(one == ref and one.detail == ref.detail)
 
     argmin_parity = _argmin_parity(ws)
+    stream_parity = _stream_parity(ws)
 
     row = {
         "n_configs": n,
@@ -206,7 +338,9 @@ def run_bench(n_points: int = N_POINTS) -> dict:
         "table_same_configs_as_list": same_configs,
         "bit_identical_batch_of_1": parity,
         "argmin_table_bit_identical": argmin_parity,
+        "stream_reduction_bit_identical": stream_parity,
     }
+    row.update(run_big_bench())
     return row
 
 
@@ -237,6 +371,20 @@ def main() -> None:
           f"({row['workload_build_s'] / row['table_build_s']:.1f}x)")
     print(f"bit-identical batch-of-1: {row['bit_identical_batch_of_1']}")
     print(f"argmin_table bit-identical: {row['argmin_table_bit_identical']}")
+    print(f"stream reductions bit-identical: "
+          f"{row['stream_reduction_bit_identical']}")
+    bn = row["big_n_configs"]
+    print(f"\nbig lattice: n = {bn} configs (lazy cartesian, b200 stage)")
+    for key, label in (("big_table_s", "materialize + argmin_table"),
+                       ("big_stream_s", "argmin_stream"),
+                       ("big_parallel_s", "argmin_stream jobs=auto")):
+        t_big = row[key]
+        print(f"{label:26s}: {t_big * 1e3:8.1f} ms "
+              f"({bn / t_big:10.0f} cfg/s)")
+    print(f"stream {row['speedup_stream_vs_table']:.2f}x / parallel "
+          f"{row['speedup_parallel_vs_table']:.2f}x vs single-core table; "
+          f"peak {row['peak_mb_big_stream']:.1f} MB streamed vs "
+          f"{row['peak_mb_big_table']:.1f} MB materialized")
     # >=3x is judged against the PR 1 batch path measured IN THIS RUN
     # (predict_batch is that path, unchanged in role) — the frozen PR 1
     # constant ratio is reported for context but absolute cross-machine
@@ -247,9 +395,15 @@ def main() -> None:
           and row["table_cached_faster_than_cold"]
           and row["table_same_configs_as_list"]
           and all(row["bit_identical_batch_of_1"].values())
-          and all(row["argmin_table_bit_identical"].values()))
+          and all(row["argmin_table_bit_identical"].values())
+          and all(row["stream_reduction_bit_identical"].values())
+          and row["big_stream_bit_identical"]
+          and row["big_parallel_bit_identical"]
+          and row["stream_peak_bounded"]
+          and row["speedup_parallel_vs_table"] >= 1.5)
     print("PASS (>=10x scalar, >=3x table-vs-batch, cached<cold, "
-          "bit-identical)" if ok else "FAIL")
+          "bit-identical, >=1.5x sharded-vs-table @1M, O(chunk) memory)"
+          if ok else "FAIL")
 
 
 if __name__ == "__main__":

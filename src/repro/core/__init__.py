@@ -14,17 +14,20 @@ Public API:
     autotune.select_plan                       model-driven plan selection
     sweep.SweepEngine                          batched + memoized prediction
     workload.WorkloadTable                     columnar sweep batches
+    workload.LatticeSpec                       lazy sweep lattices (chunked)
     sweep.argmin_table / topk_table            fused sweep reductions
+    sweep.argmin_stream / topk_stream          streaming fused reductions
+    parallel.reduce_sharded                    multi-worker sweep pricing
     microbench.calibrate_host                  real host microbenchmarks
 """
 from . import (autotune, blackwell, cache, calibrate, cdna3, collectives,
-               generic, hardware, predict, roofline, segments, sweep, tpu,
-               validate, workload)
+               generic, hardware, parallel, predict, roofline, segments,
+               sweep, tpu, validate, workload)
 
 __all__ = [
     "autotune", "blackwell", "cache", "calibrate", "cdna3", "collectives",
-    "generic", "hardware", "microbench", "predict", "roofline", "segments",
-    "sweep", "tpu", "validate", "workload",
+    "generic", "hardware", "microbench", "parallel", "predict", "roofline",
+    "segments", "sweep", "tpu", "validate", "workload",
 ]
 
 

@@ -19,7 +19,7 @@ import numpy as np
 from . import collectives as coll
 from . import tpu
 from .hardware import HardwareParams, TPU_V5E
-from .workload import TileConfig, Workload, WorkloadTable
+from .workload import LatticeSpec, TileConfig, Workload, WorkloadTable
 
 
 @dataclass(frozen=True)
@@ -143,34 +143,18 @@ _REMAT_ACT_FACTOR = {"none": 1.0, "block": 0.6, "full": 0.35}
 _REMAT_PEAK_FACTOR = {"none": 1.0, "block": 0.4, "full": 0.15}
 
 
-def enumerate_plans(candidates: Sequence[PlanCandidate], *,
-                    model_flops: float, param_bytes: float,
-                    activation_bytes: float,
-                    opt_state_bytes: Union[float, Sequence[float]] = 0.0,
-                    activation_peak_bytes: float = 0.0,
-                    hw: HardwareParams = TPU_V5E) -> List[StepCost]:
-    """Price every candidate plan (collective schedule + HBM-fit gate).
+#: below this many plans per worker a process pool costs more than the
+#: collective-schedule Python it parallelizes (~tens of us per plan).
+_MIN_PLANS_PER_WORKER = 64
 
-    This is the enumeration half of the paper's argmin: callers that only
-    need the winner use ``select_plan``; hillclimb-style consumers read the
-    whole priced list to order their experiments.
 
-    The arithmetic runs columnar over the candidate set (one NumPy block
-    for the compute/memory/HBM-fit terms, matching ``price_train_step``
-    expression-for-expression); only the per-plan collective schedule walks
-    Python.  ``opt_state_bytes`` may be a per-plan sequence (e.g. int8 vs
-    fp32 optimizer moments) so heterogeneous what-if screens price in a
-    single call.
-    """
-    n = len(candidates)
-    if not n:
-        return []
-    opt_b = np.full(n, opt_state_bytes, dtype=np.float64) \
-        if np.isscalar(opt_state_bytes) \
-        else np.asarray(opt_state_bytes, dtype=np.float64)
-    if opt_b.shape != (n,):
-        raise ValueError(f"opt_state_bytes: expected scalar or {n} values")
-
+def _price_plan_block(candidates: Sequence[PlanCandidate],
+                      opt_b: np.ndarray, model_flops: float,
+                      param_bytes: float, activation_bytes: float,
+                      activation_peak_bytes: float,
+                      hw: HardwareParams) -> List[StepCost]:
+    """One columnar pricing block (the chunk unit of ``enumerate_plans``;
+    matches ``price_train_step`` expression-for-expression)."""
     chips = np.array([p.mesh.num_devices for p in candidates],
                      dtype=np.float64)
     ubatch = np.array([p.microbatches for p in candidates], dtype=np.float64)
@@ -209,6 +193,77 @@ def enumerate_plans(candidates: Sequence[PlanCandidate], *,
     return costs
 
 
+def _plan_shard(candidates, opt_b, model_flops, param_bytes,
+                activation_bytes, activation_peak_bytes, hw, chunk_size):
+    """Worker body for jobs-sharded ``enumerate_plans`` (top-level so it
+    pickles under spawn as well as fork)."""
+    return enumerate_plans(
+        candidates, model_flops=model_flops, param_bytes=param_bytes,
+        activation_bytes=activation_bytes, opt_state_bytes=opt_b,
+        activation_peak_bytes=activation_peak_bytes, hw=hw,
+        chunk_size=chunk_size)
+
+
+def enumerate_plans(candidates: Sequence[PlanCandidate], *,
+                    model_flops: float, param_bytes: float,
+                    activation_bytes: float,
+                    opt_state_bytes: Union[float, Sequence[float]] = 0.0,
+                    activation_peak_bytes: float = 0.0,
+                    hw: HardwareParams = TPU_V5E,
+                    chunk_size: Optional[int] = None,
+                    jobs=None) -> List[StepCost]:
+    """Price every candidate plan (collective schedule + HBM-fit gate).
+
+    This is the enumeration half of the paper's argmin: callers that only
+    need the winner use ``select_plan``; hillclimb-style consumers read the
+    whole priced list to order their experiments.
+
+    The arithmetic runs columnar over the candidate set (one NumPy block
+    per ``chunk_size`` plans, matching ``price_train_step``
+    expression-for-expression); only the per-plan collective schedule walks
+    Python.  ``opt_state_bytes`` may be a per-plan sequence (e.g. int8 vs
+    fp32 optimizer moments) so heterogeneous what-if screens price in a
+    single call.
+
+    ``chunk_size`` bounds the NumPy intermediates for very large candidate
+    sets; ``jobs`` (0/"auto" = ``os.cpu_count()``) shards the candidate
+    list across worker processes when the set is large enough to amortize
+    the pool (results are concatenated in candidate order, identical to a
+    serial run).
+    """
+    n = len(candidates)
+    if not n:
+        return []
+    opt_b = np.full(n, opt_state_bytes, dtype=np.float64) \
+        if np.isscalar(opt_state_bytes) \
+        else np.asarray(opt_state_bytes, dtype=np.float64)
+    if opt_b.shape != (n,):
+        raise ValueError(f"opt_state_bytes: expected scalar or {n} values")
+
+    if jobs is not None:
+        from . import parallel, sweep
+        njobs = sweep.effective_jobs(jobs)
+        if njobs > 1 and n >= _MIN_PLANS_PER_WORKER * njobs:
+            bounds = [(n * j // njobs, n * (j + 1) // njobs)
+                      for j in range(njobs)]
+            shards = parallel.map_jobs(
+                _plan_shard,
+                [(list(candidates[lo:hi]), opt_b[lo:hi], model_flops,
+                  param_bytes, activation_bytes, activation_peak_bytes,
+                  hw, chunk_size) for lo, hi in bounds if hi > lo],
+                jobs=njobs)
+            return [c for shard in shards for c in shard]
+
+    size = int(chunk_size) if chunk_size else n
+    costs: List[StepCost] = []
+    for lo in range(0, n, max(size, 1)):
+        hi = min(lo + size, n)
+        costs.extend(_price_plan_block(
+            list(candidates[lo:hi]), opt_b[lo:hi], model_flops,
+            param_bytes, activation_bytes, activation_peak_bytes, hw))
+    return costs
+
+
 def select_plan(candidates: Sequence[PlanCandidate], *,
                 model_flops: float, param_bytes: float,
                 activation_bytes: float,
@@ -234,16 +289,33 @@ def select_plan(candidates: Sequence[PlanCandidate], *,
 # per-config Workload objects).
 # ---------------------------------------------------------------------------
 
+def _tile_totals(base: Workload, hw: HardwareParams,
+                 candidate_tiles: Sequence["TileConfig"], *,
+                 model: Optional[str], engine, chunk_size, jobs
+                 ) -> np.ndarray:
+    """Totals column for a tile lattice: the memoized whole-table path by
+    default, the streaming/sharded path when ``chunk_size``/``jobs`` ask
+    for bounded memory or multi-core pricing (same floats either way)."""
+    from . import sweep
+    if chunk_size is None and jobs is None:
+        table = WorkloadTable.tile_lattice(base, candidate_tiles)
+        return sweep.predict_table(table, hw, model=model,
+                                   engine=engine).totals
+    spec = LatticeSpec.tile_lattice(base, candidate_tiles)
+    return sweep.predict_totals_stream(spec, hw, model=model,
+                                       engine=engine,
+                                       chunk_size=chunk_size, jobs=jobs)
+
+
 def enumerate_tiles(base: Workload, hw: HardwareParams,
                     candidate_tiles: Sequence["TileConfig"], *,
                     model: Optional[str] = None,
-                    engine=None) -> Dict[str, float]:
+                    engine=None, chunk_size: Optional[int] = None,
+                    jobs=None) -> Dict[str, float]:
     """Price ``base`` re-tiled with every candidate through the columnar
     table path; returns {"bMxbNxbK": seconds}."""
-    from . import sweep
-    table = WorkloadTable.tile_lattice(base, candidate_tiles)
-    totals = sweep.predict_table(table, hw, model=model,
-                                 engine=engine).totals
+    totals = _tile_totals(base, hw, candidate_tiles, model=model,
+                          engine=engine, chunk_size=chunk_size, jobs=jobs)
     return {f"{t.bm}x{t.bn}x{t.bk}": float(s)
             for t, s in zip(candidate_tiles, totals)}
 
@@ -251,13 +323,14 @@ def enumerate_tiles(base: Workload, hw: HardwareParams,
 def select_tile(base: Workload, hw: HardwareParams,
                 candidate_tiles: Sequence["TileConfig"], *,
                 model: Optional[str] = None,
-                engine=None) -> Tuple["TileConfig", Dict[str, float]]:
+                engine=None, chunk_size: Optional[int] = None,
+                jobs=None) -> Tuple["TileConfig", Dict[str, float]]:
     """Fused argmin over candidate tiles (the paper's adaptive tile
-    selection): one columnar sweep, one reduction on the totals column."""
-    from . import sweep
-    table = WorkloadTable.tile_lattice(base, candidate_tiles)
-    res = sweep.predict_table(table, hw, model=model, engine=engine)
-    totals = res.totals
+    selection): one columnar sweep, one reduction on the totals column.
+    With ``chunk_size``/``jobs`` the lattice streams in O(chunk) memory
+    and/or shards across cores — winner identical either way."""
+    totals = _tile_totals(base, hw, candidate_tiles, model=model,
+                          engine=engine, chunk_size=chunk_size, jobs=jobs)
     best_i = int(np.argmin(totals))
     costs = {f"{t.bm}x{t.bn}x{t.bk}": float(s)
              for t, s in zip(candidate_tiles, totals)}

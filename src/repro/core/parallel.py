@@ -1,0 +1,352 @@
+"""Sharded sweep execution: price lattice shards across a worker pool.
+
+The streaming reductions in ``core.sweep`` bound peak memory by pricing one
+chunk at a time; this module adds the throughput half of the contract —
+pricing scales with cores instead of leaving N-1 of them idle.  The lattice
+row range is split into one contiguous shard per worker; each worker
+streams its shard through its own cache-free ``SweepEngine`` and returns
+its reducers; the parent merges the partials in shard order.  Merged
+winners (index, total, tie-order, breakdown) are bit-identical to a
+single-process reduction, which is itself bit-identical to the
+materialized ``argmin_table``/``topk_table``/``pareto_table``.
+
+Inputs cross the process boundary two ways:
+
+  * ``LatticeSpec``s are tiny (a base workload + grid arrays) and are
+    pickled; workers rebuild their chunks locally via the spec's vectorized
+    index arithmetic — zero bulk column traffic.
+  * already-built ``WorkloadTable``s (passed directly, the top-level
+    source) export their columns into ``multiprocessing.shared_memory``
+    once (``SharedTable``); workers attach zero-copy NumPy views, so no
+    column bytes are pickled.  A built table nested inside a concat spec
+    does NOT get this treatment — it travels inside the pickled spec, so
+    pass big built tables directly (or concat them into one table first)
+    when sharding.
+
+Portability: the pool prefers the ``fork`` start method (cheapest on
+Linux) but passes everything workers need as task arguments, so ``spawn``
+/ ``forkserver`` work identically; once ``jax`` is loaded in the parent
+the pool switches to ``forkserver`` (forking a multithreaded jax process
+can deadlock in a held mutex — the forkserver's server process is exec'd
+clean, so its forks are safe).  When process pools are unusable at all
+(sandboxed /dev/shm, missing semaphores) a thread pool runs the same shard
+function in-process — NumPy releases the GIL on the large column kernels,
+so threads still overlap.  Worker exceptions propagate to the caller
+(``future.result()`` re-raises; a hard worker death surfaces as
+``BrokenProcessPool``) — never a silent hang.  Forked workers start with
+cleared engine caches (``sweep._reinit_after_fork_in_child``) so parent
+cache state is never trusted or mutated through copy-on-write.
+"""
+from __future__ import annotations
+
+import math
+import multiprocessing
+import sys
+from concurrent.futures import ProcessPoolExecutor, ThreadPoolExecutor
+from typing import Callable, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from . import sweep as sweep_mod
+from . import workload as workload_mod
+from .hardware import HardwareParams
+
+__all__ = ["SharedTable", "map_jobs", "processes_available",
+           "reduce_sharded", "reduce_sharded_multi", "resolve_jobs"]
+
+
+def resolve_jobs(jobs=None) -> int:
+    """CLI-flag policy: ``None``/0/"auto" -> ``os.cpu_count()``, else N.
+
+    NOTE the deliberate asymmetry with ``sweep.effective_jobs``: at the
+    sweep API (``argmin_stream(jobs=None)``) omitting ``jobs`` means
+    SERIAL — parallelism is opt-in; calling into THIS module is already
+    the opt-in, so here an omitted ``jobs`` means every core."""
+    if jobs in (None, 0, "auto"):
+        return sweep_mod.effective_jobs(0)
+    return sweep_mod.effective_jobs(jobs)
+
+
+# --------------------------------------------------------------------------
+# Shared-memory column transport (zero-pickle table shipping).
+# --------------------------------------------------------------------------
+
+def _share_array(arr: np.ndarray):
+    from multiprocessing import shared_memory
+    shm = shared_memory.SharedMemory(create=True, size=max(arr.nbytes, 1))
+    view = np.ndarray(arr.shape, dtype=arr.dtype, buffer=shm.buf)
+    view[...] = arr
+    return shm, (shm.name, arr.shape, str(arr.dtype))
+
+
+class SharedTable:
+    """A WorkloadTable's columns exported to POSIX shared memory.
+
+    ``handle`` / ``window_handle(lo, hi)`` are small picklable descriptors;
+    ``attach`` rebuilds a zero-copy table view in another process.  Window
+    handles carry only the window's slice of the per-row ``names`` /
+    ``hit_rates`` tuples, so sharding an n-row table pickles n small
+    objects in total across all shards — never n per shard.  The creating
+    process owns the segments: call ``close()`` + ``unlink()`` when the
+    consumers are done.
+    """
+
+    def __init__(self, table: workload_mod.WorkloadTable):
+        self._shms = []
+        descs = []
+        try:
+            for arr in (table.cols, table.precision_codes,
+                        table.wclass_codes):
+                shm, desc = _share_array(np.ascontiguousarray(arr))
+                self._shms.append(shm)
+                descs.append(desc)
+        except Exception:
+            self.close(unlink=True)
+            raise
+        self._descs = tuple(descs)
+        self._pv = table.precision_vocab
+        self._wv = table.wclass_vocab
+        self._names = table.names
+        self._hit_rates = table.hit_rates
+        self._name_offset = table.name_offset
+        self.handle = ("shm_table", self._descs, self._pv, self._wv,
+                       self._names, self._hit_rates, self._name_offset,
+                       0, None)
+
+    def window_handle(self, lo: int, hi: int):
+        """Descriptor for rows [lo, hi): full shm arrays (sliced on
+        attach), per-row metadata sliced here so only the window's share
+        crosses the pickle boundary."""
+        names = self._names
+        offset = 0
+        if isinstance(names, tuple):
+            names = names[lo:hi]
+        else:
+            offset = self._name_offset + lo
+        hr = self._hit_rates
+        if hr is not None:
+            hr = hr[lo:hi]
+        return ("shm_table", self._descs, self._pv, self._wv, names, hr,
+                offset, lo, hi)
+
+    @staticmethod
+    def attach(handle):
+        """(table, shms) from a handle; caller closes the shms when done."""
+        from multiprocessing import shared_memory
+        _, descs, pv, wv, names, hr, offset, lo, hi = handle
+        shms, arrs = [], []
+        for name, shape, dtype in descs:
+            shm = shared_memory.SharedMemory(name=name)
+            shms.append(shm)
+            a = np.ndarray(shape, dtype=np.dtype(dtype), buffer=shm.buf)
+            a = a[lo:hi] if hi is not None else a[lo:]
+            a.flags.writeable = False
+            arrs.append(a)
+        table = workload_mod.WorkloadTable(
+            arrs[0], arrs[1], pv, arrs[2], wv, names, hr,
+            name_offset=offset)
+        return table, shms
+
+    def close(self, unlink: bool = False) -> None:
+        for shm in self._shms:
+            try:
+                shm.close()
+                if unlink:
+                    shm.unlink()
+            except OSError:
+                pass
+
+
+# --------------------------------------------------------------------------
+# Pool plumbing.
+# --------------------------------------------------------------------------
+
+_PROC_OK: Optional[bool] = None
+
+
+def _probe() -> int:
+    return 42
+
+
+def _mp_context():
+    methods = multiprocessing.get_all_start_methods()
+    if "fork" in methods and "jax" not in sys.modules:
+        return multiprocessing.get_context("fork")   # COW, no re-import
+    if "forkserver" in methods:
+        # jax is multithreaded: forking its parent process can deadlock in
+        # a held mutex.  The forkserver's server process is exec'd clean
+        # (never imports jax), so its forks are safe — at the cost of
+        # workers re-importing repro.core.
+        return multiprocessing.get_context("forkserver")
+    return multiprocessing.get_context("spawn")
+
+
+def processes_available() -> bool:
+    """One-shot probe that a worker process can actually start (sandboxes
+    commonly break semaphores or /dev/shm); memoized per process."""
+    global _PROC_OK
+    if _PROC_OK is None:
+        try:
+            with ProcessPoolExecutor(max_workers=1,
+                                     mp_context=_mp_context()) as ex:
+                _PROC_OK = ex.submit(_probe).result() == 42
+        except Exception:
+            _PROC_OK = False
+    return _PROC_OK
+
+
+def _make_pool(njobs: int, use_threads: Optional[bool]):
+    """(pool, is_processes).  ``use_threads`` forces the fallback."""
+    if use_threads is None:
+        use_threads = not processes_available()
+    if use_threads:
+        return ThreadPoolExecutor(max_workers=njobs), False
+    return ProcessPoolExecutor(max_workers=njobs,
+                               mp_context=_mp_context()), True
+
+
+def _shutdown(pool) -> None:
+    try:
+        pool.shutdown(wait=True, cancel_futures=True)
+    except TypeError:                        # pragma: no cover (<3.9)
+        pool.shutdown(wait=True)
+
+
+def _open_source(payload):
+    """Worker side: payload -> (spec, shms-to-close)."""
+    if payload[0] == "shm_table":
+        table, shms = SharedTable.attach(payload)
+        return sweep_mod.as_spec(table), shms
+    return payload[1], []
+
+
+def _price_shard(payload, hw: HardwareParams, passes: Sequence[Tuple],
+                 lo: int, hi: int, offset_base: int,
+                 chunk_size: int) -> List[Sequence]:
+    """Worker body: stream rows [lo, hi) of the opened source through a
+    private engine, once per (factories, model, calibration) pass, so one
+    pool prices every route a caller needs (e.g. model + roofline)."""
+    spec, shms = _open_source(payload)
+    try:
+        out = []
+        for factories, model, calibration in passes:
+            reducers = [f() for f in factories]
+            sweep_mod.reduce_stream(
+                spec, hw, reducers, chunk_size=chunk_size, model=model,
+                calibration=calibration,
+                engine=sweep_mod.SweepEngine(use_cache=False),
+                lo=lo, hi=hi, offset_base=offset_base)
+            out.append(reducers)
+        return out
+    finally:
+        for shm in shms:
+            shm.close()
+
+
+def _shard_bounds(n: int, njobs: int, chunk_size: int) -> List[Tuple[int,
+                                                                     int]]:
+    """Contiguous per-worker row ranges, chunk-aligned so no worker pays a
+    ragged sub-chunk in the middle of its shard."""
+    chunks_total = math.ceil(n / chunk_size)
+    per = math.ceil(chunks_total / njobs)
+    bounds = []
+    for j in range(njobs):
+        lo = min(j * per * chunk_size, n)
+        hi = min((j + 1) * per * chunk_size, n)
+        if hi > lo:
+            bounds.append((lo, hi))
+    return bounds
+
+
+def reduce_sharded(source, hw: HardwareParams,
+                   factories: Sequence[Callable[[], object]], *,
+                   jobs=None, chunk_size: Optional[int] = None,
+                   model: Optional[str] = None,
+                   calibration=None,
+                   use_threads: Optional[bool] = None) -> Sequence:
+    """Run the streaming reducers sharded across a worker pool.
+
+    Returns the merged reducers (same shapes ``sweep.reduce_stream``
+    returns); results are bit-identical to a serial reduction.  A worker
+    exception (or a hard worker death) propagates to the caller.
+    """
+    return reduce_sharded_multi(
+        source, hw, [(tuple(factories), model, calibration)], jobs=jobs,
+        chunk_size=chunk_size, use_threads=use_threads)[0]
+
+
+def reduce_sharded_multi(source, hw: HardwareParams,
+                         passes: Sequence[Tuple], *,
+                         jobs=None, chunk_size: Optional[int] = None,
+                         use_threads: Optional[bool] = None
+                         ) -> List[Sequence]:
+    """``reduce_sharded`` for several (factories, model, calibration)
+    passes over the same source: one pool (and one shared-memory export)
+    prices every pass per shard — callers that need multiple routes (e.g.
+    ``validate_suite``'s model + roofline columns) pay the pool start
+    once.  Returns one merged reducer list per pass, in order."""
+    spec = sweep_mod.as_spec(source)
+    n = len(spec)
+    size = int(chunk_size or workload_mod.DEFAULT_CHUNK_ROWS)
+    njobs = min(resolve_jobs(jobs), max(1, math.ceil(n / size)))
+    if njobs <= 1:
+        return [sweep_mod.reduce_stream(
+            spec, hw, [f() for f in factories], chunk_size=size,
+            model=model, calibration=calibration,
+            engine=sweep_mod.SweepEngine(use_cache=False))
+            for factories, model, calibration in passes]
+
+    bounds = _shard_bounds(n, njobs, size)
+    shared = None
+    if isinstance(spec, workload_mod._TableSpec) and (
+            use_threads is not True) and processes_available():
+        try:
+            shared = SharedTable(spec.table)
+        except OSError:
+            shared = None                    # pickle the table instead
+    if shared is not None:
+        # window payloads: shm arrays + only this shard's names/hit_rates
+        tasks = [(shared.window_handle(lo, hi), 0, hi - lo, lo)
+                 for lo, hi in bounds]
+    else:
+        tasks = [(("spec", spec), lo, hi, 0) for lo, hi in bounds]
+
+    passes = [(tuple(fs), model, calibration)
+              for fs, model, calibration in passes]
+    pool, _procs = _make_pool(njobs, use_threads)
+    try:
+        futs = [pool.submit(_price_shard, payload, hw, passes,
+                            lo, hi, base, size)
+                for payload, lo, hi, base in tasks]
+        partials = [f.result() for f in futs]
+    finally:
+        _shutdown(pool)
+        if shared is not None:
+            shared.close(unlink=True)
+
+    merged = [list(reducers) for reducers in partials[0]]
+    for part in partials[1:]:
+        for merged_pass, part_pass in zip(merged, part):
+            for r, p in zip(merged_pass, part_pass):
+                r.merge(p)
+    return merged
+
+
+def map_jobs(fn: Callable, args_list: Sequence[Tuple], *,
+             jobs=None, use_threads: Optional[bool] = None) -> List:
+    """Order-preserving parallel map of ``fn(*args)`` over ``args_list``
+    (generic shard runner for non-table work, e.g. plan pricing).  Serial
+    when one worker suffices (a single task, or ``jobs=1``); an omitted
+    ``jobs`` means every core (see ``resolve_jobs``).  Worker exceptions
+    propagate."""
+    if not args_list:
+        return []
+    njobs = min(resolve_jobs(jobs), len(args_list))
+    if njobs <= 1:
+        return [fn(*a) for a in args_list]
+    pool, _procs = _make_pool(njobs, use_threads)
+    try:
+        futs = [pool.submit(fn, *a) for a in args_list]
+        return [f.result() for f in futs]
+    finally:
+        _shutdown(pool)

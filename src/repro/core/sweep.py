@@ -60,17 +60,21 @@ from __future__ import annotations
 
 import dataclasses
 import hashlib
+import heapq
+import math
+import os
 import threading
 from collections import OrderedDict
 from dataclasses import dataclass
-from typing import Dict, Iterator, List, Optional, Sequence, Tuple
+from functools import partial
+from typing import Callable, Dict, Iterator, List, Optional, Sequence, Tuple
 
 import numpy as np
 
 from . import blackwell, cdna3, generic, roofline
 from .hardware import HardwareParams
-from .workload import Row, TB_FIELDS, TimeBreakdown, Workload, \
-    WorkloadTable, row_from_tb, tb_from_row
+from .workload import DEFAULT_CHUNK_ROWS, LatticeSpec, Row, TB_FIELDS, \
+    TimeBreakdown, Workload, WorkloadTable, row_from_tb, tb_from_row
 
 ROUTES = ("stage", "wavefront", "tpu", "generic", "roofline")
 
@@ -431,19 +435,24 @@ class SweepEngine:
 
     def predict_table(self, table: WorkloadTable, hw: HardwareParams, *,
                       model: Optional[str] = None,
-                      calibration: Optional[object] = None) -> TableResult:
+                      calibration: Optional[object] = None,
+                      cache: Optional[bool] = None) -> TableResult:
         """Columnar prediction over a WorkloadTable.
 
         Runs the route's table core directly on the column arrays; the
         result is memoized whole under the table's content token, so
         replaying a sweep is one token hash + dict hit (strictly faster
         than recomputing — benchmarks/sweep_bench.py asserts it).
+
+        ``cache`` overrides ``self.use_cache`` for this call — the
+        streaming reductions pass ``cache=False`` so transient lattice
+        chunks neither pay the content-token hash nor churn the table LRU.
         """
         route = model or default_route(hw)
         cols_fn = _cols_fn(route)
         n = len(table)
 
-        if not self.use_cache:
+        if not (self.use_cache if cache is None else cache):
             self.misses += n
             return TableResult(cols_fn(table, hw), table, calibration)
 
@@ -496,6 +505,31 @@ def default_engine() -> SweepEngine:
             if _DEFAULT is None:
                 _DEFAULT = SweepEngine()
     return _DEFAULT
+
+
+def _reinit_after_fork_in_child() -> None:
+    """Fork safety for the module-level engine (``core.parallel`` workers).
+
+    A forked child inherits the parent's engine through copy-on-write; its
+    locks may be held by parent threads that do not exist in the child, and
+    any entries it appends would silently diverge from the parent's LRU
+    accounting.  Re-key every module lock and start the child's caches
+    empty — workers must never rely on (or appear to mutate) parent cache
+    state."""
+    global _DEFAULT_LOCK, _HW_TOKENS_LOCK
+    _DEFAULT_LOCK = threading.Lock()
+    _HW_TOKENS_LOCK = threading.Lock()
+    eng = _DEFAULT
+    if eng is not None:
+        eng._lock = threading.Lock()
+        eng._cache.clear()
+        eng._batch_cache.clear()
+        eng._table_cache.clear()
+        eng.hits = eng.misses = 0
+
+
+if hasattr(os, "register_at_fork"):
+    os.register_at_fork(after_in_child=_reinit_after_fork_in_child)
 
 
 # ---------------------------------------------------------------------------
@@ -571,16 +605,376 @@ def pareto_table(table: WorkloadTable, hw: HardwareParams, *,
     res = predict_table(table, hw, model=model, calibration=calibration,
                         engine=engine)
     pts = np.stack([res.field_totals(f) for f in objectives], axis=1)
-    n = pts.shape[0]
-    keep = np.ones(n, dtype=bool)
-    chunk = max(1, 262_144 // max(n, 1))
-    for lo in range(0, n, chunk):
-        hi = min(lo + chunk, n)
-        block = pts[lo:hi]                       # (c, d)
-        le = (pts[None, :, :] <= block[:, None, :]).all(-1)   # (c, n)
-        lt = (pts[None, :, :] < block[:, None, :]).any(-1)
-        dominated = (le & lt).any(1)
-        keep[lo:hi] &= ~dominated
-    front = np.flatnonzero(keep)
+    front = np.flatnonzero(_pareto_front_mask(pts))
     order = front[np.argsort(pts[front, 0], kind="stable")]
     return [_winner(res, table, int(i)) for i in order]
+
+
+def _dominated_mask(points: np.ndarray, against: np.ndarray) -> np.ndarray:
+    """Row mask: points strictly dominated (<= everywhere, < somewhere) by
+    some row of ``against``.  Blocked O(|points|*|against|/block) so the
+    broadcast temporaries stay bounded."""
+    n = points.shape[0]
+    out = np.zeros(n, dtype=bool)
+    if not len(against):
+        return out
+    block_rows = max(1, 262_144 // max(len(against), 1))
+    for lo in range(0, n, block_rows):
+        block = points[lo:lo + block_rows]            # (c, d)
+        le = (against[None, :, :] <= block[:, None, :]).all(-1)   # (c, m)
+        lt = (against[None, :, :] < block[:, None, :]).any(-1)
+        out[lo:lo + block_rows] = (le & lt).any(1)
+    return out
+
+
+def _pareto_front_mask(pts: np.ndarray) -> np.ndarray:
+    """True for non-dominated rows (duplicates all kept — equal points
+    never strictly dominate each other)."""
+    return ~_dominated_mask(pts, pts)
+
+
+# ---------------------------------------------------------------------------
+# Streaming fused reductions (O(chunk) peak memory, bit-identical winners).
+#
+# ``reduce_stream`` walks a LatticeSpec (or an already-built table) chunk by
+# chunk, prices each chunk through the columnar path with the table cache
+# bypassed, and folds the chunk's columns into constant-size reducer state:
+# argmin keeps one winner, top-k a bounded heap, pareto an incremental
+# frontier.  Winners (index, total, tie-order, name, breakdown) are
+# bit-identical to the materialized argmin_table/topk_table/pareto_table —
+# chunk columns are byte-identical windows of the full table and every
+# comparison uses the same floats in the same order.
+#
+# Reducers are picklable and mergeable: ``core.parallel`` ships fresh ones
+# to worker processes (each worker streams its own shard through its own
+# SweepEngine) and merges the partials in shard order.
+# ---------------------------------------------------------------------------
+
+def as_spec(source) -> LatticeSpec:
+    """Coerce a sweep source (LatticeSpec | WorkloadTable) to a spec."""
+    if isinstance(source, LatticeSpec):
+        return source
+    if isinstance(source, WorkloadTable):
+        return LatticeSpec.from_table(source)
+    raise TypeError(f"expected LatticeSpec or WorkloadTable, "
+                    f"got {type(source).__name__}")
+
+
+def effective_jobs(jobs) -> int:
+    """Worker-count policy: ``None``/1 -> in-process serial; 0 or "auto" ->
+    ``os.cpu_count()``; N -> N."""
+    if jobs is None:
+        return 1
+    if jobs == 0 or jobs == "auto":
+        return max(1, os.cpu_count() or 1)
+    return max(1, int(jobs))
+
+
+class ArgminStream:
+    """O(1)-state streaming argmin; cross-chunk ties keep the earlier
+    global row (strict <), matching ``np.argmin`` over the full column —
+    including NaN semantics (``np.argmin`` returns the first NaN position
+    when any total is NaN, so an incoming NaN beats any finite best and an
+    established NaN best is never displaced)."""
+
+    def __init__(self):
+        self.best_total = math.inf
+        self.best_index = -1
+        self.best_name = None
+        self.best_tb = None
+
+    def _beats(self, total: float) -> bool:
+        if self.best_index < 0:
+            return True
+        if math.isnan(self.best_total):
+            return False                     # earliest NaN already won
+        return math.isnan(total) or total < self.best_total
+
+    def update(self, offset: int, table: WorkloadTable,
+               res: TableResult) -> None:
+        t = res.totals
+        i = int(np.argmin(t))                # first NaN if the chunk has one
+        if self._beats(float(t[i])):
+            self.best_total = float(t[i])
+            self.best_index = offset + i
+            self.best_name = table.name(i)
+            self.best_tb = res[i]
+
+    def merge(self, other: "ArgminStream") -> None:
+        """``other`` covers a LATER shard (merge runs in shard order)."""
+        if other.best_index >= 0 and self._beats(other.best_total):
+            self.best_total = other.best_total
+            self.best_index = other.best_index
+            self.best_name = other.best_name
+            self.best_tb = other.best_tb
+
+    def result(self) -> SweepWinner:
+        if self.best_index < 0:
+            raise ValueError("argmin of an empty sweep")
+        return SweepWinner(index=self.best_index, name=self.best_name,
+                           total=self.best_total, breakdown=self.best_tb)
+
+
+class TopkStream:
+    """Bounded max-heap of the k cheapest rows ordered by (total, index) —
+    the same lexicographic order a stable argsort of the full totals column
+    yields, so the final list is bit-identical to ``topk_table``.  NaN
+    totals sort after every finite total in original index order (stable
+    argsort semantics): they are kept in a side list and only surface when
+    the whole sweep has fewer than k finite rows."""
+
+    def __init__(self, k: int):
+        self.k = int(k)
+        self._heap: List[Tuple] = []   # (-total, -gidx, name, breakdown)
+        self._nans: List[Tuple] = []   # (gidx, name, total, breakdown)
+
+    def update(self, offset: int, table: WorkloadTable,
+               res: TableResult) -> None:
+        k = self.k
+        if k <= 0:
+            return
+        t = res.totals
+        heap = self._heap
+        if len(heap) == k and float(t.min()) >= -heap[0][0]:
+            # chunks stream in ascending index order, so an incoming row
+            # that merely equals the current worst loses the tie (a NaN
+            # t.min() compares False and falls through to the full scan)
+            return
+        kk = min(k, len(t))
+        thresh = np.partition(t, kk - 1)[kk - 1]
+        if math.isnan(thresh):
+            # fewer than kk finite totals in this chunk: every finite row
+            # is a candidate, NaN rows go to the side list below
+            cand = np.flatnonzero(~np.isnan(t))
+        else:
+            cand = np.flatnonzero(t <= thresh)   # NaN compares False
+        cand = cand[np.argsort(t[cand], kind="stable")]
+        for li in cand.tolist():
+            total = float(t[li])
+            gidx = offset + li
+            if len(heap) < k:
+                heapq.heappush(heap, (-total, -gidx, table.name(li),
+                                      res[li]))
+            elif (-total, -gidx) > heap[0][:2]:
+                heapq.heapreplace(heap, (-total, -gidx, table.name(li),
+                                         res[li]))
+            else:
+                break   # candidates are ascending: the rest lose too
+        if len(heap) < k and len(self._nans) < k:
+            # NaNs can only surface when the whole sweep has < k finite
+            # rows, i.e. when the heap never fills — so a full heap makes
+            # this scan (and all future ones) unnecessary
+            for li in np.flatnonzero(np.isnan(t)).tolist():
+                if len(self._nans) >= k:
+                    break
+                self._nans.append((offset + li, table.name(li),
+                                   float(t[li]), res[li]))
+
+    def merge(self, other: "TopkStream") -> None:
+        entries = sorted(self._heap + other._heap,
+                         key=lambda e: (-e[0], -e[1]))[:self.k]
+        self._heap = entries
+        heapq.heapify(self._heap)
+        self._nans = sorted(self._nans + other._nans,
+                            key=lambda e: e[0])[:self.k]
+
+    def result(self) -> List[SweepWinner]:
+        entries = sorted(self._heap, key=lambda e: (-e[0], -e[1]))
+        out = [SweepWinner(index=-e[1], name=e[2], total=-e[0],
+                           breakdown=e[3]) for e in entries]
+        for gidx, name, total, tb in self._nans[:self.k - len(out)]:
+            out.append(SweepWinner(index=gidx, name=name, total=total,
+                                   breakdown=tb))
+        return out
+
+
+class ParetoStream:
+    """Incremental pareto frontier: each chunk's non-dominated rows are
+    cross-filtered against the running frontier both ways.  Dominance is
+    transitive, so pruning dominated points early never changes the final
+    front; ordering is restored at ``result()``."""
+
+    def __init__(self, objectives: Sequence[str] = ("compute", "memory")):
+        if not objectives:
+            raise ValueError("pareto needs at least one objective")
+        self.objectives = tuple(objectives)
+        self.pts = np.empty((0, len(self.objectives)))
+        self.entries: List[Tuple] = []   # (gidx, name, total, breakdown)
+
+    def update(self, offset: int, table: WorkloadTable,
+               res: TableResult) -> None:
+        pts = np.stack([res.field_totals(f) for f in self.objectives],
+                       axis=1)
+        keep = _pareto_front_mask(pts)
+        if self.entries:
+            kidx = np.flatnonzero(keep)
+            if len(kidx):
+                keep[kidx[_dominated_mask(pts[kidx], self.pts)]] = False
+        cand = np.flatnonzero(keep)
+        if not len(cand):
+            return
+        cand_pts = pts[cand]
+        if self.entries:
+            dead = _dominated_mask(self.pts, cand_pts)
+            if dead.any():
+                alive = ~dead
+                self.pts = self.pts[alive]
+                self.entries = [e for e, a in zip(self.entries, alive) if a]
+        t = res.totals
+        for li in cand.tolist():
+            self.entries.append((offset + li, table.name(li), float(t[li]),
+                                 res[li]))
+        self.pts = np.concatenate([self.pts, cand_pts], axis=0)
+
+    def merge(self, other: "ParetoStream") -> None:
+        if not other.entries:
+            return
+        if not self.entries:
+            self.pts, self.entries = other.pts, other.entries
+            return
+        mine_dead = _dominated_mask(self.pts, other.pts)
+        theirs_dead = _dominated_mask(other.pts, self.pts)
+        self.pts = np.concatenate([self.pts[~mine_dead],
+                                   other.pts[~theirs_dead]], axis=0)
+        self.entries = \
+            [e for e, d in zip(self.entries, mine_dead) if not d] + \
+            [e for e, d in zip(other.entries, theirs_dead) if not d]
+
+    def result(self) -> List[SweepWinner]:
+        def key(j):
+            v = self.pts[j, 0]
+            # stable-argsort order: finite ascending, NaN last by index
+            if math.isnan(v):
+                return (1, 0.0, self.entries[j][0])
+            return (0, float(v), self.entries[j][0])
+
+        order = sorted(range(len(self.entries)), key=key)
+        return [SweepWinner(index=self.entries[j][0],
+                            name=self.entries[j][1],
+                            total=self.entries[j][2],
+                            breakdown=self.entries[j][3]) for j in order]
+
+
+class TotalsStream:
+    """Collects the (calibrated) totals column chunk by chunk — the
+    streaming analogue of ``TableResult.totals`` for consumers that need
+    every row's total (validation suites) but not the result columns."""
+
+    def __init__(self):
+        self._parts: List[Tuple[int, np.ndarray]] = []
+
+    def update(self, offset: int, table: WorkloadTable,
+               res: TableResult) -> None:
+        self._parts.append((offset, res.totals))
+
+    def merge(self, other: "TotalsStream") -> None:
+        self._parts.extend(other._parts)
+
+    def result(self) -> np.ndarray:
+        if not self._parts:
+            return np.empty(0)
+        return np.concatenate([p for _, p in sorted(self._parts,
+                                                    key=lambda x: x[0])])
+
+
+def reduce_stream(source, hw: HardwareParams, reducers: Sequence, *,
+                  chunk_size: Optional[int] = None,
+                  model: Optional[str] = None,
+                  calibration: Optional[object] = None,
+                  engine: Optional[SweepEngine] = None,
+                  lo: int = 0, hi: Optional[int] = None,
+                  offset_base: int = 0) -> Sequence:
+    """Price ``source`` chunk by chunk and fold every chunk into the given
+    reducers.  Peak memory is O(chunk): one chunk's columns + its result
+    columns are live at a time; nothing is memoized (``cache=False``).
+
+    ``offset_base`` shifts the reducers' global row numbering — sharded
+    workers that hold only a window of the full lattice pass the window's
+    global start so merged winners keep full-lattice indices."""
+    spec = as_spec(source)
+    eng = engine or default_engine()
+    size = int(chunk_size or DEFAULT_CHUNK_ROWS)
+    offset = offset_base + lo
+    for chunk in spec.chunks(size, lo=lo, hi=hi):
+        res = eng.predict_table(chunk, hw, model=model,
+                                calibration=calibration, cache=False)
+        for r in reducers:
+            r.update(offset, chunk, res)
+        offset += len(chunk)
+    return reducers
+
+
+def _run_reducers(source, hw: HardwareParams,
+                  factories: Sequence[Callable[[], object]], *,
+                  chunk_size: Optional[int], model: Optional[str],
+                  calibration: Optional[object],
+                  engine: Optional[SweepEngine], jobs) -> Sequence:
+    njobs = effective_jobs(jobs)
+    if njobs > 1:
+        from . import parallel
+        return parallel.reduce_sharded(
+            source, hw, factories, jobs=njobs, chunk_size=chunk_size,
+            model=model, calibration=calibration)
+    return reduce_stream(source, hw, [f() for f in factories],
+                         chunk_size=chunk_size, model=model,
+                         calibration=calibration, engine=engine)
+
+
+def argmin_stream(source, hw: HardwareParams, *,
+                  chunk_size: Optional[int] = None,
+                  model: Optional[str] = None,
+                  calibration: Optional[object] = None,
+                  engine: Optional[SweepEngine] = None,
+                  jobs=None) -> SweepWinner:
+    """Streaming argmin over a LatticeSpec or WorkloadTable — bit-identical
+    winner to ``argmin_table`` on the materialized lattice, peak memory
+    O(chunk).  ``jobs`` > 1 (or 0/"auto" for ``os.cpu_count()``) shards the
+    lattice across a worker pool (``core.parallel``)."""
+    (red,) = _run_reducers(source, hw, [ArgminStream],
+                           chunk_size=chunk_size, model=model,
+                           calibration=calibration, engine=engine, jobs=jobs)
+    return red.result()
+
+
+def topk_stream(source, hw: HardwareParams, k: int, *,
+                chunk_size: Optional[int] = None,
+                model: Optional[str] = None,
+                calibration: Optional[object] = None,
+                engine: Optional[SweepEngine] = None,
+                jobs=None) -> List[SweepWinner]:
+    """Streaming top-k cheapest (bounded heap) — bit-identical list to
+    ``topk_table`` including tie order."""
+    (red,) = _run_reducers(source, hw, [partial(TopkStream, k)],
+                           chunk_size=chunk_size, model=model,
+                           calibration=calibration, engine=engine, jobs=jobs)
+    return red.result()
+
+
+def pareto_stream(source, hw: HardwareParams, *,
+                  objectives: Sequence[str] = ("compute", "memory"),
+                  chunk_size: Optional[int] = None,
+                  model: Optional[str] = None,
+                  calibration: Optional[object] = None,
+                  engine: Optional[SweepEngine] = None,
+                  jobs=None) -> List[SweepWinner]:
+    """Streaming pareto frontier (incremental) — bit-identical front and
+    ordering to ``pareto_table``."""
+    (red,) = _run_reducers(source, hw,
+                           [partial(ParetoStream, tuple(objectives))],
+                           chunk_size=chunk_size, model=model,
+                           calibration=calibration, engine=engine, jobs=jobs)
+    return red.result()
+
+
+def predict_totals_stream(source, hw: HardwareParams, *,
+                          chunk_size: Optional[int] = None,
+                          model: Optional[str] = None,
+                          calibration: Optional[object] = None,
+                          engine: Optional[SweepEngine] = None,
+                          jobs=None) -> np.ndarray:
+    """Every row's (calibrated) total, streamed — same floats as
+    ``predict_table(...).totals`` with intermediates bounded by chunk."""
+    (red,) = _run_reducers(source, hw, [TotalsStream],
+                           chunk_size=chunk_size, model=model,
+                           calibration=calibration, engine=engine, jobs=jobs)
+    return red.result()

@@ -96,22 +96,47 @@ def validate_suite(platform_hw: HardwareParams,
                    workloads: Sequence[Workload],
                    measured: Sequence[float], *,
                    calibration=None,
-                   model: Optional[str] = None) -> ValidationReport:
+                   model: Optional[str] = None,
+                   chunk_size: Optional[int] = None,
+                   jobs=None) -> ValidationReport:
     """Run model + naive roofline over a suite with known measured times.
 
     The suite is lifted into one columnar ``WorkloadTable`` and priced
     through the shared SweepEngine's table path — one column query per
     route, memoized whole, so repeated validation of the same suite is a
     single content-token hit per route.
+
+    ``chunk_size``/``jobs`` switch pricing to the streaming/sharded
+    executor (``core.sweep.predict_totals_stream``): peak memory bounded
+    by chunk, throughput scaled across workers (0/"auto" =
+    ``os.cpu_count()``) — identical totals either way, so arbitrarily
+    large suites validate without materializing result columns.
     """
     from . import sweep
     from .workload import WorkloadTable
     assert len(workloads) == len(measured)
     table = WorkloadTable.from_workloads(workloads)
-    t_models = sweep.predict_table(
-        table, platform_hw, model=model, calibration=calibration).totals
-    t_roofs = sweep.predict_table(table, platform_hw,
-                                  model="roofline").totals
+    if chunk_size is None and jobs is None:
+        t_models = sweep.predict_table(
+            table, platform_hw, model=model, calibration=calibration).totals
+        t_roofs = sweep.predict_table(table, platform_hw,
+                                      model="roofline").totals
+    elif sweep.effective_jobs(jobs) > 1:
+        # one pool + one shared-memory export prices both routes per shard
+        from . import parallel
+        (m_red,), (r_red,) = parallel.reduce_sharded_multi(
+            table, platform_hw,
+            [((sweep.TotalsStream,), model, calibration),
+             ((sweep.TotalsStream,), "roofline", None)],
+            jobs=jobs, chunk_size=chunk_size)
+        t_models = m_red.result()
+        t_roofs = r_red.result()
+    else:
+        t_models = sweep.predict_totals_stream(
+            table, platform_hw, model=model, calibration=calibration,
+            chunk_size=chunk_size)
+        t_roofs = sweep.predict_totals_stream(
+            table, platform_hw, model="roofline", chunk_size=chunk_size)
     rep = ValidationReport(platform=platform_hw.name)
     for w, t_meas, t_model, t_roof in zip(workloads, measured,
                                           t_models, t_roofs):

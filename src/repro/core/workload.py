@@ -14,11 +14,24 @@ import dataclasses
 import hashlib
 import struct
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Dict, Iterator, List, Optional, Sequence, Tuple
 
 import numpy as np
 
 VALID_CLASSES = ("memory", "compute", "balanced", "stencil")
+
+#: default streaming chunk (rows) — ~1.7 MB of columns so chunk + result
+#: columns stay LLC-resident (measured optimum: 8192-row chunks stream a
+#: 1M-row lattice ~4x faster than materialize-then-reduce, which pays a
+#: DRAM round-trip per column op; see benchmarks/sweep_bench.py), while
+#: still amortizing per-chunk NumPy dispatch to noise.
+DEFAULT_CHUNK_ROWS = 8_192
+
+#: hard ceiling on one-shot materialization (``LatticeSpec.materialize`` /
+#: ``WorkloadTable.cartesian``): beyond this the cartesian product is a
+#: host-OOM, not a table.  Streaming (``LatticeSpec.chunks`` + the
+#: ``core.sweep`` *_stream reductions) has no such bound.
+MAX_MATERIALIZE_ROWS = 2 ** 31
 
 # Layout of the packed numeric vector stashed on every Workload (column
 # indices into the float64 matrix the batch backends build with one
@@ -420,12 +433,12 @@ class WorkloadTable:
 
     __slots__ = ("cols", "precision_codes", "precision_vocab",
                  "wclass_codes", "wclass_vocab", "names", "hit_rates",
-                 "_token")
+                 "name_offset", "_token")
 
     def __init__(self, cols: np.ndarray, precision_codes: np.ndarray,
                  precision_vocab: Tuple[str, ...],
                  wclass_codes: np.ndarray, wclass_vocab: Tuple[str, ...],
-                 names=None, hit_rates=None):
+                 names=None, hit_rates=None, name_offset: int = 0):
         self.cols = cols
         self.precision_codes = precision_codes
         self.precision_vocab = precision_vocab
@@ -433,6 +446,10 @@ class WorkloadTable:
         self.wclass_vocab = wclass_vocab
         self.names = names          # tuple per-row | shared str | None
         self.hit_rates = hit_rates  # None | tuple of (dict | None)
+        # chunk tables cut from a larger lattice keep their global row
+        # numbering through this offset, so streamed winners carry the same
+        # names a full materialization would
+        self.name_offset = name_offset
         self._token = None
         if cols.flags.writeable:
             cols.flags.writeable = False
@@ -448,7 +465,7 @@ class WorkloadTable:
     def name(self, i: int) -> str:
         if isinstance(self.names, tuple):
             return self.names[i]
-        return f"{self.names or 'table'}#{i}"
+        return f"{self.names or 'table'}#{i + self.name_offset}"
 
     def content_token(self) -> Tuple:
         """Hashable content identity (what the engine's whole-table cache is
@@ -494,6 +511,31 @@ class WorkloadTable:
         return vals[self.wclass_codes]
 
     # ------------------------------------------------------------- views
+    def _slice(self, lo: int, hi: int) -> "WorkloadTable":
+        """Contiguous zero-copy row window [lo, hi); the cut keeps global
+        row naming via ``name_offset``."""
+        names = self.names
+        offset = 0
+        if isinstance(names, tuple):
+            names = names[lo:hi]
+        else:
+            offset = self.name_offset + lo
+        hr = self.hit_rates
+        if hr is not None:
+            hr = hr[lo:hi]
+        return WorkloadTable(
+            self.cols[lo:hi], self.precision_codes[lo:hi],
+            self.precision_vocab, self.wclass_codes[lo:hi],
+            self.wclass_vocab, names, hr, name_offset=offset)
+
+    def chunks(self, size: int = DEFAULT_CHUNK_ROWS
+               ) -> Iterator["WorkloadTable"]:
+        """Yield contiguous row windows of ``size`` rows (zero-copy views)
+        — the streaming unit for tables that are already built."""
+        size = max(int(size), 1)
+        for lo in range(0, len(self), size):
+            yield self._slice(lo, min(lo + size, len(self)))
+
     def take(self, idx: np.ndarray) -> "WorkloadTable":
         """Row-subset table (mixed-route splits inside the backends)."""
         names = self.names
@@ -565,26 +607,7 @@ class WorkloadTable:
         ``cdna3._retile`` per candidate, with the derived grid quantities
         (num_ctas, k_tiles, bytes_per_cta) recomputed vectorized when the
         base carries a GEMM shape."""
-        from .hardware import BYTES_PER_ELEM
-        n = len(tiles)
-        t = cls._from_base(base, n)
-        cols = t.cols
-        cols.flags.writeable = True
-        bm = np.array([c.bm for c in tiles], dtype=np.int64)
-        bn = np.array([c.bn for c in tiles], dtype=np.int64)
-        bk = np.array([c.bk for c in tiles], dtype=np.int64)
-        cols[:, NV_BM] = bm
-        cols[:, NV_BN] = bn
-        cols[:, NV_BK] = bk
-        cols[:, NV_HAS_TILE] = 1.0
-        if base.gemm is not None:
-            g = base.gemm
-            cols[:, NV_NUM_CTAS] = (-(-g.m // bm)) * (-(-g.n // bn))
-            cols[:, NV_K_TILES] = -(-g.k // bk)
-            in_b = BYTES_PER_ELEM[base.precision]
-            cols[:, NV_BYTES_PER_CTA] = (bm * bk + bk * bn) * in_b
-        cols.flags.writeable = False
-        return t
+        return LatticeSpec.tile_lattice(base, tiles).materialize()
 
     @classmethod
     def cartesian(cls, base: Workload, **field_grids) -> "WorkloadTable":
@@ -595,55 +618,11 @@ class WorkloadTable:
         (TileConfig — sets the raw bM/bN/bK columns only; use
         ``tile_lattice`` when the GEMM grid quantities must follow the
         tile).  Row order is C-order over the grids in keyword order.
+
+        Refuses grids beyond ``MAX_MATERIALIZE_ROWS`` — build the
+        ``LatticeSpec`` instead and stream it chunk-wise.
         """
-        keys = list(field_grids)
-        grids = [list(field_grids[k]) for k in keys]
-        sizes = [len(g) for g in grids]
-        n = 1
-        for s in sizes:
-            n *= s
-        if n == 0:
-            raise ValueError("empty cartesian grid")
-        t = cls._from_base(base, n)
-        cols = t.cols
-        cols.flags.writeable = True
-        idx = np.indices(sizes).reshape(len(sizes), -1)
-        prec_codes, prec_vocab = t.precision_codes, t.precision_vocab
-        wcls_codes, wcls_vocab = t.wclass_codes, t.wclass_vocab
-        for dim, (key, vals) in enumerate(zip(keys, grids)):
-            take = idx[dim]
-            if key == "precision":
-                codes, vocab = _encode([str(v) for v in vals])
-                prec_codes, prec_vocab = codes[take], vocab
-            elif key == "wclass":
-                for v in vals:
-                    if v not in VALID_CLASSES:
-                        raise ValueError(f"workload class {v!r} not in "
-                                         f"{VALID_CLASSES}")
-                codes, vocab = _encode([str(v) for v in vals])
-                wcls_codes, wcls_vocab = codes[take], vocab
-            elif key == "tile":
-                cols[:, NV_BM] = np.array([c.bm for c in vals],
-                                          dtype=np.float64)[take]
-                cols[:, NV_BN] = np.array([c.bn for c in vals],
-                                          dtype=np.float64)[take]
-                cols[:, NV_BK] = np.array([c.bk for c in vals],
-                                          dtype=np.float64)[take]
-                cols[:, NV_HAS_TILE] = 1.0
-            elif key in CARTESIAN_COLS:
-                arr = np.array(vals, dtype=np.float64)[take]
-                cols[:, CARTESIAN_COLS[key]] = arr
-            else:
-                raise ValueError(
-                    f"cartesian cannot sweep field {key!r}; valid: "
-                    f"{sorted(CARTESIAN_COLS)} + precision/wclass/tile")
-        if "bytes" in field_grids or "working_set_bytes" in field_grids:
-            ws_col = cols[:, NV_WS]
-            cols[:, NV_WS_OR_BYTES] = np.where(ws_col != 0, ws_col,
-                                               cols[:, NV_BYTES])
-        cols.flags.writeable = False
-        return cls(cols, prec_codes, prec_vocab, wcls_codes, wcls_vocab,
-                   base.name, t.hit_rates)
+        return LatticeSpec.cartesian(base, **field_grids).materialize()
 
     @classmethod
     def concat(cls, tables: Sequence["WorkloadTable"]) -> "WorkloadTable":
@@ -674,6 +653,281 @@ class WorkloadTable:
                 h for t in tables
                 for h in (t.hit_rates or (None,) * len(t)))
         return cls(cols, pc, pv, wc, wv, names, hit_rates)
+
+
+# ---------------------------------------------------------------------------
+# LatticeSpec: lazy sweep plans.
+#
+# A spec knows ``n_rows`` without materializing anything and yields
+# WorkloadTable chunks via vectorized index arithmetic (divmod of the global
+# row index into grid coordinates, written straight into preallocated column
+# buffers — no per-row Python).  Chunks are row-for-row, byte-for-byte
+# identical to the corresponding window of the materialized table, so the
+# streaming reductions in ``core.sweep`` return bit-identical winners.
+# Specs are small (a base workload + grid arrays) and picklable, which is
+# what lets ``core.parallel`` ship them to worker processes instead of
+# shipping columns.
+# ---------------------------------------------------------------------------
+
+class LatticeSpec:
+    """Lazy description of a sweep lattice (cartesian / tile-lattice /
+    concat algebra over ``WorkloadTable`` construction)."""
+
+    @property
+    def n_rows(self) -> int:
+        raise NotImplementedError
+
+    def __len__(self) -> int:
+        return self.n_rows
+
+    def chunk(self, lo: int, hi: int) -> WorkloadTable:
+        """Materialize rows [lo, hi) as a WorkloadTable (bit-identical to
+        the same window of ``materialize()``).  Raises on windows outside
+        [0, n_rows] — a silently wrapped window would price phantom rows."""
+        raise NotImplementedError
+
+    def _check_window(self, lo: int, hi: int) -> None:
+        if not 0 <= lo <= hi <= self.n_rows:
+            raise ValueError(
+                f"chunk window [{lo}, {hi}) outside lattice rows "
+                f"[0, {self.n_rows})")
+
+    def _has_row_names(self) -> bool:
+        """True when chunks carry per-row name tuples (mirrors
+        ``WorkloadTable.concat``'s naming rule)."""
+        return False
+
+    def estimated_bytes(self) -> int:
+        """Estimated resident size of the fully materialized columns."""
+        per_row = NV_COLS * 8 + 2 * np.dtype(np.intp).itemsize
+        return self.n_rows * per_row
+
+    def chunks(self, size: int = DEFAULT_CHUNK_ROWS, lo: int = 0,
+               hi: Optional[int] = None) -> Iterator[WorkloadTable]:
+        """Yield chunk tables of ``size`` rows covering [lo, hi)."""
+        size = max(int(size), 1)
+        hi = self.n_rows if hi is None else min(hi, self.n_rows)
+        for start in range(lo, hi, size):
+            yield self.chunk(start, min(start + size, hi))
+
+    def materialize(self) -> WorkloadTable:
+        """One-shot table build; refuses lattices beyond
+        ``MAX_MATERIALIZE_ROWS`` instead of OOM-killing the host."""
+        n = self.n_rows
+        if n > MAX_MATERIALIZE_ROWS:
+            est = self.estimated_bytes()
+            raise ValueError(
+                f"materializing this lattice needs {n:,} rows "
+                f"(~{est / 1e9:,.1f} GB of columns, > "
+                f"{MAX_MATERIALIZE_ROWS:,} rows); keep it as a LatticeSpec "
+                f"and stream it instead (LatticeSpec.chunks or the "
+                f"core.sweep argmin_stream/topk_stream/pareto_stream "
+                f"reductions, optionally sharded via core.parallel)")
+        return self.chunk(0, n)
+
+    # --------------------------------------------------------- constructors
+    @staticmethod
+    def cartesian(base: Workload, **field_grids) -> "LatticeSpec":
+        """Lazy cross-product over Workload fields (same grid keys and row
+        order as ``WorkloadTable.cartesian``)."""
+        return _CartesianSpec(base, field_grids)
+
+    @staticmethod
+    def tile_lattice(base: Workload,
+                     tiles: Sequence[TileConfig]) -> "LatticeSpec":
+        """Lazy per-candidate re-tiling of ``base`` (same semantics as
+        ``WorkloadTable.tile_lattice``)."""
+        return _TileLatticeSpec(base, tiles)
+
+    @staticmethod
+    def concat(specs: Sequence["LatticeSpec"]) -> "LatticeSpec":
+        """Row-wise stack of specs (and/or tables via ``from_table``)."""
+        return _ConcatSpec(specs)
+
+    @staticmethod
+    def from_table(table: WorkloadTable) -> "LatticeSpec":
+        """Wrap an already-built table so it streams through the same
+        chunked machinery (zero-copy row windows)."""
+        return _TableSpec(table)
+
+
+class _CartesianSpec(LatticeSpec):
+    """Cartesian grid: each chunk decodes global row indices into per-axis
+    grid coordinates with one divmod per axis."""
+
+    def __init__(self, base: Workload, field_grids: Dict):
+        self.base = base
+        self.keys = tuple(field_grids)
+        sizes = []
+        prepped = []
+        for key in self.keys:
+            vals = list(field_grids[key])
+            if key == "precision":
+                codes, vocab = _encode([str(v) for v in vals])
+                prepped.append(("precision", codes, vocab))
+            elif key == "wclass":
+                for v in vals:
+                    if v not in VALID_CLASSES:
+                        raise ValueError(f"workload class {v!r} not in "
+                                         f"{VALID_CLASSES}")
+                codes, vocab = _encode([str(v) for v in vals])
+                prepped.append(("wclass", codes, vocab))
+            elif key == "tile":
+                prepped.append((
+                    "tile",
+                    np.array([c.bm for c in vals], dtype=np.float64),
+                    np.array([c.bn for c in vals], dtype=np.float64),
+                    np.array([c.bk for c in vals], dtype=np.float64)))
+            elif key in CARTESIAN_COLS:
+                prepped.append(("col", CARTESIAN_COLS[key],
+                                np.array(vals, dtype=np.float64)))
+            else:
+                raise ValueError(
+                    f"cartesian cannot sweep field {key!r}; valid: "
+                    f"{sorted(CARTESIAN_COLS)} + precision/wclass/tile")
+            sizes.append(len(vals))
+        n = 1
+        for s in sizes:
+            n *= s
+        if n == 0:
+            raise ValueError("empty cartesian grid")
+        self._n = n
+        self._sizes = sizes
+        strides = []
+        acc = 1
+        for s in reversed(sizes):
+            strides.append(acc)
+            acc *= s
+        self._strides = list(reversed(strides))
+        self._prepped = prepped
+        self._ws_fix = ("bytes" in field_grids
+                        or "working_set_bytes" in field_grids)
+
+    @property
+    def n_rows(self) -> int:
+        return self._n
+
+    def chunk(self, lo: int, hi: int) -> WorkloadTable:
+        self._check_window(lo, hi)
+        base = self.base
+        t = WorkloadTable._from_base(base, hi - lo)
+        cols = t.cols
+        cols.flags.writeable = True
+        ridx = np.arange(lo, hi, dtype=np.intp)
+        prec_codes, prec_vocab = t.precision_codes, t.precision_vocab
+        wcls_codes, wcls_vocab = t.wclass_codes, t.wclass_vocab
+        for size, stride, prep in zip(self._sizes, self._strides,
+                                      self._prepped):
+            take = (ridx // stride) % size
+            kind = prep[0]
+            if kind == "precision":
+                prec_codes, prec_vocab = prep[1][take], prep[2]
+            elif kind == "wclass":
+                wcls_codes, wcls_vocab = prep[1][take], prep[2]
+            elif kind == "tile":
+                cols[:, NV_BM] = prep[1][take]
+                cols[:, NV_BN] = prep[2][take]
+                cols[:, NV_BK] = prep[3][take]
+                cols[:, NV_HAS_TILE] = 1.0
+            else:
+                cols[:, prep[1]] = prep[2][take]
+        if self._ws_fix:
+            ws_col = cols[:, NV_WS]
+            cols[:, NV_WS_OR_BYTES] = np.where(ws_col != 0, ws_col,
+                                               cols[:, NV_BYTES])
+        cols.flags.writeable = False
+        return WorkloadTable(cols, prec_codes, prec_vocab, wcls_codes,
+                             wcls_vocab, base.name, t.hit_rates,
+                             name_offset=lo)
+
+
+class _TileLatticeSpec(LatticeSpec):
+    def __init__(self, base: Workload, tiles: Sequence[TileConfig]):
+        self.base = base
+        self._bm = np.array([c.bm for c in tiles], dtype=np.int64)
+        self._bn = np.array([c.bn for c in tiles], dtype=np.int64)
+        self._bk = np.array([c.bk for c in tiles], dtype=np.int64)
+
+    @property
+    def n_rows(self) -> int:
+        return len(self._bm)
+
+    def chunk(self, lo: int, hi: int) -> WorkloadTable:
+        self._check_window(lo, hi)
+        from .hardware import BYTES_PER_ELEM
+        base = self.base
+        t = WorkloadTable._from_base(base, hi - lo)
+        cols = t.cols
+        cols.flags.writeable = True
+        bm, bn, bk = self._bm[lo:hi], self._bn[lo:hi], self._bk[lo:hi]
+        cols[:, NV_BM] = bm
+        cols[:, NV_BN] = bn
+        cols[:, NV_BK] = bk
+        cols[:, NV_HAS_TILE] = 1.0
+        if base.gemm is not None:
+            g = base.gemm
+            cols[:, NV_NUM_CTAS] = (-(-g.m // bm)) * (-(-g.n // bn))
+            cols[:, NV_K_TILES] = -(-g.k // bk)
+            in_b = BYTES_PER_ELEM[base.precision]
+            cols[:, NV_BYTES_PER_CTA] = (bm * bk + bk * bn) * in_b
+        cols.flags.writeable = False
+        t.name_offset = lo
+        return t
+
+
+class _TableSpec(LatticeSpec):
+    def __init__(self, table: WorkloadTable):
+        self.table = table
+
+    @property
+    def n_rows(self) -> int:
+        return len(self.table)
+
+    def _has_row_names(self) -> bool:
+        return isinstance(self.table.names, tuple)
+
+    def chunk(self, lo: int, hi: int) -> WorkloadTable:
+        self._check_window(lo, hi)
+        return self.table._slice(lo, hi)
+
+    def materialize(self) -> WorkloadTable:
+        return self.table
+
+
+class _ConcatSpec(LatticeSpec):
+    def __init__(self, specs: Sequence[LatticeSpec]):
+        if not specs:
+            raise ValueError("concat of zero specs")
+        self.specs = list(specs)
+        self._offsets = [0]
+        for s in self.specs:
+            self._offsets.append(self._offsets[-1] + s.n_rows)
+        self._row_names = all(s._has_row_names() for s in self.specs)
+
+    @property
+    def n_rows(self) -> int:
+        return self._offsets[-1]
+
+    def _has_row_names(self) -> bool:
+        return self._row_names
+
+    def chunk(self, lo: int, hi: int) -> WorkloadTable:
+        self._check_window(lo, hi)
+        parts = []
+        for child, start, end in zip(self.specs, self._offsets,
+                                     self._offsets[1:]):
+            a, b = max(lo, start), min(hi, end)
+            if a < b:
+                parts.append(child.chunk(a - start, b - start))
+        if not parts:                       # empty window (lo == hi)
+            parts = [self.specs[0].chunk(0, 0)]
+        t = parts[0] if len(parts) == 1 else WorkloadTable.concat(parts)
+        if not self._row_names:
+            # mirror WorkloadTable.concat naming ("table#<global row>")
+            # regardless of which children this window happens to touch
+            t.names = None
+            t.name_offset = lo
+        return t
 
 
 def gemm_workload(name: str, m: int, n: int, k: int, *,

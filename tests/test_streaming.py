@@ -1,0 +1,480 @@
+"""Streaming sharded sweep tests.
+
+Covers: LatticeSpec lazy construction (cartesian / tile-lattice / concat)
+chunk-for-chunk byte parity with the materialized tables, the >2^31-row
+materialization guard, streamed argmin/topk/pareto bit-identity with the
+fused table reductions on all five routes (including ties landing exactly
+on chunk boundaries and chunk sizes of 1 and > n_rows), tracemalloc-
+verified O(chunk) peak memory, the sharded executor (process pool,
+shared-memory tables, threaded fallback, worker-crash surfacing) and the
+fork-safety of the module-level default engine."""
+import os
+import tracemalloc
+
+import numpy as np
+import pytest
+
+from repro.core import autotune, collectives, hardware, parallel, sweep, \
+    validate
+from repro.core.workload import LatticeSpec, MAX_MATERIALIZE_ROWS, \
+    TileConfig, WorkloadTable, gemm_workload, streaming_workload
+from tests.test_sweep import HW_ALL, mixed_workloads, routes_for
+
+needs_procs = pytest.mark.skipif(not parallel.processes_available(),
+                                 reason="worker processes unavailable")
+
+
+def fresh_engine():
+    return sweep.SweepEngine(use_cache=False)
+
+
+def big_cartesian(n_side=16):
+    base = gemm_workload("lat", 8192, 8192, 8192, precision="fp16")
+    return LatticeSpec.cartesian(
+        base,
+        k_tiles=[8 + 4 * i for i in range(n_side)],
+        num_ctas=[32 + 8 * i for i in range(n_side)],
+        tma_participants=[1, 2, 4, 8])
+
+
+def same_winner(a, b):
+    return (a.index == b.index and a.total == b.total and a.name == b.name
+            and a.breakdown == b.breakdown
+            and a.breakdown.detail == b.breakdown.detail)
+
+
+def same_winners(xs, ys):
+    return len(xs) == len(ys) and all(same_winner(a, b)
+                                      for a, b in zip(xs, ys))
+
+
+class TestLatticeSpec:
+    def test_cartesian_spec_matches_materialized(self):
+        base = streaming_workload("s", 1e9)
+        grids = dict(bytes=[1e6, 1e9, 1e12], precision=["fp32", "fp64"],
+                     wclass=["memory", "compute"],
+                     tile=[TileConfig(64, 64, 16), TileConfig(128, 128, 32)],
+                     concurrent_kernels=[1, 2, 4])
+        spec = LatticeSpec.cartesian(base, **grids)
+        full = WorkloadTable.cartesian(base, **grids)
+        assert spec.n_rows == len(full) == 72
+        mat = spec.materialize()
+        assert np.array_equal(mat.cols, full.cols)
+        for size in (1, 7, spec.n_rows, spec.n_rows + 9):
+            parts = list(spec.chunks(size))
+            assert np.array_equal(np.vstack([p.cols for p in parts]),
+                                  full.cols)
+            assert [p.name(i) for p in parts for i in range(len(p))] \
+                == [full.name(i) for i in range(len(full))]
+            assert [p.precision_vocab[c] for p in parts
+                    for c in p.precision_codes] \
+                == [full.precision_vocab[c] for c in full.precision_codes]
+            assert [p.wclass_vocab[c] for p in parts
+                    for c in p.wclass_codes] \
+                == [full.wclass_vocab[c] for c in full.wclass_codes]
+
+    def test_cartesian_spec_rejects_unknown_field(self):
+        with pytest.raises(ValueError, match="cannot sweep field"):
+            LatticeSpec.cartesian(streaming_workload("s", 1e9), gemm=[None])
+
+    def test_tile_lattice_spec_matches_table(self):
+        base = gemm_workload("g", 4000, 4096, 4096, precision="fp16")
+        tiles = [TileConfig(bm, bn, bk) for bm in (64, 128, 512)
+                 for bn in (128, 256) for bk in (16, 64)]
+        spec = LatticeSpec.tile_lattice(base, tiles)
+        full = WorkloadTable.tile_lattice(base, tiles)
+        assert np.array_equal(spec.materialize().cols, full.cols)
+        parts = list(spec.chunks(5))
+        assert np.array_equal(np.vstack([p.cols for p in parts]), full.cols)
+        assert [p.name(i) for p in parts for i in range(len(p))] \
+            == [full.name(i) for i in range(len(full))]
+
+    def test_concat_spec_matches_materialized(self):
+        base = gemm_workload("g", 2048, 2048, 2048, precision="fp16")
+        children = [
+            LatticeSpec.cartesian(base, k_tiles=[1, 2, 3, 4, 5]),
+            LatticeSpec.from_table(WorkloadTable.from_workloads(
+                mixed_workloads(hardware.B200, n=9, seed=3))),
+            LatticeSpec.tile_lattice(base, [TileConfig(64, 64, 16),
+                                            TileConfig(256, 256, 64)]),
+        ]
+        spec = LatticeSpec.concat(children)
+        full = spec.materialize()
+        assert len(full) == 16
+        for size in (1, 4, 6, 16, 40):
+            parts = list(spec.chunks(size))
+            assert np.array_equal(np.vstack([p.cols for p in parts]),
+                                  full.cols), size
+            assert [p.name(i) for p in parts for i in range(len(p))] \
+                == [full.name(i) for i in range(len(full))], size
+            assert [p.precision_vocab[c] for p in parts
+                    for c in p.precision_codes] \
+                == [full.precision_vocab[c] for c in full.precision_codes]
+
+    def test_n_rows_without_materializing(self):
+        spec = LatticeSpec.cartesian(
+            streaming_workload("s", 1e9),
+            bytes=list(range(1 << 11)), num_loads=list(range(1 << 11)),
+            k_tiles=list(range(1 << 10)))
+        assert spec.n_rows == 1 << 32 > MAX_MATERIALIZE_ROWS
+        assert spec.estimated_bytes() > 2 ** 31 * 200
+        mid = spec.chunk(1 << 31, (1 << 31) + 4)   # lazy windows still work
+        assert len(mid) == 4
+
+    def test_materialize_guard_reports_bytes_and_streaming(self):
+        spec = LatticeSpec.cartesian(
+            streaming_workload("s", 1e9),
+            bytes=list(range(1 << 11)), num_loads=list(range(1 << 11)),
+            k_tiles=list(range(1 << 10)))
+        with pytest.raises(ValueError) as ei:
+            spec.materialize()
+        msg = str(ei.value)
+        assert "GB" in msg and "LatticeSpec" in msg and "stream" in msg
+        with pytest.raises(ValueError, match="LatticeSpec"):
+            WorkloadTable.cartesian(
+                streaming_workload("s", 1e9),
+                bytes=list(range(1 << 11)), num_loads=list(range(1 << 11)),
+                k_tiles=list(range(1 << 10)))
+
+    def test_table_chunks_are_global_named_views(self):
+        ws = mixed_workloads(hardware.B200, n=10, seed=5)
+        t = WorkloadTable.from_workloads(ws)
+        parts = list(t.chunks(4))
+        assert [len(p) for p in parts] == [4, 4, 2]
+        assert [p.name(0) for p in parts] == [ws[0].name, ws[4].name,
+                                              ws[8].name]
+        assert parts[1].cols.base is not None      # view, not a copy
+        lat = WorkloadTable.cartesian(streaming_workload("s", 1e9),
+                                      bytes=[1.0, 2.0, 3.0, 4.0, 5.0])
+        assert [p.name(0) for p in lat.chunks(2)] == ["s#0", "s#2", "s#4"]
+
+
+class TestStreamingParity:
+    @pytest.mark.parametrize("hw", HW_ALL, ids=lambda h: h.name)
+    def test_stream_reductions_bit_identical_every_route(self, hw):
+        ws = mixed_workloads(hw, n=45, seed=11)
+        # duplicates at rows 6/7 and 34/35: with chunk_size=7 the first tie
+        # straddles the 0|1 chunk boundary, the second the 4|5 boundary
+        ws[7] = ws[6].replace()
+        ws[35] = ws[34].replace()
+        table = WorkloadTable.from_workloads(ws)
+        for route in routes_for(hw):
+            ref_arg = sweep.argmin_table(table, hw, model=route,
+                                         engine=fresh_engine())
+            ref_topk = sweep.topk_table(table, hw, 9, model=route,
+                                        engine=fresh_engine())
+            ref_par = sweep.pareto_table(table, hw, model=route,
+                                         engine=fresh_engine())
+            for cs in (1, 7, len(ws), len(ws) + 13):
+                eng = fresh_engine()
+                assert same_winner(
+                    sweep.argmin_stream(table, hw, model=route,
+                                        chunk_size=cs, engine=eng), ref_arg)
+                assert same_winners(
+                    sweep.topk_stream(table, hw, 9, model=route,
+                                      chunk_size=cs, engine=eng), ref_topk)
+                assert same_winners(
+                    sweep.pareto_stream(table, hw, model=route,
+                                        chunk_size=cs, engine=eng), ref_par)
+
+    def test_all_tied_rows_resolve_to_lowest_indices(self):
+        w = gemm_workload("g", 2048, 2048, 2048, precision="fp16")
+        t = WorkloadTable.from_workloads([w] * 11)
+        assert sweep.argmin_stream(t, hardware.B200, chunk_size=3).index == 0
+        got = sweep.topk_stream(t, hardware.B200, 5, chunk_size=3)
+        assert [x.index for x in got] == [0, 1, 2, 3, 4]
+
+    def test_spec_stream_matches_materialized_table(self):
+        spec = big_cartesian(8)                     # 8*8*4 = 256 rows
+        table = spec.materialize()
+        hw = hardware.B200
+        ref = sweep.argmin_table(table, hw, engine=fresh_engine())
+        for jobs in (None, 1):
+            assert same_winner(
+                sweep.argmin_stream(spec, hw, chunk_size=37, jobs=jobs),
+                ref)
+        assert same_winners(
+            sweep.topk_stream(spec, hw, 6, chunk_size=37),
+            sweep.topk_table(table, hw, 6, engine=fresh_engine()))
+        assert same_winners(
+            sweep.pareto_stream(spec, hw, chunk_size=37),
+            sweep.pareto_table(table, hw, engine=fresh_engine()))
+
+    def test_totals_stream_matches_predict_table(self):
+        ws = mixed_workloads(hardware.MI300A, n=50, seed=13)
+        t = WorkloadTable.from_workloads(ws)
+        ref = fresh_engine().predict_table(t, hardware.MI300A).totals
+        got = sweep.predict_totals_stream(t, hardware.MI300A, chunk_size=7)
+        assert np.array_equal(got, ref)
+
+    def test_calibration_applied_identically(self):
+        from repro.core import calibrate
+        hw = hardware.B200
+        ws = mixed_workloads(hw, n=30, seed=17)
+        cal = calibrate.Calibration(per_case={ws[4].name: 2.5},
+                                    per_class={"memory": 1.5},
+                                    global_scale=0.5)
+        t = WorkloadTable.from_workloads(ws)
+        ref = sweep.topk_table(t, hw, 5, calibration=cal,
+                               engine=fresh_engine())
+        got = sweep.topk_stream(t, hw, 5, calibration=cal, chunk_size=4,
+                                engine=fresh_engine())
+        assert same_winners(got, ref)
+
+    def test_peak_memory_bounded_by_chunk(self):
+        spec = big_cartesian(64)                    # 64*64*4 = 16384 rows
+        full_bytes = spec.estimated_bytes()
+        tracemalloc.start()
+        try:
+            sweep.argmin_stream(spec, hardware.B200, chunk_size=512)
+            peak = tracemalloc.get_traced_memory()[1]
+        finally:
+            tracemalloc.stop()
+        # O(chunk), not O(n): far below the materialized column matrix
+        assert peak < full_bytes / 4, (peak, full_bytes)
+
+    def test_empty_stream_raises(self):
+        t = WorkloadTable.from_workloads(
+            mixed_workloads(hardware.B200, n=4, seed=1))._slice(0, 0)
+        with pytest.raises(ValueError, match="empty sweep"):
+            sweep.argmin_stream(t, hardware.B200)
+
+    def test_chunk_window_out_of_range_raises(self):
+        spec = big_cartesian(4)                     # 64 rows
+        for lo, hi in ((0, 65), (-1, 4), (70, 80), (5, 3)):
+            with pytest.raises(ValueError, match="window"):
+                spec.chunk(lo, hi)
+        concat = LatticeSpec.concat([spec, spec])
+        with pytest.raises(ValueError, match="window"):
+            concat.chunk(0, 129)
+        assert len(concat.chunk(5, 5)) == 0         # empty window is fine
+
+
+class _StubRes:
+    """Minimal TableResult stand-in for reducer-level unit tests."""
+
+    def __init__(self, totals):
+        self.totals = np.asarray(totals, dtype=np.float64)
+
+    def field_totals(self, field):
+        return self.totals
+
+    def __getitem__(self, i):
+        return ("tb", float(self.totals[i]))
+
+
+class _StubTable:
+    def name(self, i):
+        return f"t#{i}"
+
+
+def _feed(reducer, totals, chunk):
+    """Stream synthetic totals through a reducer in `chunk`-row pieces."""
+    table = _StubTable()
+    for lo in range(0, len(totals), chunk):
+        reducer.update(lo, table, _StubRes(totals[lo:lo + chunk]))
+    return reducer
+
+
+class TestReducerNaNSemantics:
+    """NumPy's reductions have specific NaN orderings (np.argmin returns
+    the first NaN; stable argsort puts NaNs last by index).  The streaming
+    reducers must replicate them or the bit-identity contract breaks on a
+    model bug that produces NaN."""
+
+    CASES = [
+        [5.0, 1.0, 7.0, 1.0, 3.0],
+        [5.0, float("nan"), 7.0, 1.0, 3.0],
+        [float("nan")] * 5,
+        [2.0, float("nan"), float("nan"), 0.5, float("nan"), 9.0],
+        [float("nan"), 4.0, 1.0],
+    ]
+
+    @pytest.mark.parametrize("totals", CASES)
+    @pytest.mark.parametrize("chunk", [1, 2, 10])
+    def test_argmin_matches_numpy(self, totals, chunk):
+        red = _feed(sweep.ArgminStream(), totals, chunk)
+        assert red.result().index == int(np.argmin(np.asarray(totals)))
+
+    @pytest.mark.parametrize("totals", CASES)
+    @pytest.mark.parametrize("chunk", [1, 2, 10])
+    def test_topk_matches_stable_argsort(self, totals, chunk):
+        for k in (1, 3, len(totals)):
+            red = _feed(sweep.TopkStream(k), totals, chunk)
+            ref = np.argsort(np.asarray(totals), kind="stable")[:k]
+            assert [w.index for w in red.result()] == ref.tolist(), \
+                (totals, chunk, k)
+
+    @pytest.mark.parametrize("totals", CASES)
+    def test_merge_matches_serial(self, totals):
+        half = len(totals) // 2
+        a = _feed(sweep.ArgminStream(), totals[:half], 2)
+        b = sweep.ArgminStream()
+        _feed_at(b, totals[half:], half, 2)
+        a.merge(b)
+        assert a.result().index == int(np.argmin(np.asarray(totals)))
+        ta = _feed(sweep.TopkStream(3), totals[:half], 2)
+        tb = sweep.TopkStream(3)
+        _feed_at(tb, totals[half:], half, 2)
+        ta.merge(tb)
+        ref = np.argsort(np.asarray(totals), kind="stable")[:3]
+        assert [w.index for w in ta.result()] == ref.tolist()
+
+    def test_pareto_nan_sorted_last_like_argsort(self):
+        pts = [3.0, float("nan"), 1.0, float("nan")]
+        red = _feed(sweep.ParetoStream(objectives=("total",)), pts, 2)
+        # no point dominates another through a NaN comparison, so every
+        # row survives; ordering must match stable argsort (NaNs last)
+        got = [w.index for w in red.result()]
+        keep = np.flatnonzero(sweep._pareto_front_mask(
+            np.asarray(pts).reshape(-1, 1)))
+        ref = keep[np.argsort(np.asarray(pts)[keep], kind="stable")]
+        assert got == ref.tolist()
+
+
+def _feed_at(reducer, totals, base, chunk):
+    table = _StubTable()
+    for lo in range(0, len(totals), chunk):
+        reducer.update(base + lo, table, _StubRes(totals[lo:lo + chunk]))
+    return reducer
+
+
+def _child_engine_stats():
+    return sweep.default_engine().cache_stats()
+
+
+def _hard_exit():
+    os._exit(13)
+
+
+class TestShardedExecutor:
+    @needs_procs
+    def test_sharded_matches_serial(self):
+        spec = big_cartesian(16)                    # 1024 rows
+        table = spec.materialize()
+        hw = hardware.B200
+        assert same_winner(
+            sweep.argmin_stream(spec, hw, chunk_size=64, jobs=2),
+            sweep.argmin_table(table, hw, engine=fresh_engine()))
+        assert same_winners(
+            sweep.topk_stream(spec, hw, 7, chunk_size=64, jobs=2),
+            sweep.topk_table(table, hw, 7, engine=fresh_engine()))
+        assert same_winners(
+            sweep.pareto_stream(spec, hw, chunk_size=64, jobs=2),
+            sweep.pareto_table(table, hw, engine=fresh_engine()))
+
+    @needs_procs
+    def test_shared_memory_table_path(self):
+        ws = mixed_workloads(hardware.B200, n=120, seed=23)
+        table = WorkloadTable.from_workloads(ws)
+        shared = parallel.SharedTable(table)
+        try:
+            view, shms = parallel.SharedTable.attach(shared.handle)
+            assert np.array_equal(view.cols, table.cols)
+            assert view.name(5) == table.name(5)
+            for s in shms:
+                s.close()
+        finally:
+            shared.close(unlink=True)
+        # end to end: table input -> shm transport -> sharded reduction
+        assert same_winner(
+            sweep.argmin_stream(table, hardware.B200, chunk_size=16,
+                                jobs=2),
+            sweep.argmin_table(table, hardware.B200,
+                               engine=fresh_engine()))
+
+    def test_threaded_fallback_matches(self):
+        spec = big_cartesian(8)
+        red = parallel.reduce_sharded(
+            spec, hardware.B200, [sweep.ArgminStream], jobs=2,
+            chunk_size=32, use_threads=True)
+        assert same_winner(
+            red[0].result(),
+            sweep.argmin_table(spec.materialize(), hardware.B200,
+                               engine=fresh_engine()))
+
+    @needs_procs
+    def test_worker_exception_surfaces(self):
+        table = WorkloadTable.from_workloads(
+            mixed_workloads(hardware.B200, n=64, seed=29))
+        with pytest.raises(ValueError, match="unknown model route"):
+            sweep.argmin_stream(table, hardware.B200, chunk_size=8,
+                                jobs=2, model="nope")
+
+    @needs_procs
+    def test_worker_hard_crash_surfaces(self):
+        from concurrent.futures.process import BrokenProcessPool
+        with pytest.raises(BrokenProcessPool):
+            parallel.map_jobs(_hard_exit, [(), ()], jobs=2,
+                              use_threads=False)
+
+    @needs_procs
+    def test_fork_safe_default_engine_caches(self):
+        eng = sweep.default_engine()
+        table = WorkloadTable.from_workloads(
+            mixed_workloads(hardware.B200, n=24, seed=31))
+        eng.predict_table(table, hardware.B200)     # prime parent caches
+        before = eng.cache_stats()
+        assert before["table_entries"] >= 1
+        # forked workers must start with EMPTY caches (no copy-on-write
+        # reuse of parent state) ...
+        for child_stats in parallel.map_jobs(_child_engine_stats, [(), ()],
+                                             jobs=2, use_threads=False):
+            assert child_stats["entries"] == 0
+            assert child_stats["batch_entries"] == 0
+            assert child_stats["table_entries"] == 0
+            assert child_stats["hits"] == child_stats["misses"] == 0
+        # ... and a full sharded reduction must leave the parent's engine
+        # accounting untouched
+        sweep.argmin_stream(table, hardware.B200, chunk_size=8, jobs=2)
+        assert eng.cache_stats() == before
+
+    @needs_procs
+    def test_map_jobs_preserves_order(self):
+        got = parallel.map_jobs(_square, [(i,) for i in range(20)], jobs=2)
+        assert got == [i * i for i in range(20)]
+
+
+def _square(x):
+    return x * x
+
+
+class TestConsumersStreamed:
+    def test_select_tile_streamed_matches(self):
+        base = gemm_workload("sel", 4096, 4096, 4096, precision="fp16")
+        tiles = [TileConfig(bm, bn, bk) for bm in (64, 128, 256)
+                 for bn in (64, 128) for bk in (16, 32)]
+        ref = autotune.select_tile(base, hardware.B200, tiles,
+                                   engine=fresh_engine())
+        got = autotune.select_tile(base, hardware.B200, tiles,
+                                   chunk_size=5)
+        assert got == ref
+        assert autotune.enumerate_tiles(base, hardware.B200, tiles,
+                                        chunk_size=4) \
+            == autotune.enumerate_tiles(base, hardware.B200, tiles,
+                                        engine=fresh_engine())
+
+    @needs_procs
+    def test_enumerate_plans_chunked_and_sharded_match(self):
+        mesh = collectives.MeshSpec(axes=(("data", 8), ("model", 4)))
+        plans = [autotune.PlanCandidate(
+            name=f"p{i}", mesh=mesh, tp_degree=4,
+            microbatches=(i % 8) + 1,
+            remat=["none", "block", "full"][i % 3]) for i in range(200)]
+        kw = dict(model_flops=1e18, param_bytes=2e11,
+                  activation_bytes=5e12, opt_state_bytes=4e11,
+                  activation_peak_bytes=1e12)
+        ref = autotune.enumerate_plans(plans, **kw)
+        for costs in (autotune.enumerate_plans(plans, chunk_size=17, **kw),
+                      autotune.enumerate_plans(plans, jobs=2, **kw)):
+            assert [(c.plan.name, c.total_s, c.detail) for c in costs] \
+                == [(c.plan.name, c.total_s, c.detail) for c in ref]
+
+    def test_validate_suite_streamed_matches(self):
+        ws = mixed_workloads(hardware.MI300A, n=36, seed=37)
+        meas = [1e-5 * (i + 1) for i in range(len(ws))]
+        ref = validate.validate_suite(hardware.MI300A, ws, meas)
+        got = validate.validate_suite(hardware.MI300A, ws, meas,
+                                      chunk_size=5)
+        assert [(r.name, r.model_s, r.roofline_s) for r in ref.rows] \
+            == [(r.name, r.model_s, r.roofline_s) for r in got.rows]
