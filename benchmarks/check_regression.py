@@ -1,78 +1,92 @@
-"""Sweep-throughput regression gate.
+"""Benchmark regression gate: sweep throughput + serve throughput.
 
-Runs fresh ``benchmarks.sweep_bench`` passes and compares them against the
-committed BENCH_sweep.json.  Machine noise can only make a run *slower*,
-so the gate takes the best observation per field across up to
-``--attempts`` runs (stopping early once everything clears): a transient
-stall flakes at most one attempt, while a genuine code regression fails
-all of them.  Fails (exit 1) on:
+Runs fresh benchmark passes and compares them against the committed
+baselines (``BENCH_sweep.json`` for ``benchmarks.sweep_bench``,
+``BENCH_serve.json`` for ``benchmarks.serve_bench``).  Machine noise can
+only make a run *slower*, so the gate takes the best observation per
+field across up to ``--attempts`` runs (stopping early once everything
+clears): a transient stall flakes at most one attempt, while a genuine
+code regression fails all of them.  Fails (exit 1) on:
 
   * any ``speedup_*`` ratio dropping more than ``--tolerance`` (default
     20%) below the committed value — within-run ratios (table vs batch vs
-    scalar, timed in the same process) are immune to the host being
-    globally slower/faster than the baseline machine, so they are the
-    default signal,
-  * with ``--absolute``, additionally any ``configs_per_sec_*`` field
-    dropping more than ``--tolerance`` below the committed value — only
-    meaningful on hardware comparable to (and as idle as) the machine
-    that committed the baseline; shared/throttled runners swing absolute
-    throughput ~1.5x with zero code change,
-  * any correctness flag in the fresh run being false (bit-identity of
-    the fused AND streamed/sharded reductions, cached-replay-beats-cold,
-    table/list config parity, O(chunk) streamed peak memory).
+    scalar, batched-request vs single-row, timed in the same process /
+    against the same server) are immune to the host being globally
+    slower/faster than the baseline machine, so they are the default
+    signal,
+  * with ``--absolute``, additionally any ``configs_per_sec_*`` /
+    ``reqs_per_sec_*`` field dropping more than ``--tolerance`` below the
+    committed value — only meaningful on hardware comparable to (and as
+    idle as) the machine that committed the baseline,
+  * any correctness flag in the fresh run being false.  Every top-level
+    boolean field and every dict-of-booleans field in a bench row is a
+    correctness flag (bit-identity of fused/streamed/sharded/served
+    reductions, cached-replay-beats-cold, O(chunk) streamed peak memory,
+    served answers matching in-process answers).
 
-The streamed/sharded routes add ``speedup_stream_vs_table`` and
-``speedup_parallel_vs_table`` (big-lattice, within-run) to the gated
-ratio set, plus ``big_*_bit_identical`` / ``stream_peak_bounded`` /
-``stream_reduction_bit_identical`` to the correctness set.
-
-``speedup_table_vs_pr1_batch`` is excluded from gating: it divides by a
-frozen historical constant, so it is an absolute measurement in disguise
-(it remains the bench's own >=3x acceptance criterion).
+Excluded from ratio gating: ratios against frozen cross-run constants
+(``speedup_table_vs_pr1_batch`` divides by a historical constant — an
+absolute measurement in disguise), microsecond-scale replay throughputs
+(covered by flags), and ``speedup_serve_coalesced_vs_single`` (its
+numerator depends on how the host schedules eight client threads —
+swings >2x on shared 2-core runners with zero code change; the coalesced
+bit-identity flag still gates correctness).
 
 Run:  PYTHONPATH=src python -m benchmarks.check_regression
+      PYTHONPATH=src python -m benchmarks.check_regression --suite serve
       PYTHONPATH=src python -m benchmarks.check_regression --absolute
-      PYTHONPATH=src python -m benchmarks.check_regression --tolerance 0.3
 """
 from __future__ import annotations
 
 import argparse
+import importlib
 import json
 import os
 import sys
 
-DEFAULT_BASELINE = os.path.normpath(os.path.join(
-    os.path.dirname(os.path.abspath(__file__)), "..", "BENCH_sweep.json"))
+_ROOT = os.path.normpath(os.path.join(
+    os.path.dirname(os.path.abspath(__file__)), ".."))
 
-#: fields that must be true in the fresh run regardless of timing
-CORRECTNESS_FLAGS = ("cached_faster_than_cold",
-                     "table_cached_faster_than_cold",
-                     "table_same_configs_as_list",
-                     "big_stream_bit_identical",
-                     "big_parallel_bit_identical",
-                     "stream_peak_bounded")
-CORRECTNESS_DICTS = ("bit_identical_batch_of_1",
-                     "argmin_table_bit_identical",
-                     "stream_reduction_bit_identical")
-
-#: not gated: ratios against frozen cross-run constants (absolute
-#: measurements in disguise) and microsecond-scale replay throughputs
-#: (covered by the *_faster_than_cold flags instead)
-EXCLUDED_KEYS = ("speedup_table_vs_pr1_batch", "configs_per_sec_table_cached")
+#: suite name -> (bench module, committed baseline, keys excluded from
+#: ratio gating)
+SUITES = {
+    "sweep": ("benchmarks.sweep_bench",
+              os.path.join(_ROOT, "BENCH_sweep.json"),
+              ("speedup_table_vs_pr1_batch",
+               "configs_per_sec_table_cached")),
+    "serve": ("benchmarks.serve_bench",
+              os.path.join(_ROOT, "BENCH_serve.json"),
+              ("speedup_serve_coalesced_vs_single",)),
+}
 
 
-def _gated_keys(absolute: bool):
-    prefixes = ("configs_per_sec", "speedup") if absolute else ("speedup",)
+def _gated_keys(absolute: bool, excluded):
+    prefixes = ("configs_per_sec", "reqs_per_sec", "speedup") \
+        if absolute else ("speedup",)
 
     def gated(key):
-        return key.startswith(prefixes) and key not in EXCLUDED_KEYS
+        return key.startswith(prefixes) and key not in excluded
     return gated
 
 
+def correctness_failures(fresh: dict):
+    """Every boolean field (and dict-of-boolean field) must be true."""
+    failures = []
+    for key, v in fresh.items():
+        if isinstance(v, bool):
+            if not v:
+                failures.append(key)
+        elif isinstance(v, dict) and v and all(
+                isinstance(x, bool) for x in v.values()):
+            failures.extend(f"{key}[{sub}]"
+                            for sub, ok in v.items() if not ok)
+    return failures
+
+
 def compare(fresh: dict, baseline: dict, tolerance: float, *,
-            absolute: bool = False):
+            absolute: bool = False, excluded=()):
     """Return (regressions, correctness_failures) for the two runs."""
-    gated = _gated_keys(absolute)
+    gated = _gated_keys(absolute, excluded)
     regressions = []
     for key, base_val in baseline.items():
         if not gated(key):
@@ -80,16 +94,7 @@ def compare(fresh: dict, baseline: dict, tolerance: float, *,
         got = fresh.get(key)
         if got is None or got < base_val * (1.0 - tolerance):
             regressions.append((key, base_val, got))
-
-    failures = []
-    for key in CORRECTNESS_FLAGS:
-        if key in fresh and not fresh[key]:
-            failures.append(key)
-    for key in CORRECTNESS_DICTS:
-        for sub, ok in fresh.get(key, {}).items():
-            if not ok:
-                failures.append(f"{key}[{sub}]")
-    return regressions, failures
+    return regressions, correctness_failures(fresh)
 
 
 def merge_best(attempts):
@@ -108,38 +113,31 @@ def merge_best(attempts):
     return best
 
 
-def main() -> int:
-    ap = argparse.ArgumentParser(description=__doc__)
-    ap.add_argument("--baseline", default=DEFAULT_BASELINE,
-                    help="committed BENCH_sweep.json to compare against")
-    ap.add_argument("--tolerance", type=float, default=0.2,
-                    help="allowed fractional drop (0.2 = 20%%)")
-    ap.add_argument("--attempts", type=int, default=3,
-                    help="max bench reruns; the gate takes the best "
-                         "observation per field (noise never speeds a run "
-                         "up, so a real regression fails every attempt)")
-    ap.add_argument("--absolute", action="store_true",
-                    help="also gate absolute configs_per_sec_* fields "
-                         "(same-machine, idle-host runs only)")
-    args = ap.parse_args()
-
-    with open(args.baseline) as f:
+def run_suite(name: str, tolerance: float, attempts: int, *,
+              absolute: bool = False, baseline_path=None) -> bool:
+    module_name, default_baseline, excluded = SUITES[name]
+    path = baseline_path or default_baseline
+    with open(path) as f:
         baseline = json.load(f)
 
-    from benchmarks.sweep_bench import run_bench
-    attempts = []
-    for i in range(max(args.attempts, 1)):
-        attempts.append(run_bench())
-        fresh = merge_best(attempts)
-        regressions, failures = compare(fresh, baseline, args.tolerance,
-                                        absolute=args.absolute)
+    run_bench = importlib.import_module(module_name).run_bench
+    runs = []
+    fresh = {}
+    regressions, failures = [], []
+    for i in range(max(attempts, 1)):
+        runs.append(run_bench())
+        fresh = merge_best(runs)
+        regressions, failures = compare(fresh, baseline, tolerance,
+                                        absolute=absolute,
+                                        excluded=excluded)
         if not regressions and not failures:
             break
-        if i + 1 < max(args.attempts, 1):
-            print(f"attempt {i + 1}/{args.attempts}: "
-                  f"{len(regressions)} field(s) below tolerance, retrying")
+        if i + 1 < max(attempts, 1):
+            print(f"[{name}] attempt {i + 1}/{attempts}: "
+                  f"{len(regressions)} field(s) below tolerance, "
+                  f"{len(failures)} flag failure(s), retrying")
 
-    gated = _gated_keys(args.absolute)
+    gated = _gated_keys(absolute, excluded)
     width = max((len(k) for k in baseline if gated(k)), default=20)
     for key in sorted(baseline):
         if not gated(key):
@@ -148,19 +146,51 @@ def main() -> int:
         ratio = got / baseline[key] if baseline[key] else float("inf")
         flag = "REGRESSED" if any(k == key for k, _, _ in regressions) \
             else "ok"
-        print(f"{key:{width}s}  baseline {baseline[key]:14.1f}  "
+        print(f"[{name}] {key:{width}s}  baseline {baseline[key]:14.1f}  "
               f"fresh {got:14.1f}  ({ratio:5.2f}x)  {flag}")
     for key in failures:
-        print(f"correctness flag failed: {key}")
+        print(f"[{name}] correctness flag failed: {key}")
 
     if regressions or failures:
-        print(f"FAIL: {len(regressions)} regression(s) "
-              f"(> {args.tolerance:.0%} drop), "
+        print(f"[{name}] FAIL: {len(regressions)} regression(s) "
+              f"(> {tolerance:.0%} drop), "
               f"{len(failures)} correctness failure(s)")
-        return 1
-    print(f"PASS: no gated field dropped more than "
-          f"{args.tolerance:.0%} vs {args.baseline}")
-    return 0
+        return False
+    print(f"[{name}] PASS: no gated field dropped more than "
+          f"{tolerance:.0%} vs {path}")
+    return True
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--suite", default="all",
+                    choices=("all", *SUITES),
+                    help="which bench suite(s) to gate")
+    ap.add_argument("--baseline", default=None,
+                    help="override the committed baseline json "
+                         "(single-suite runs only)")
+    ap.add_argument("--tolerance", type=float, default=0.2,
+                    help="allowed fractional drop (0.2 = 20%%)")
+    ap.add_argument("--attempts", type=int, default=3,
+                    help="max bench reruns; the gate takes the best "
+                         "observation per field (noise never speeds a run "
+                         "up, so a real regression fails every attempt)")
+    ap.add_argument("--absolute", action="store_true",
+                    help="also gate absolute configs_per_sec_* / "
+                         "reqs_per_sec_* fields (same-machine, idle-host "
+                         "runs only)")
+    args = ap.parse_args()
+
+    names = list(SUITES) if args.suite == "all" else [args.suite]
+    if args.baseline and len(names) > 1:
+        ap.error("--baseline requires --suite sweep or --suite serve")
+
+    ok = True
+    for name in names:
+        ok = run_suite(name, args.tolerance, args.attempts,
+                       absolute=args.absolute,
+                       baseline_path=args.baseline) and ok
+    return 0 if ok else 1
 
 
 if __name__ == "__main__":

@@ -1,0 +1,276 @@
+"""Prediction-serving benchmark: wire throughput against a real server.
+
+Spawns ``repro.serve.server`` as a genuine second process (the acceptance
+scenario) and measures request throughput over loopback HTTP four ways:
+
+  single_row    N sequential argmin requests, one configuration each —
+                the anti-pattern a naive client would write; per-request
+                HTTP + codec overhead dominates
+  batched       one argmin request carrying the whole table — the
+                intended wire shape (one contiguous column matrix)
+  coalesced     T client threads firing small-table requests
+                concurrently — the server's micro-batching fuses
+                same-hardware requests into shared columnar evaluations
+  streamed      a ~1M-row lazy ``LatticeSpec`` sent as a tiny plan and
+                reduced server-side in O(chunk) memory
+
+plus cold-vs-replay on a 16k-row CDNA3 hit-rate table (the server's
+whole-table memo cache answering an identical re-sent sweep; routed so
+the saved compute dominates loopback jitter — see ``replay_table``) and
+bit-identity flags against the in-process ``argmin_table`` /
+``argmin_stream`` answers.
+
+Timings are interleaved round-robin and the per-path minima are kept
+(same rationale as sweep_bench: shared hosts drift on a seconds scale,
+within-run ratios stay comparable).  Emits BENCH_serve.json; gated by
+``benchmarks.check_regression`` on ``speedup_serve_batched_vs_single``
+(the >=3x acceptance criterion rides on this), ``speedup_serve_replay_vs_
+cold`` and every bit-identity flag.
+
+Run:  PYTHONPATH=src python -m benchmarks.serve_bench
+"""
+from __future__ import annotations
+
+import json
+import os
+import threading
+import time
+
+from repro.core import hardware, sweep
+from repro.core.workload import LatticeSpec, TileConfig, WorkloadTable, \
+    gemm_workload
+from repro.serve.client import PredictionClient
+from repro.serve.subproc import (start_server_subprocess as start_server,
+                                 stop_server_subprocess as stop_server)
+
+N_SINGLE = 64          #: sequential single-row requests per round
+COALESCE_THREADS = 8   #: concurrent clients in the coalesced pass
+COALESCE_REQS = 8      #: small-table requests per concurrent client
+ROUNDS = 5
+
+TILES = [TileConfig(bm, bn, bk) for bm in (64, 128, 256, 512)
+         for bn in (64, 128, 256, 512) for bk in (16, 32, 64, 128)]
+SHAPES = [(4096 + 512 * s, 4096, 4096) for s in range(16)]
+
+BIG_N = 1_048_576
+
+
+def bench_table() -> WorkloadTable:
+    """1,024-row (tile x shape) sweep, matching sweep_bench's workload."""
+    parts = [WorkloadTable.tile_lattice(
+        gemm_workload(f"shape{j}", m, n, k, precision="fp16"), TILES[:64])
+        for j, (m, n, k) in enumerate(SHAPES)]
+    return WorkloadTable.concat(parts)
+
+
+def big_lattice() -> LatticeSpec:
+    base = gemm_workload("big", 8192, 8192, 8192, precision="fp16")
+    return LatticeSpec.cartesian(
+        base,
+        k_tiles=[8 + 4 * i for i in range(64)],
+        num_ctas=[32 + 8 * i for i in range(64)],
+        tma_participants=[1, 2, 4, 8] * 4,
+        concurrent_kernels=[1, 2] * 8)
+
+
+def replay_table() -> WorkloadTable:
+    """16,384-row CDNA3 hit-rate table for the cold-vs-replay pass.
+
+    The replay gate needs compute >> wire: on the vectorized stage route
+    a row costs ~0.2us to price but ~1us to ship+hash, so the memo-cache
+    saving would drown in loopback jitter.  Explicit hit-rate rows take
+    the wavefront model's scalar latency-walk fallback — the repo's most
+    expensive per-row path (~10us/row) — so a cold request costs ~100ms
+    more than its memo-cache replay and the ratio is stable."""
+    base = gemm_workload("replay", 4096, 4096, 4096, precision="fp16")
+    base = base.replace(num_loads=12.0,
+                        hit_rates={"h_l1": 0.5, "h_l2": 0.7, "h_llc": 0.9})
+    return LatticeSpec.cartesian(
+        base,
+        k_tiles=[8 + 4 * i for i in range(64)],
+        num_ctas=[32 + 8 * i for i in range(64)],
+        tma_participants=[1, 2, 4, 8]).materialize()
+
+
+def _same_winner(a, b) -> bool:
+    return bool(a.index == b.index and a.total == b.total
+                and a.name == b.name and a.breakdown == b.breakdown
+                and a.breakdown.detail == b.breakdown.detail)
+
+
+def run_bench() -> dict:
+    table = bench_table()
+    n = len(table)
+    singles = [table._slice(i, i + 1) for i in range(N_SINGLE)]
+    small_parts = [
+        table._slice(j * 16, (j + 1) * 16)
+        for j in range(COALESCE_THREADS * COALESCE_REQS)]
+    spec = big_lattice()
+    hw = hardware.B200
+
+    proc, host, port = start_server(["--jobs", "0"])
+    client = PredictionClient(host, port, timeout=600.0)
+    try:
+        client.health()                       # connection warm-up
+
+        # parity references, computed in-process
+        ref_win = sweep.argmin_table(table, hw,
+                                     engine=sweep.SweepEngine(
+                                         use_cache=False))
+        got_win = client.argmin(table, "b200")
+        batched_ok = _same_winner(got_win, ref_win)
+
+        coalesced_ok = True
+        for part in small_parts[:4]:
+            ref = sweep.argmin_table(part, hw,
+                                     engine=sweep.SweepEngine(
+                                         use_cache=False))
+            if not _same_winner(client.argmin(part, "b200"), ref):
+                coalesced_ok = False
+
+        t0 = time.perf_counter()
+        got_stream = client.argmin(spec, "b200")
+        t_stream = time.perf_counter() - t0
+        stream_ok = _same_winner(got_stream, sweep.argmin_stream(spec, hw))
+
+        rtable = replay_table()
+        mi300a = hardware.get("mi300a")
+        replay_ok = _same_winner(
+            client.argmin(rtable, "mi300a"),
+            sweep.argmin_table(rtable, mi300a,
+                               engine=sweep.SweepEngine(use_cache=False)))
+
+        # ---------------------------------------------- timed round-robin
+        best = {"single": float("inf"), "batched": float("inf"),
+                "coalesced": float("inf"), "cold": float("inf"),
+                "replay": float("inf")}
+
+        clients = [PredictionClient(host, port, timeout=600.0)
+                   for _ in range(COALESCE_THREADS)]
+
+        def run_coalesced() -> None:
+            def worker(ci: int) -> None:
+                c = clients[ci]
+                for r in range(COALESCE_REQS):
+                    c.argmin(small_parts[ci * COALESCE_REQS + r], "b200")
+            threads = [threading.Thread(target=worker, args=(ci,))
+                       for ci in range(COALESCE_THREADS)]
+            for t in threads:
+                t.start()
+            for t in threads:
+                t.join()
+
+        for _ in range(ROUNDS):
+            t0 = time.perf_counter()
+            for s in singles:
+                client.argmin(s, "b200", coalesce=False)
+            best["single"] = min(best["single"],
+                                 time.perf_counter() - t0)
+
+            t0 = time.perf_counter()
+            client.argmin(table, "b200")
+            best["batched"] = min(best["batched"],
+                                  time.perf_counter() - t0)
+
+            client.clear_cache()
+            t0 = time.perf_counter()
+            client.argmin(rtable, "mi300a")
+            best["cold"] = min(best["cold"], time.perf_counter() - t0)
+
+            t0 = time.perf_counter()
+            client.argmin(rtable, "mi300a")
+            best["replay"] = min(best["replay"],
+                                 time.perf_counter() - t0)
+
+            t0 = time.perf_counter()
+            run_coalesced()
+            best["coalesced"] = min(best["coalesced"],
+                                    time.perf_counter() - t0)
+
+        for c in clients:
+            c.close()
+
+        stats = client.cache_stats()
+        single_cfg_s = N_SINGLE / best["single"]
+        batched_cfg_s = n / best["batched"]
+        n_coal = sum(len(p) for p in small_parts)
+        coal_cfg_s = n_coal / best["coalesced"]
+        coal_req_s = (COALESCE_THREADS * COALESCE_REQS) / best["coalesced"]
+
+        return {
+            "serve_n_configs": n,
+            "serve_replay_n_configs": len(rtable),
+            "serve_big_n_configs": spec.n_rows,
+            "serve_single_row_s": best["single"],
+            "serve_batched_s": best["batched"],
+            "serve_cold_s": best["cold"],
+            "serve_replay_s": best["replay"],
+            "serve_coalesced_s": best["coalesced"],
+            "serve_stream_s": t_stream,
+            "reqs_per_sec_serve_single": single_cfg_s,
+            "reqs_per_sec_serve_coalesced": coal_req_s,
+            "configs_per_sec_serve_single": single_cfg_s,
+            "configs_per_sec_serve_batched": batched_cfg_s,
+            "configs_per_sec_serve_coalesced": coal_cfg_s,
+            "configs_per_sec_serve_stream": spec.n_rows / t_stream,
+            "speedup_serve_batched_vs_single":
+                batched_cfg_s / single_cfg_s,
+            "speedup_serve_coalesced_vs_single":
+                coal_cfg_s / single_cfg_s,
+            "speedup_serve_replay_vs_cold": best["cold"] / best["replay"],
+            "serve_batched_bit_identical": batched_ok,
+            "serve_replay_bit_identical": replay_ok,
+            "serve_coalesced_bit_identical": coalesced_ok,
+            "serve_stream_bit_identical": stream_ok,
+            "serve_replay_not_slower": bool(best["replay"]
+                                            <= best["cold"]),
+            "serve_coalesced_requests_fused": int(
+                stats.get("coalescer_coalesced_requests", 0)),
+        }
+    finally:
+        client.close()
+        stop_server(proc)
+
+
+def main() -> None:
+    row = run_bench()
+    out = os.path.join(os.path.dirname(os.path.abspath(__file__)), "..",
+                       "BENCH_serve.json")
+    with open(os.path.normpath(out), "w") as f:
+        json.dump(row, f, indent=1)
+
+    n = row["serve_n_configs"]
+    print(f"served sweep: n = {n} configs over loopback HTTP "
+          f"(second process, b200 stage model)")
+    print(f"single-row loop : {row['serve_single_row_s'] * 1e3:8.1f} ms "
+          f"({row['configs_per_sec_serve_single']:10.0f} cfg/s = req/s)")
+    print(f"batched request : {row['serve_batched_s'] * 1e3:8.1f} ms "
+          f"({row['configs_per_sec_serve_batched']:10.0f} cfg/s)  "
+          f"{row['speedup_serve_batched_vs_single']:.1f}x vs single-row")
+    print(f"coalesced (x{COALESCE_THREADS})  : "
+          f"{row['serve_coalesced_s'] * 1e3:8.1f} ms "
+          f"({row['configs_per_sec_serve_coalesced']:10.0f} cfg/s)  "
+          f"{row['speedup_serve_coalesced_vs_single']:.1f}x vs "
+          f"single-row, {row['serve_coalesced_requests_fused']} reqs "
+          f"fused")
+    print(f"cold vs replay  : {row['serve_cold_s'] * 1e3:8.1f} ms -> "
+          f"{row['serve_replay_s'] * 1e3:8.1f} ms "
+          f"({row['speedup_serve_replay_vs_cold']:.2f}x on "
+          f"{row['serve_replay_n_configs']} rows)")
+    print(f"streamed lattice: {row['serve_big_n_configs']} rows in "
+          f"{row['serve_stream_s']:.2f} s "
+          f"({row['configs_per_sec_serve_stream']:10.0f} cfg/s)")
+    print(f"bit-identical: batched={row['serve_batched_bit_identical']} "
+          f"coalesced={row['serve_coalesced_bit_identical']} "
+          f"stream={row['serve_stream_bit_identical']}")
+    ok = (row["speedup_serve_batched_vs_single"] >= 3
+          and row["serve_batched_bit_identical"]
+          and row["serve_coalesced_bit_identical"]
+          and row["serve_stream_bit_identical"]
+          and row["serve_replay_not_slower"])
+    print("PASS (>=3x batched-vs-single, bit-identical, replay<=cold)"
+          if ok else "FAIL")
+
+
+if __name__ == "__main__":
+    main()

@@ -154,6 +154,21 @@ class HardwareParams:
         same formulas."""
         return dataclasses.replace(self, **kw)
 
+    def __getstate__(self):
+        """Strip process-local caches before pickling.
+
+        ``core.sweep.hardware_key`` stashes its interned ``(name, id)``
+        content token on the instance; the token is only meaningful
+        against the interning process's own table.  Default pickling
+        would ship it to spawn/forkserver workers (``core.parallel``,
+        the serve worker pool), where a fresh intern table hands out the
+        same ids for *different* parameter content — a stale inherited
+        token could then collide with a live one and mix cache entries
+        across hardware.  Workers must always re-derive the token from
+        content."""
+        return {k: v for k, v in self.__dict__.items()
+                if k != "_sweep_content_token"}
+
 
 # ---------------------------------------------------------------------------
 # Parameter files.  Values from paper Tables II, VII, VIII and §III.

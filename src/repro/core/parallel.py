@@ -25,10 +25,12 @@ Inputs cross the process boundary two ways:
 
 Portability: the pool prefers the ``fork`` start method (cheapest on
 Linux) but passes everything workers need as task arguments, so ``spawn``
-/ ``forkserver`` work identically; once ``jax`` is loaded in the parent
-the pool switches to ``forkserver`` (forking a multithreaded jax process
-can deadlock in a held mutex — the forkserver's server process is exec'd
-clean, so its forks are safe).  When process pools are unusable at all
+/ ``forkserver`` work identically; once ``jax`` is loaded in the parent —
+or the parent has ANY live helper thread (a multithreaded process can
+hold a malloc/runtime mutex at fork time and deadlock the child; the
+serve front end's HTTP handler threads hit exactly this) — the pool
+switches to ``forkserver``, whose server process is launched fork+exec
+clean and single-threaded, so its forks are safe.  When process pools are unusable at all
 (sandboxed /dev/shm, missing semaphores) a thread pool runs the same shard
 function in-process — NumPy releases the GIL on the large column kernels,
 so threads still overlap.  Worker exceptions propagate to the caller
@@ -42,6 +44,7 @@ from __future__ import annotations
 import math
 import multiprocessing
 import sys
+import threading
 from concurrent.futures import ProcessPoolExecutor, ThreadPoolExecutor
 from typing import Callable, List, Optional, Sequence, Tuple
 
@@ -51,7 +54,7 @@ from . import sweep as sweep_mod
 from . import workload as workload_mod
 from .hardware import HardwareParams
 
-__all__ = ["SharedTable", "map_jobs", "processes_available",
+__all__ = ["SharedTable", "WorkerPool", "map_jobs", "processes_available",
            "reduce_sharded", "reduce_sharded_multi", "resolve_jobs"]
 
 
@@ -168,15 +171,18 @@ def _probe() -> int:
     return 42
 
 
-def _mp_context():
+def _mp_context(allow_fork: bool = True):
     methods = multiprocessing.get_all_start_methods()
-    if "fork" in methods and "jax" not in sys.modules:
+    if allow_fork and "fork" in methods and "jax" not in sys.modules \
+            and threading.active_count() <= 1:
         return multiprocessing.get_context("fork")   # COW, no re-import
     if "forkserver" in methods:
-        # jax is multithreaded: forking its parent process can deadlock in
-        # a held mutex.  The forkserver's server process is exec'd clean
-        # (never imports jax), so its forks are safe — at the cost of
-        # workers re-importing repro.core.
+        # forking a multithreaded process (jax loaded, or any live helper
+        # thread — e.g. the serve front end's HTTP handlers) can deadlock
+        # in a mutex some other thread held at fork time (malloc arenas,
+        # runtime locks).  The forkserver's server process is launched
+        # fork+exec clean and single-threaded, so its forks are safe — at
+        # the cost of workers re-importing repro.core.
         return multiprocessing.get_context("forkserver")
     return multiprocessing.get_context("spawn")
 
@@ -195,14 +201,54 @@ def processes_available() -> bool:
     return _PROC_OK
 
 
-def _make_pool(njobs: int, use_threads: Optional[bool]):
+def _make_pool(njobs: int, use_threads: Optional[bool],
+               allow_fork: bool = True):
     """(pool, is_processes).  ``use_threads`` forces the fallback."""
     if use_threads is None:
         use_threads = not processes_available()
     if use_threads:
         return ThreadPoolExecutor(max_workers=njobs), False
-    return ProcessPoolExecutor(max_workers=njobs,
-                               mp_context=_mp_context()), True
+    return ProcessPoolExecutor(
+        max_workers=njobs, mp_context=_mp_context(allow_fork)), True
+
+
+class WorkerPool:
+    """A reusable worker pool for repeated sharded reductions.
+
+    ``reduce_sharded``/``reduce_sharded_multi`` normally build and tear
+    down an executor per call — the right trade for one big sweep, and
+    ~100ms of pure overhead per request for a serving front end that
+    answers streamed-lattice queries all day.  A ``WorkerPool`` is that
+    executor kept alive: pass it as the ``pool=`` argument (or through
+    ``argmin_stream(..., pool=...)``) and the shard tasks reuse the same
+    worker processes.  Shard workers never retain sweep state between
+    tasks — each ``_price_shard`` call builds a fresh cache-free
+    ``SweepEngine`` — so reuse cannot serve stale predictions.  Close
+    (or use as a context manager) when done.
+    """
+
+    def __init__(self, jobs=None, use_threads: Optional[bool] = None):
+        self.njobs = resolve_jobs(jobs)
+        # never fork: ProcessPoolExecutor starts workers lazily at first
+        # submit, so a fork approved while single-threaded here could
+        # execute after the caller starts helper threads (the held-mutex
+        # child deadlock _mp_context avoids).  Per-call reduce_sharded
+        # pools submit immediately inside the same call, so only this
+        # long-lived pool needs to give up COW for safety.
+        self.executor, self.is_processes = _make_pool(
+            self.njobs, use_threads, allow_fork=False)
+        self._closed = False
+
+    def close(self) -> None:
+        if not self._closed:
+            self._closed = True
+            _shutdown(self.executor)
+
+    def __enter__(self) -> "WorkerPool":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
 
 
 def _shutdown(pool) -> None:
@@ -263,22 +309,26 @@ def reduce_sharded(source, hw: HardwareParams,
                    jobs=None, chunk_size: Optional[int] = None,
                    model: Optional[str] = None,
                    calibration=None,
-                   use_threads: Optional[bool] = None) -> Sequence:
+                   use_threads: Optional[bool] = None,
+                   pool: Optional[WorkerPool] = None) -> Sequence:
     """Run the streaming reducers sharded across a worker pool.
 
     Returns the merged reducers (same shapes ``sweep.reduce_stream``
     returns); results are bit-identical to a serial reduction.  A worker
     exception (or a hard worker death) propagates to the caller.
+    ``pool`` reuses a live ``WorkerPool`` instead of starting (and tearing
+    down) an executor for this call.
     """
     return reduce_sharded_multi(
         source, hw, [(tuple(factories), model, calibration)], jobs=jobs,
-        chunk_size=chunk_size, use_threads=use_threads)[0]
+        chunk_size=chunk_size, use_threads=use_threads, pool=pool)[0]
 
 
 def reduce_sharded_multi(source, hw: HardwareParams,
                          passes: Sequence[Tuple], *,
                          jobs=None, chunk_size: Optional[int] = None,
-                         use_threads: Optional[bool] = None
+                         use_threads: Optional[bool] = None,
+                         pool: Optional[WorkerPool] = None
                          ) -> List[Sequence]:
     """``reduce_sharded`` for several (factories, model, calibration)
     passes over the same source: one pool (and one shared-memory export)
@@ -288,6 +338,8 @@ def reduce_sharded_multi(source, hw: HardwareParams,
     spec = sweep_mod.as_spec(source)
     n = len(spec)
     size = int(chunk_size or workload_mod.DEFAULT_CHUNK_ROWS)
+    if pool is not None and jobs is None:
+        jobs = pool.njobs
     njobs = min(resolve_jobs(jobs), max(1, math.ceil(n / size)))
     if njobs <= 1:
         return [sweep_mod.reduce_stream(
@@ -297,9 +349,10 @@ def reduce_sharded_multi(source, hw: HardwareParams,
             for factories, model, calibration in passes]
 
     bounds = _shard_bounds(n, njobs, size)
+    procs_ok = pool.is_processes if pool is not None else (
+        use_threads is not True and processes_available())
     shared = None
-    if isinstance(spec, workload_mod._TableSpec) and (
-            use_threads is not True) and processes_available():
+    if isinstance(spec, workload_mod._TableSpec) and procs_ok:
         try:
             shared = SharedTable(spec.table)
         except OSError:
@@ -313,14 +366,19 @@ def reduce_sharded_multi(source, hw: HardwareParams,
 
     passes = [(tuple(fs), model, calibration)
               for fs, model, calibration in passes]
-    pool, _procs = _make_pool(njobs, use_threads)
+    if pool is not None:
+        executor, owned = pool.executor, False
+    else:
+        executor, _procs = _make_pool(njobs, use_threads)
+        owned = True
     try:
-        futs = [pool.submit(_price_shard, payload, hw, passes,
-                            lo, hi, base, size)
+        futs = [executor.submit(_price_shard, payload, hw, passes,
+                                lo, hi, base, size)
                 for payload, lo, hi, base in tasks]
         partials = [f.result() for f in futs]
     finally:
-        _shutdown(pool)
+        if owned:
+            _shutdown(executor)
         if shared is not None:
             shared.close(unlink=True)
 

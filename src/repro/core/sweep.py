@@ -560,6 +560,58 @@ def _winner(res: TableResult, table: WorkloadTable, i: int) -> SweepWinner:
                        total=float(res.totals[i]), breakdown=res[i])
 
 
+# The *_from_result reductions operate on an already-priced TableResult
+# window [lo, hi): this is what lets one fused columnar evaluation answer
+# many independent requests (the serving front end coalesces concurrent
+# small tables into one ``predict_table`` call and reduces each request's
+# row window separately).  ``table`` names the window's rows locally (row
+# ``lo`` of ``res`` is row 0 of ``table``); winner indices are local to
+# the window, so the answers are bit-identical to evaluating each window's
+# table on its own — the model backends are row-elementwise.
+
+def argmin_from_result(res: TableResult, table: WorkloadTable,
+                       lo: int = 0, hi: Optional[int] = None) -> SweepWinner:
+    """Fused argmin over a priced window: reduce on the totals column,
+    materialize one row.  Ties resolve to the lowest row index (matching a
+    stable sort of the full materialization)."""
+    t = res.totals[lo:hi]
+    if not len(t):
+        raise ValueError("argmin of an empty sweep")
+    i = int(np.argmin(t))
+    return SweepWinner(index=i, name=table.name(i), total=float(t[i]),
+                       breakdown=res[lo + i])
+
+
+def topk_from_result(res: TableResult, table: WorkloadTable, k: int,
+                     lo: int = 0, hi: Optional[int] = None
+                     ) -> List[SweepWinner]:
+    """Top-k cheapest rows of a priced window, ascending; ties break by
+    row index (stable argsort)."""
+    t = res.totals[lo:hi]
+    order = np.argsort(t, kind="stable")[:max(k, 0)]
+    return [SweepWinner(index=int(i), name=table.name(int(i)),
+                        total=float(t[i]), breakdown=res[lo + int(i)])
+            for i in order]
+
+
+def pareto_from_result(res: TableResult, table: WorkloadTable,
+                       objectives: Sequence[str] = ("compute", "memory"),
+                       lo: int = 0, hi: Optional[int] = None
+                       ) -> List[SweepWinner]:
+    """Non-dominated rows of a priced window, ordered by (first objective,
+    index)."""
+    if not objectives:
+        raise ValueError("pareto needs at least one objective")
+    pts = np.stack([res.field_totals(f)[lo:hi] for f in objectives],
+                   axis=1)
+    t = res.totals[lo:hi]
+    front = np.flatnonzero(_pareto_front_mask(pts))
+    order = front[np.argsort(pts[front, 0], kind="stable")]
+    return [SweepWinner(index=int(i), name=table.name(int(i)),
+                        total=float(t[i]), breakdown=res[lo + int(i)])
+            for i in order]
+
+
 def argmin_table(table: WorkloadTable, hw: HardwareParams, *,
                  model: Optional[str] = None,
                  calibration: Optional[object] = None,
@@ -570,7 +622,7 @@ def argmin_table(table: WorkloadTable, hw: HardwareParams, *,
     full materialization)."""
     res = predict_table(table, hw, model=model, calibration=calibration,
                         engine=engine)
-    return _winner(res, table, int(np.argmin(res.totals)))
+    return argmin_from_result(res, table)
 
 
 def topk_table(table: WorkloadTable, hw: HardwareParams, k: int, *,
@@ -582,8 +634,7 @@ def topk_table(table: WorkloadTable, hw: HardwareParams, k: int, *,
     materialization by (total, index))."""
     res = predict_table(table, hw, model=model, calibration=calibration,
                         engine=engine)
-    order = np.argsort(res.totals, kind="stable")[:max(k, 0)]
-    return [_winner(res, table, int(i)) for i in order]
+    return topk_from_result(res, table, k)
 
 
 def pareto_table(table: WorkloadTable, hw: HardwareParams, *,
@@ -604,10 +655,7 @@ def pareto_table(table: WorkloadTable, hw: HardwareParams, *,
         raise ValueError("pareto_table needs at least one objective")
     res = predict_table(table, hw, model=model, calibration=calibration,
                         engine=engine)
-    pts = np.stack([res.field_totals(f) for f in objectives], axis=1)
-    front = np.flatnonzero(_pareto_front_mask(pts))
-    order = front[np.argsort(pts[front, 0], kind="stable")]
-    return [_winner(res, table, int(i)) for i in order]
+    return pareto_from_result(res, table, objectives)
 
 
 def _dominated_mask(points: np.ndarray, against: np.ndarray) -> np.ndarray:
@@ -908,13 +956,15 @@ def _run_reducers(source, hw: HardwareParams,
                   factories: Sequence[Callable[[], object]], *,
                   chunk_size: Optional[int], model: Optional[str],
                   calibration: Optional[object],
-                  engine: Optional[SweepEngine], jobs) -> Sequence:
-    njobs = effective_jobs(jobs)
+                  engine: Optional[SweepEngine], jobs,
+                  pool=None) -> Sequence:
+    njobs = pool.njobs if (pool is not None and jobs is None) \
+        else effective_jobs(jobs)
     if njobs > 1:
         from . import parallel
         return parallel.reduce_sharded(
             source, hw, factories, jobs=njobs, chunk_size=chunk_size,
-            model=model, calibration=calibration)
+            model=model, calibration=calibration, pool=pool)
     return reduce_stream(source, hw, [f() for f in factories],
                          chunk_size=chunk_size, model=model,
                          calibration=calibration, engine=engine)
@@ -925,14 +975,15 @@ def argmin_stream(source, hw: HardwareParams, *,
                   model: Optional[str] = None,
                   calibration: Optional[object] = None,
                   engine: Optional[SweepEngine] = None,
-                  jobs=None) -> SweepWinner:
+                  jobs=None, pool=None) -> SweepWinner:
     """Streaming argmin over a LatticeSpec or WorkloadTable — bit-identical
     winner to ``argmin_table`` on the materialized lattice, peak memory
     O(chunk).  ``jobs`` > 1 (or 0/"auto" for ``os.cpu_count()``) shards the
     lattice across a worker pool (``core.parallel``)."""
     (red,) = _run_reducers(source, hw, [ArgminStream],
                            chunk_size=chunk_size, model=model,
-                           calibration=calibration, engine=engine, jobs=jobs)
+                           calibration=calibration, engine=engine, jobs=jobs,
+                           pool=pool)
     return red.result()
 
 
@@ -941,12 +992,13 @@ def topk_stream(source, hw: HardwareParams, k: int, *,
                 model: Optional[str] = None,
                 calibration: Optional[object] = None,
                 engine: Optional[SweepEngine] = None,
-                jobs=None) -> List[SweepWinner]:
+                jobs=None, pool=None) -> List[SweepWinner]:
     """Streaming top-k cheapest (bounded heap) — bit-identical list to
     ``topk_table`` including tie order."""
     (red,) = _run_reducers(source, hw, [partial(TopkStream, k)],
                            chunk_size=chunk_size, model=model,
-                           calibration=calibration, engine=engine, jobs=jobs)
+                           calibration=calibration, engine=engine, jobs=jobs,
+                           pool=pool)
     return red.result()
 
 
@@ -956,13 +1008,14 @@ def pareto_stream(source, hw: HardwareParams, *,
                   model: Optional[str] = None,
                   calibration: Optional[object] = None,
                   engine: Optional[SweepEngine] = None,
-                  jobs=None) -> List[SweepWinner]:
+                  jobs=None, pool=None) -> List[SweepWinner]:
     """Streaming pareto frontier (incremental) — bit-identical front and
     ordering to ``pareto_table``."""
     (red,) = _run_reducers(source, hw,
                            [partial(ParetoStream, tuple(objectives))],
                            chunk_size=chunk_size, model=model,
-                           calibration=calibration, engine=engine, jobs=jobs)
+                           calibration=calibration, engine=engine, jobs=jobs,
+                           pool=pool)
     return red.result()
 
 
@@ -971,10 +1024,11 @@ def predict_totals_stream(source, hw: HardwareParams, *,
                           model: Optional[str] = None,
                           calibration: Optional[object] = None,
                           engine: Optional[SweepEngine] = None,
-                          jobs=None) -> np.ndarray:
+                          jobs=None, pool=None) -> np.ndarray:
     """Every row's (calibrated) total, streamed — same floats as
     ``predict_table(...).totals`` with intermediates bounded by chunk."""
     (red,) = _run_reducers(source, hw, [TotalsStream],
                            chunk_size=chunk_size, model=model,
-                           calibration=calibration, engine=engine, jobs=jobs)
+                           calibration=calibration, engine=engine, jobs=jobs,
+                           pool=pool)
     return red.result()

@@ -168,6 +168,23 @@ class Workload:
     def replace(self, **kw) -> "Workload":
         return dataclasses.replace(self, **kw)
 
+    # ------------------------------------------------------- serialization
+    def to_dict(self) -> Dict:
+        """JSON-safe dict of every field (nested GemmShape/TileConfig as
+        dicts) — the wire form ``repro.serve.codec`` ships spec bases in."""
+        return dataclasses.asdict(self)
+
+    @staticmethod
+    def from_dict(d: Dict) -> "Workload":
+        """Inverse of ``to_dict`` (tolerates the plain dicts json emits)."""
+        d = dict(d)
+        if d.get("gemm") is not None:
+            d["gemm"] = GemmShape(**d["gemm"])
+        if d.get("tile") is not None:
+            d["tile"] = TileConfig(**d["tile"])
+        d["hit_rates"] = dict(d.get("hit_rates") or {})
+        return Workload(**d)
+
 
 @dataclass(frozen=True)
 class HostPhase:
@@ -421,6 +438,22 @@ def _encode(values: List[str]):
     return np.array(codes, dtype=np.intp), tuple(vocab)
 
 
+def _canonical_codes(codes: np.ndarray, vocab: Tuple[str, ...]):
+    """(int64 code bytes, vocab tuple) in a construction-order-invariant
+    form: only vocab entries actually used by ``codes`` survive, sorted by
+    string, with the codes remapped to match.  Two tables whose rows decode
+    to the same per-row strings hash identically no matter which insertion
+    order (``concat`` operand order, wire decode order, ``take`` leftovers)
+    their vocabularies accumulated in — raw codes would memo-miss them.
+    int64 on both 32/64-bit hosts so digests are platform-stable."""
+    used = np.unique(codes)
+    uniq = sorted({vocab[int(c)] for c in used})
+    remap = np.zeros(len(vocab), dtype=np.int64)
+    for c in used:
+        remap[int(c)] = uniq.index(vocab[int(c)])
+    return remap[codes].tobytes(), tuple(uniq)
+
+
 class WorkloadTable:
     """Struct-of-arrays batch of workloads (the columnar sweep unit).
 
@@ -451,8 +484,12 @@ class WorkloadTable:
         # names a full materialization would
         self.name_offset = name_offset
         self._token = None
-        if cols.flags.writeable:
-            cols.flags.writeable = False
+        # freeze the code arrays too: a zero-copy wire decode over a
+        # writable buffer (bytearray/memoryview) would otherwise hand out
+        # mutable codes whose cached content_token goes stale
+        for arr in (cols, precision_codes, wclass_codes):
+            if arr.flags.writeable:
+                arr.flags.writeable = False
 
     # ------------------------------------------------------------ basics
     def __len__(self) -> int:
@@ -471,19 +508,25 @@ class WorkloadTable:
         """Hashable content identity (what the engine's whole-table cache is
         keyed on): a fixed-size blake2b digest of the column bytes + the
         small vocab/hit-rate tuples, so neither the token nor the cache key
-        retains a raw copy of the table.  Computed once and cached —
-        replays of the same table object skip even the digest."""
+        retains a raw copy of the table.  Vocab-coded columns are hashed in
+        canonical (used-and-sorted) form, so semantically identical tables
+        built with different precision/wclass insertion orders — ``concat``
+        operand order, decoded wire tables, ``take`` subsets — share one
+        token and hit the memo cache.  Computed once and cached — replays
+        of the same table object skip even the digest."""
         tok = self._token
         if tok is None:
             hr = None if self.hit_rates is None else tuple(
                 tuple(sorted(h.items())) if h else ()
                 for h in self.hit_rates)
+            pb, pv = _canonical_codes(self.precision_codes,
+                                      self.precision_vocab)
+            wb, wv = _canonical_codes(self.wclass_codes, self.wclass_vocab)
             h = hashlib.blake2b(digest_size=16)
             h.update(self.cols.tobytes())
-            h.update(self.precision_codes.tobytes())
-            h.update(self.wclass_codes.tobytes())
-            tok = (h.digest(), len(self), self.precision_vocab,
-                   self.wclass_vocab, hr)
+            h.update(pb)
+            h.update(wb)
+            tok = (h.digest(), len(self), pv, wv, hr)
             self._token = tok
         return tok
 
@@ -750,6 +793,48 @@ class LatticeSpec:
         chunked machinery (zero-copy row windows)."""
         return _TableSpec(table)
 
+    # ------------------------------------------------------- serialization
+    def to_plan(self, table_sink=None) -> Dict:
+        """JSON-safe structural description of this spec — the wire form
+        ``repro.serve.codec`` ships lattice plans in (a plan is tiny even
+        when the lattice it describes has 10^9 rows).
+
+        Built tables nested in the plan cannot be JSON: ``table_sink``
+        is called once per table and must return a small JSON-safe
+        reference (the codec appends the table's columns as a binary
+        section and returns its index).
+        """
+        raise NotImplementedError
+
+    @staticmethod
+    def from_plan(plan: Dict,
+                  tables: Sequence["WorkloadTable"] = ()) -> "LatticeSpec":
+        """Rebuild a spec from ``to_plan`` output.  ``tables`` resolves the
+        references a ``table_sink`` handed out during encoding."""
+        kind = plan.get("kind")
+        if kind == "cartesian":
+            grids = {}
+            for key, vals in plan["grids"].items():
+                if key == "tile":
+                    vals = [TileConfig(*map(int, t)) for t in vals]
+                grids[key] = vals
+            return _CartesianSpec(Workload.from_dict(plan["base"]), grids)
+        if kind == "tile_lattice":
+            return _TileLatticeSpec(
+                Workload.from_dict(plan["base"]),
+                [TileConfig(*map(int, t)) for t in plan["tiles"]])
+        if kind == "concat":
+            return _ConcatSpec([LatticeSpec.from_plan(p, tables)
+                                for p in plan["children"]])
+        if kind == "table":
+            ref = plan.get("ref")
+            if not isinstance(ref, int) or not 0 <= ref < len(tables):
+                raise ValueError(
+                    f"plan references table {ref!r} but only "
+                    f"{len(tables)} table(s) were provided")
+            return _TableSpec(tables[ref])
+        raise ValueError(f"unknown lattice plan kind {kind!r}")
+
 
 class _CartesianSpec(LatticeSpec):
     """Cartesian grid: each chunk decodes global row indices into per-axis
@@ -758,29 +843,40 @@ class _CartesianSpec(LatticeSpec):
     def __init__(self, base: Workload, field_grids: Dict):
         self.base = base
         self.keys = tuple(field_grids)
+        self._plan_grids: Dict[str, List] = {}
         sizes = []
         prepped = []
         for key in self.keys:
             vals = list(field_grids[key])
+            # _plan_grids is filled per branch, after validation, so an
+            # invalid axis still raises the documented ValueError below
+            # (floats for numeric axes keep the plan json-safe even for
+            # numpy scalars).
             if key == "precision":
-                codes, vocab = _encode([str(v) for v in vals])
+                strs = [str(v) for v in vals]
+                codes, vocab = _encode(strs)
                 prepped.append(("precision", codes, vocab))
+                self._plan_grids[key] = strs
             elif key == "wclass":
                 for v in vals:
                     if v not in VALID_CLASSES:
                         raise ValueError(f"workload class {v!r} not in "
                                          f"{VALID_CLASSES}")
-                codes, vocab = _encode([str(v) for v in vals])
+                strs = [str(v) for v in vals]
+                codes, vocab = _encode(strs)
                 prepped.append(("wclass", codes, vocab))
+                self._plan_grids[key] = strs
             elif key == "tile":
                 prepped.append((
                     "tile",
                     np.array([c.bm for c in vals], dtype=np.float64),
                     np.array([c.bn for c in vals], dtype=np.float64),
                     np.array([c.bk for c in vals], dtype=np.float64)))
+                self._plan_grids[key] = [[c.bm, c.bn, c.bk] for c in vals]
             elif key in CARTESIAN_COLS:
-                prepped.append(("col", CARTESIAN_COLS[key],
-                                np.array(vals, dtype=np.float64)))
+                arr = np.array(vals, dtype=np.float64)
+                prepped.append(("col", CARTESIAN_COLS[key], arr))
+                self._plan_grids[key] = [float(v) for v in arr]
             else:
                 raise ValueError(
                     f"cartesian cannot sweep field {key!r}; valid: "
@@ -806,6 +902,10 @@ class _CartesianSpec(LatticeSpec):
     @property
     def n_rows(self) -> int:
         return self._n
+
+    def to_plan(self, table_sink=None) -> Dict:
+        return {"kind": "cartesian", "base": self.base.to_dict(),
+                "grids": {k: list(v) for k, v in self._plan_grids.items()}}
 
     def chunk(self, lo: int, hi: int) -> WorkloadTable:
         self._check_window(lo, hi)
@@ -852,6 +952,12 @@ class _TileLatticeSpec(LatticeSpec):
     def n_rows(self) -> int:
         return len(self._bm)
 
+    def to_plan(self, table_sink=None) -> Dict:
+        return {"kind": "tile_lattice", "base": self.base.to_dict(),
+                "tiles": [[int(m), int(n), int(k)] for m, n, k in
+                          zip(self._bm.tolist(), self._bn.tolist(),
+                              self._bk.tolist())]}
+
     def chunk(self, lo: int, hi: int) -> WorkloadTable:
         self._check_window(lo, hi)
         from .hardware import BYTES_PER_ELEM
@@ -886,6 +992,12 @@ class _TableSpec(LatticeSpec):
     def _has_row_names(self) -> bool:
         return isinstance(self.table.names, tuple)
 
+    def to_plan(self, table_sink=None) -> Dict:
+        if table_sink is None:
+            raise TypeError("plan contains a built table; provide a "
+                            "table_sink to reference it")
+        return {"kind": "table", "ref": table_sink(self.table)}
+
     def chunk(self, lo: int, hi: int) -> WorkloadTable:
         self._check_window(lo, hi)
         return self.table._slice(lo, hi)
@@ -907,6 +1019,10 @@ class _ConcatSpec(LatticeSpec):
     @property
     def n_rows(self) -> int:
         return self._offsets[-1]
+
+    def to_plan(self, table_sink=None) -> Dict:
+        return {"kind": "concat",
+                "children": [s.to_plan(table_sink) for s in self.specs]}
 
     def _has_row_names(self) -> bool:
         return self._row_names

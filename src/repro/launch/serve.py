@@ -38,14 +38,22 @@ def serve(arch: str, *, smoke: bool = True, batch: int = 4,
     return out
 
 
-def main(argv=None):
+def build_parser() -> argparse.ArgumentParser:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True)
-    ap.add_argument("--smoke", action="store_true", default=True)
+    # BooleanOptionalAction so --no-smoke actually reaches the full-size
+    # configs (action="store_true" with default=True made every invocation
+    # smoke mode, flag or not)
+    ap.add_argument("--smoke", action=argparse.BooleanOptionalAction,
+                    default=True)
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--max-new", type=int, default=16)
-    args = ap.parse_args(argv)
+    return ap
+
+
+def main(argv=None):
+    args = build_parser().parse_args(argv)
     serve(args.arch, smoke=args.smoke, batch=args.batch,
           prompt_len=args.prompt_len, max_new=args.max_new)
 

@@ -1,0 +1,51 @@
+"""Prediction-serving subsystem: wire codec + HTTP sweep server + client.
+
+The analytical models answer "what will this kernel cost on B200/MI300A"
+in microseconds, which makes them viable as an online pricing service.
+This package opens the repo's first cross-process scenario:
+
+``repro.serve.codec``
+    Versioned binary wire format for ``WorkloadTable`` (one contiguous
+    float64 matrix + two small code arrays — exactly the shape the
+    columnar engine consumes, so decode is zero-copy), lazy
+    ``LatticeSpec`` plans, and the result types (``SweepWinner`` lists,
+    totals columns).
+
+``repro.serve.server``
+    Stdlib-only HTTP server that owns one ``SweepEngine`` and a reusable
+    worker pool, with request micro-batching: concurrent small requests
+    for the same hardware fuse into one columnar evaluation.
+
+``repro.serve.client``
+    Blocking client speaking the same codec over ``http.client``.
+
+See ``README.md`` in this directory for the wire format, the coalescing
+contract, and when to hit the server vs calling ``SweepEngine``
+in-process.
+"""
+from .codec import (WIRE_VERSION, WireFormatError, decode_json,
+                    decode_request, decode_spec, decode_table,
+                    decode_totals, decode_winners, encode_error,
+                    encode_json, encode_request, encode_spec, encode_table,
+                    encode_totals, encode_winners, raise_if_error)
+
+
+def __getattr__(name):
+    # lazy so `python -m repro.serve.server` doesn't import the server
+    # module twice (once via the package, once as __main__)
+    if name == "PredictionClient":
+        from .client import PredictionClient
+        return PredictionClient
+    if name == "PredictionServer":
+        from .server import PredictionServer
+        return PredictionServer
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+
+
+__all__ = [
+    "WIRE_VERSION", "WireFormatError", "PredictionClient",
+    "PredictionServer", "decode_json", "decode_request", "decode_spec",
+    "decode_table", "decode_totals", "decode_winners", "encode_error",
+    "encode_json", "encode_request", "encode_spec", "encode_table",
+    "encode_totals", "encode_winners", "raise_if_error",
+]

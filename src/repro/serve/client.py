@@ -1,0 +1,204 @@
+"""Blocking client for the prediction server (stdlib ``http.client``).
+
+One ``PredictionClient`` is safe to share across threads: each thread
+keeps its own persistent HTTP/1.1 connection (``threading.local``), so a
+load generator with N threads holds N sockets — reconnecting per request
+would dominate the microsecond-scale model latencies being measured.
+
+The client speaks exactly the in-process sweep API shapes:
+``argmin``/``topk``/``pareto`` return ``SweepWinner`` objects and
+``predict_totals`` returns the float64 totals column, all bit-identical
+to calling ``sweep.argmin_table``/... locally (the acceptance criterion
+tests/test_serve_server.py pins).  Pass a built ``WorkloadTable`` for
+sweeps you hold, or a lazy ``LatticeSpec`` to let the server stream a
+lattice far bigger than the wire could carry materialized.
+"""
+from __future__ import annotations
+
+import argparse
+import http.client
+import threading
+from typing import Optional, Sequence, Tuple
+
+import numpy as np
+
+from . import codec
+
+
+class PredictionClient:
+    """Client for one server address."""
+
+    def __init__(self, host: str = "127.0.0.1", port: int = 8707, *,
+                 timeout: float = 120.0):
+        self.host = host
+        self.port = port
+        self.timeout = timeout
+        self._local = threading.local()
+        self._conns: set = set()      # every thread's conn, for close()
+        self._conns_lock = threading.Lock()
+
+    # ------------------------------------------------------------ plumbing
+    def _conn(self) -> http.client.HTTPConnection:
+        conn = getattr(self._local, "conn", None)
+        if conn is None:
+            conn = http.client.HTTPConnection(self.host, self.port,
+                                              timeout=self.timeout)
+            self._local.conn = conn
+        with self._conns_lock:
+            # re-registering on every request keeps the set accurate even
+            # when http.client transparently reconnects a closed conn
+            self._conns.add(conn)
+        return conn
+
+    def _discard_conn(self) -> None:
+        """Drop only the calling thread's socket (stale keep-alive
+        rebuild) — other threads' in-flight connections stay up."""
+        conn = getattr(self._local, "conn", None)
+        if conn is not None:
+            with self._conns_lock:
+                self._conns.discard(conn)
+            try:
+                conn.close()
+            finally:
+                self._local.conn = None
+
+    def _request(self, method: str, path: str,
+                 body: Optional[bytes] = None) -> bytes:
+        headers = {"Content-Type": "application/x-repro-wire"} \
+            if body is not None else {}
+        for attempt in (0, 1):
+            conn = self._conn()
+            try:
+                conn.request(method, path, body=body, headers=headers)
+                resp = conn.getresponse()
+                data = resp.read()
+                break
+            except (http.client.HTTPException, ConnectionError, OSError):
+                # Stale keep-alive socket: rebuild once, then give up.
+                # The failure usually surfaces at getresponse(), after the
+                # request bytes went out, so the retry can re-execute a
+                # POST the server already ran — every endpoint must
+                # therefore stay idempotent (all current ones are,
+                # including clear_cache).
+                self._discard_conn()
+                if attempt:
+                    raise
+        codec.raise_if_error(data)
+        return data
+
+    def close(self) -> None:
+        """Close every thread's persistent connection (the per-thread
+        sockets a shared client accumulates), not just the caller's."""
+        self._discard_conn()
+        with self._conns_lock:
+            conns, self._conns = list(self._conns), set()
+        for conn in conns:
+            try:
+                conn.close()
+            except Exception:       # noqa: BLE001 — best-effort teardown
+                pass
+
+    def __enter__(self) -> "PredictionClient":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+    # ------------------------------------------------------------- queries
+    def health(self) -> dict:
+        return codec.decode_json(self._request("GET", "/v1/health"))
+
+    def cache_stats(self) -> dict:
+        return codec.decode_json(self._request("GET", "/v1/cache_stats"))
+
+    def clear_cache(self) -> dict:
+        return codec.decode_json(
+            self._request("POST", "/v1/clear_cache", b""))
+
+    def _sweep(self, op: str, source, hw: str, **kw) -> bytes:
+        body = codec.encode_request(op, source, hw=hw, **kw)
+        return self._request("POST", f"/v1/{op}", body)
+
+    def predict_totals(self, source, hw: str, *,
+                       model: Optional[str] = None,
+                       chunk_size: Optional[int] = None, jobs=None,
+                       coalesce: bool = True) -> np.ndarray:
+        """Every row's total seconds (the ``predict_table(...).totals``
+        column, served)."""
+        data = self._sweep("predict_table", source, hw, model=model,
+                           chunk_size=chunk_size, jobs=jobs,
+                           coalesce=coalesce)
+        return codec.decode_totals(data)
+
+    def argmin(self, source, hw: str, *, model: Optional[str] = None,
+               chunk_size: Optional[int] = None, jobs=None,
+               coalesce: bool = True):
+        """The cheapest configuration (a ``SweepWinner``)."""
+        data = self._sweep("argmin", source, hw, model=model,
+                           chunk_size=chunk_size, jobs=jobs,
+                           coalesce=coalesce)
+        return codec.decode_winners(data)[0]
+
+    def topk(self, source, hw: str, k: int, *,
+             model: Optional[str] = None,
+             chunk_size: Optional[int] = None, jobs=None,
+             coalesce: bool = True):
+        data = self._sweep("topk", source, hw, model=model, k=int(k),
+                           chunk_size=chunk_size, jobs=jobs,
+                           coalesce=coalesce)
+        return codec.decode_winners(data)
+
+    def pareto(self, source, hw: str, *,
+               objectives: Sequence[str] = ("compute", "memory"),
+               model: Optional[str] = None,
+               chunk_size: Optional[int] = None, jobs=None,
+               coalesce: bool = True):
+        data = self._sweep("pareto", source, hw, model=model,
+                           objectives=tuple(objectives),
+                           chunk_size=chunk_size, jobs=jobs,
+                           coalesce=coalesce)
+        return codec.decode_winners(data)
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(
+        description="Query a running prediction server")
+    ap.add_argument("--host", default="127.0.0.1")
+    ap.add_argument("--port", type=int, default=8707)
+    sub = ap.add_subparsers(dest="cmd", required=True)
+    sub.add_parser("health")
+    sub.add_parser("cache-stats")
+    demo = sub.add_parser(
+        "argmin-demo",
+        help="price a GEMM tile lattice on the server and print the "
+             "winning tile")
+    demo.add_argument("--hw", default="b200")
+    demo.add_argument("--gemm", default="8192,8192,8192",
+                      help="m,n,k")
+    demo.add_argument("--precision", default="fp16")
+    args = ap.parse_args(argv)
+
+    client = PredictionClient(args.host, args.port)
+    if args.cmd == "health":
+        print(client.health())
+    elif args.cmd == "cache-stats":
+        print(client.cache_stats())
+    else:
+        from ..core.workload import TileConfig, WorkloadTable, gemm_workload
+        m, n, k = (int(x) for x in args.gemm.split(","))
+        tiles = [TileConfig(bm, bn, bk)
+                 for bm in (64, 128, 256) for bn in (64, 128, 256)
+                 for bk in (16, 32, 64)]
+        table = WorkloadTable.tile_lattice(
+            gemm_workload("demo", m, n, k, precision=args.precision),
+            tiles)
+        win = client.argmin(table, args.hw)
+        tile = tiles[win.index]
+        print(f"argmin over {len(tiles)} tiles on {args.hw}: "
+              f"bm={tile.bm} bn={tile.bn} bk={tile.bk} "
+              f"-> {win.total * 1e3:.3f} ms ({win.breakdown.dominant}"
+              f"-bound)")
+
+
+if __name__ == "__main__":
+    main()

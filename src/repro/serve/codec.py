@@ -1,0 +1,468 @@
+"""Versioned binary wire codec for tables, lattice plans and sweep results.
+
+One message is one self-contained byte string:
+
+    offset  size          field
+    0       4             magic ``b"RPRW"``
+    4       2             wire version (little-endian u16, currently 1)
+    6       2             message type (u16, ``MSG_*``)
+    8       4             section count (u32)
+    12      24 * count    section table: (tag ``4s``, offset u64, len u64)
+    ...                   section payloads, each 8-byte aligned
+
+Sections come in two kinds: small structured metadata travels as one
+UTF-8 JSON section (``meta``), bulk numeric data travels as raw
+little-endian array bytes (``cols``/``pcod``/``wcod``/``tots``).  A
+``WorkloadTable`` is therefore exactly its in-memory shape on the wire —
+the (n, NV_COLS) float64 matrix plus two int64 code arrays — and decode
+is zero-copy: NumPy views over the received buffer, read-only because the
+buffer is immutable, which is precisely the frozen-columns contract the
+engine's caches rely on.  ``content_token()`` of a decoded table equals
+the sender's (property-tested in tests/test_serve_codec.py).
+
+``LatticeSpec`` messages carry the spec's structural plan (JSON, tiny even
+for 10^9-row lattices) plus any built tables the plan references as nested
+table messages.  Result messages (``SweepWinner`` lists) are pure JSON —
+Python's float repr round-trips bit-exactly, and the stdlib encoder/parser
+pair handles NaN/Infinity — while totals columns are raw float64.
+
+Malformed input (truncated buffers, bad magic, unsupported versions,
+out-of-range section offsets, wrong payload sizes) raises
+``WireFormatError`` — never an IndexError or struct.error a server loop
+would have to treat as a crash.
+"""
+from __future__ import annotations
+
+import json
+import struct
+from typing import Dict, List, Optional, Sequence, Tuple, Union
+
+import numpy as np
+
+from ..core.workload import LatticeSpec, NV_COLS, TimeBreakdown, \
+    WorkloadTable, row_from_tb, tb_from_row
+
+MAGIC = b"RPRW"
+WIRE_VERSION = 1
+
+MSG_TABLE = 1
+MSG_SPEC = 2
+MSG_REQUEST = 3
+MSG_WINNERS = 4
+MSG_TOTALS = 5
+MSG_JSON = 6
+MSG_ERROR = 7
+
+_HEADER = struct.Struct("<4sHHI")
+_SECTION = struct.Struct("<4sQQ")
+_MAX_SECTIONS = 1024
+
+Buf = Union[bytes, bytearray, memoryview]
+
+
+class WireFormatError(ValueError):
+    """Raised for any malformed/unsupported wire payload."""
+
+
+# ---------------------------------------------------------------------------
+# Envelope
+# ---------------------------------------------------------------------------
+
+def _pack(msg_type: int, sections: Sequence[Tuple[bytes, Buf]]) -> bytes:
+    """Assemble an envelope; each section payload lands 8-byte aligned so
+    float64/int64 decode views are aligned views of the message buffer."""
+    count = len(sections)
+    table_end = _HEADER.size + _SECTION.size * count
+    parts: List[bytes] = []
+    entries = []
+    pos = table_end
+    for tag, payload in sections:
+        pad = (-pos) % 8
+        if pad:
+            parts.append(b"\x00" * pad)
+            pos += pad
+        entries.append((tag, pos, len(payload)))
+        parts.append(bytes(payload))
+        pos += len(payload)
+    head = [_HEADER.pack(MAGIC, WIRE_VERSION, msg_type, count)]
+    head += [_SECTION.pack(tag, off, ln) for tag, off, ln in entries]
+    return b"".join(head + parts)
+
+
+def _unpack(data: Buf) -> Tuple[int, Dict[bytes, memoryview]]:
+    """(msg_type, {tag: payload view}) with every bound checked."""
+    mv = memoryview(data)
+    if len(mv) < _HEADER.size:
+        raise WireFormatError(
+            f"truncated message: {len(mv)} bytes < {_HEADER.size}-byte "
+            f"header")
+    magic, version, msg_type, count = _HEADER.unpack_from(mv, 0)
+    if magic != MAGIC:
+        raise WireFormatError(f"bad magic {bytes(magic)!r} "
+                              f"(expected {MAGIC!r})")
+    if version > WIRE_VERSION or version < 1:
+        raise WireFormatError(
+            f"unsupported wire version {version} (this codec speaks "
+            f"<= {WIRE_VERSION})")
+    if count > _MAX_SECTIONS:
+        raise WireFormatError(f"section count {count} exceeds "
+                              f"{_MAX_SECTIONS}")
+    table_end = _HEADER.size + _SECTION.size * count
+    if len(mv) < table_end:
+        raise WireFormatError(
+            f"truncated section table: {len(mv)} bytes < {table_end}")
+    sections: Dict[bytes, memoryview] = {}
+    for i in range(count):
+        tag, off, ln = _SECTION.unpack_from(
+            mv, _HEADER.size + _SECTION.size * i)
+        if off < table_end or off + ln > len(mv):
+            raise WireFormatError(
+                f"section {bytes(tag)!r} spans [{off}, {off + ln}) outside "
+                f"payload [{table_end}, {len(mv)})")
+        sections[bytes(tag)] = mv[off:off + ln]
+    return msg_type, sections
+
+
+def _expect(data: Buf, want_type: int, label: str
+            ) -> Dict[bytes, memoryview]:
+    msg_type, sections = _unpack(data)
+    if msg_type != want_type:
+        raise WireFormatError(
+            f"expected {label} message (type {want_type}), got type "
+            f"{msg_type}")
+    return sections
+
+
+def _meta(sections: Dict[bytes, memoryview]) -> Dict:
+    raw = sections.get(b"meta")
+    if raw is None:
+        raise WireFormatError("message is missing its meta section")
+    try:
+        meta = json.loads(bytes(raw).decode("utf-8"))
+    except (UnicodeDecodeError, json.JSONDecodeError) as e:
+        raise WireFormatError(f"meta section is not valid JSON: {e}") \
+            from None
+    if not isinstance(meta, dict):
+        raise WireFormatError("meta section must be a JSON object")
+    return meta
+
+
+def _json_bytes(obj) -> bytes:
+    return json.dumps(obj, separators=(",", ":")).encode("utf-8")
+
+
+def _array_section(sections: Dict[bytes, memoryview], tag: bytes,
+                   dtype, count: int) -> np.ndarray:
+    """Zero-copy typed view over a section, validated against the expected
+    element count.  Views of a bytes-backed memoryview are read-only."""
+    raw = sections.get(tag)
+    if raw is None:
+        raise WireFormatError(f"message is missing its {tag!r} section")
+    want = count * np.dtype(dtype).itemsize
+    if len(raw) != want:
+        raise WireFormatError(
+            f"section {tag!r} holds {len(raw)} bytes, expected {want} "
+            f"({count} x {np.dtype(dtype).name})")
+    return np.frombuffer(raw, dtype=dtype)
+
+
+def message_type(data: Buf) -> int:
+    """Peek a message's type (validates the envelope)."""
+    return _unpack(data)[0]
+
+
+# ---------------------------------------------------------------------------
+# WorkloadTable
+# ---------------------------------------------------------------------------
+
+def encode_table(table: WorkloadTable) -> bytes:
+    names = table.names
+    if isinstance(names, tuple):
+        meta_names: object = list(names)
+        names_kind = "rows"
+    elif names is None:
+        meta_names, names_kind = None, "none"
+    else:
+        meta_names, names_kind = str(names), "shared"
+    hr = None
+    if table.hit_rates is not None:
+        hr = [None if h is None else sorted(h.items())
+              for h in table.hit_rates]
+    meta = {
+        "n": len(table),
+        "nv_cols": NV_COLS,
+        "precision_vocab": list(table.precision_vocab),
+        "wclass_vocab": list(table.wclass_vocab),
+        "names_kind": names_kind,
+        "names": meta_names,
+        "hit_rates": hr,
+        "name_offset": table.name_offset,
+    }
+    return _pack(MSG_TABLE, [
+        (b"meta", _json_bytes(meta)),
+        (b"cols", np.ascontiguousarray(table.cols).tobytes()),
+        (b"pcod", np.ascontiguousarray(table.precision_codes,
+                                       dtype=np.int64).tobytes()),
+        (b"wcod", np.ascontiguousarray(table.wclass_codes,
+                                       dtype=np.int64).tobytes()),
+    ])
+
+
+def decode_table(data: Buf) -> WorkloadTable:
+    """Zero-copy decode: the returned table's columns are read-only NumPy
+    views over ``data`` (keep the buffer alive as long as the table)."""
+    sections = _expect(data, MSG_TABLE, "table")
+    meta = _meta(sections)
+    try:
+        n = int(meta["n"])
+        nv = int(meta["nv_cols"])
+        pv = tuple(str(v) for v in meta["precision_vocab"])
+        wv = tuple(str(v) for v in meta["wclass_vocab"])
+        names_kind = meta["names_kind"]
+        name_offset = int(meta["name_offset"])
+    except (KeyError, TypeError, ValueError) as e:
+        raise WireFormatError(f"bad table meta: {e}") from None
+    if n < 0:
+        raise WireFormatError(f"negative row count {n}")
+    if nv != NV_COLS:
+        raise WireFormatError(
+            f"table has {nv} numeric columns, this build expects "
+            f"{NV_COLS} — incompatible schema generation")
+    cols = _array_section(sections, b"cols", np.float64,
+                          n * NV_COLS).reshape(n, NV_COLS)
+    pcod = _array_section(sections, b"pcod", np.int64, n)
+    wcod = _array_section(sections, b"wcod", np.int64, n)
+    if len(pcod) and (pv == () or int(pcod.max()) >= len(pv)
+                      or int(pcod.min()) < 0):
+        raise WireFormatError("precision codes reference entries outside "
+                              "the vocabulary")
+    if len(wcod) and (wv == () or int(wcod.max()) >= len(wv)
+                      or int(wcod.min()) < 0):
+        raise WireFormatError("wclass codes reference entries outside "
+                              "the vocabulary")
+    if names_kind == "rows":
+        names_raw = meta.get("names")
+        if not isinstance(names_raw, list) or len(names_raw) != n:
+            raise WireFormatError("per-row names must list one name per "
+                                  "row")
+        names: object = tuple(str(x) for x in names_raw)
+    elif names_kind == "shared":
+        names = str(meta.get("names"))
+    elif names_kind == "none":
+        names = None
+    else:
+        raise WireFormatError(f"unknown names_kind {names_kind!r}")
+    hr_raw = meta.get("hit_rates")
+    hit_rates = None
+    if hr_raw is not None:
+        if not isinstance(hr_raw, list) or len(hr_raw) != n:
+            raise WireFormatError("hit_rates must list one entry per row")
+        try:
+            hit_rates = tuple(
+                None if h is None else
+                {str(k): float(v) for k, v in h} for h in hr_raw)
+        except (TypeError, ValueError) as e:
+            raise WireFormatError(f"bad hit_rates payload: {e}") from None
+    return WorkloadTable(cols, pcod.astype(np.intp, copy=False), pv,
+                         wcod.astype(np.intp, copy=False), wv,
+                         names, hit_rates, name_offset=name_offset)
+
+
+# ---------------------------------------------------------------------------
+# LatticeSpec
+# ---------------------------------------------------------------------------
+
+def encode_spec(spec: LatticeSpec) -> bytes:
+    tables: List[WorkloadTable] = []
+
+    def sink(table: WorkloadTable) -> int:
+        tables.append(table)
+        return len(tables) - 1
+
+    plan = spec.to_plan(sink)
+    if len(tables) > 99:
+        raise WireFormatError(
+            f"plan references {len(tables)} built tables (max 99); "
+            f"concat them into one table first")
+    sections: List[Tuple[bytes, Buf]] = [
+        (b"meta", _json_bytes({"plan": plan}))]
+    for i, t in enumerate(tables):
+        sections.append((f"tb{i:02d}".encode(), encode_table(t)))
+    return _pack(MSG_SPEC, sections)
+
+
+def decode_spec(data: Buf) -> LatticeSpec:
+    sections = _expect(data, MSG_SPEC, "spec")
+    meta = _meta(sections)
+    plan = meta.get("plan")
+    if not isinstance(plan, dict):
+        raise WireFormatError("spec meta is missing its plan object")
+    tables = []
+    for i in range(100):
+        raw = sections.get(f"tb{i:02d}".encode())
+        if raw is None:
+            break
+        tables.append(decode_table(raw))
+    try:
+        return LatticeSpec.from_plan(plan, tables)
+    except (KeyError, TypeError, ValueError) as e:
+        if isinstance(e, WireFormatError):
+            raise
+        raise WireFormatError(f"bad lattice plan: {e}") from None
+
+
+# ---------------------------------------------------------------------------
+# Requests
+# ---------------------------------------------------------------------------
+
+REQUEST_OPS = ("predict_table", "argmin", "topk", "pareto")
+
+
+def encode_request(op: str, source, *, hw: str,
+                   model: Optional[str] = None,
+                   k: Optional[int] = None,
+                   objectives: Optional[Sequence[str]] = None,
+                   chunk_size: Optional[int] = None,
+                   jobs=None,
+                   coalesce: bool = True) -> bytes:
+    """One prediction request: an operation + its parameters + the sweep
+    source (a built ``WorkloadTable`` or a lazy ``LatticeSpec``).
+    Hardware travels by registry name — parameter files live server-side.
+    """
+    if op not in REQUEST_OPS:
+        raise ValueError(f"unknown op {op!r}; valid: {REQUEST_OPS}")
+    meta = {"op": op, "hw": str(hw), "model": model, "k": k,
+            "objectives": list(objectives) if objectives else None,
+            "chunk_size": chunk_size, "jobs": jobs,
+            "coalesce": bool(coalesce)}
+    sections: List[Tuple[bytes, Buf]] = [(b"meta", _json_bytes(meta))]
+    if isinstance(source, WorkloadTable):
+        sections.append((b"tabl", encode_table(source)))
+    elif isinstance(source, LatticeSpec):
+        sections.append((b"spec", encode_spec(source)))
+    else:
+        raise TypeError(f"source must be WorkloadTable or LatticeSpec, "
+                        f"got {type(source).__name__}")
+    return _pack(MSG_REQUEST, sections)
+
+
+def decode_request(data: Buf):
+    """(op, source, params dict).  ``source`` is a WorkloadTable or a
+    LatticeSpec; params carries hw/model/k/objectives/chunk_size/jobs/
+    coalesce exactly as sent."""
+    sections = _expect(data, MSG_REQUEST, "request")
+    meta = _meta(sections)
+    op = meta.get("op")
+    if op not in REQUEST_OPS:
+        raise WireFormatError(f"unknown request op {op!r}")
+    if not isinstance(meta.get("hw"), str):
+        raise WireFormatError("request is missing its hardware name")
+    table_raw = sections.get(b"tabl")
+    spec_raw = sections.get(b"spec")
+    if (table_raw is None) == (spec_raw is None):
+        raise WireFormatError(
+            "request must carry exactly one of a table or a spec section")
+    source = decode_table(table_raw) if table_raw is not None \
+        else decode_spec(spec_raw)
+    return op, source, meta
+
+
+# ---------------------------------------------------------------------------
+# Results
+# ---------------------------------------------------------------------------
+
+def _tb_to_jsonable(tb: TimeBreakdown) -> Dict:
+    fields, dkeys, dvals = row_from_tb(tb)
+    return {"fields": list(fields), "detail_keys": list(dkeys),
+            "detail_vals": list(dvals)}
+
+
+def _tb_from_jsonable(d: Dict) -> TimeBreakdown:
+    try:
+        return tb_from_row((tuple(float(v) for v in d["fields"]),
+                            tuple(str(k) for k in d["detail_keys"]),
+                            tuple(float(v) for v in d["detail_vals"])))
+    except (KeyError, TypeError, ValueError) as e:
+        raise WireFormatError(f"bad breakdown payload: {e}") from None
+
+
+def encode_winners(winners) -> bytes:
+    """A ``SweepWinner`` list (argmin returns a list of one).  Floats are
+    JSON round-trip exact (repr shortest round-trip; NaN/Infinity via the
+    stdlib's JSON extension)."""
+    if not isinstance(winners, (list, tuple)):
+        winners = [winners]
+    meta = {"winners": [
+        {"index": w.index, "name": w.name, "total": w.total,
+         "breakdown": _tb_to_jsonable(w.breakdown)} for w in winners]}
+    return _pack(MSG_WINNERS, [(b"meta", json.dumps(meta).encode("utf-8"))])
+
+
+def decode_winners(data: Buf):
+    from ..core.sweep import SweepWinner
+    sections = _expect(data, MSG_WINNERS, "winners")
+    meta = _meta(sections)
+    raw = meta.get("winners")
+    if not isinstance(raw, list):
+        raise WireFormatError("winners meta is missing its list")
+    out = []
+    for d in raw:
+        try:
+            out.append(SweepWinner(
+                index=int(d["index"]), name=str(d["name"]),
+                total=float(d["total"]),
+                breakdown=_tb_from_jsonable(d["breakdown"])))
+        except (KeyError, TypeError, ValueError) as e:
+            if isinstance(e, WireFormatError):
+                raise
+            raise WireFormatError(f"bad winner payload: {e}") from None
+    return out
+
+
+def encode_totals(totals: np.ndarray) -> bytes:
+    arr = np.ascontiguousarray(totals, dtype=np.float64)
+    return _pack(MSG_TOTALS, [
+        (b"meta", _json_bytes({"n": int(arr.shape[0])})),
+        (b"tots", arr.tobytes()),
+    ])
+
+
+def decode_totals(data: Buf) -> np.ndarray:
+    """Read-only zero-copy float64 view over the message buffer."""
+    sections = _expect(data, MSG_TOTALS, "totals")
+    meta = _meta(sections)
+    try:
+        n = int(meta["n"])
+    except (KeyError, TypeError, ValueError) as e:
+        raise WireFormatError(f"bad totals meta: {e}") from None
+    return _array_section(sections, b"tots", np.float64, n)
+
+
+def encode_json(obj, msg_type: int = MSG_JSON) -> bytes:
+    """Small structured payloads (health, cache stats)."""
+    return _pack(msg_type, [(b"meta", json.dumps(
+        {"payload": obj}).encode("utf-8"))])
+
+
+def decode_json(data: Buf):
+    sections = _expect(data, MSG_JSON, "json")
+    return _meta(sections).get("payload")
+
+
+class RemoteError(RuntimeError):
+    """A server-side failure, re-raised client-side with the original
+    exception class name preserved in the message."""
+
+
+def encode_error(exc: BaseException) -> bytes:
+    return _pack(MSG_ERROR, [(b"meta", _json_bytes(
+        {"error": type(exc).__name__, "message": str(exc)}))])
+
+
+def raise_if_error(data: Buf) -> None:
+    """Raise ``RemoteError`` when ``data`` is an error message; no-op (and
+    no validation beyond the envelope) otherwise."""
+    if message_type(data) == MSG_ERROR:
+        meta = _meta(_unpack(data)[1])
+        raise RemoteError(f"{meta.get('error', 'Error')}: "
+                          f"{meta.get('message', '')}")

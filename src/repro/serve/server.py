@@ -1,0 +1,473 @@
+"""HTTP prediction server: one ``SweepEngine``, micro-batched requests.
+
+Stdlib only (``http.server``): the server owns one memoizing
+``SweepEngine`` (so repeated sweeps hit the whole-table content-token
+cache across requests and clients), one optional ``core.parallel``
+``WorkerPool`` (reused across streamed-lattice requests instead of paying
+pool startup per query), and one request coalescer.
+
+Endpoints (wire bodies are ``repro.serve.codec`` messages):
+
+    GET  /v1/health        liveness + wire version + known hardware
+    GET  /v1/cache_stats   engine cache counters + coalescer counters
+    POST /v1/predict_table REQUEST(table|spec) -> TOTALS
+    POST /v1/argmin        REQUEST(table|spec) -> WINNERS (list of one)
+    POST /v1/topk          REQUEST(table|spec) -> WINNERS
+    POST /v1/pareto        REQUEST(table|spec) -> WINNERS
+    POST /v1/predict       REQUEST, op taken from the request meta
+    POST /v1/clear_cache   admin: drop every engine cache tier
+
+Micro-batching contract: concurrent **table** requests that share
+(hardware, model route) and did not opt out (``coalesce=False``) are
+fused — their tables concatenate into one columnar evaluation and each
+request's answer reduces over its own row window
+(``sweep.*_from_result``).  The model backends are row-elementwise, so
+fused answers are bit-identical to evaluating each request alone; the
+fused table prices with the memo cache bypassed so transient
+concatenations never churn the table LRU.  Single-request groups take the
+normal cached path, which is what makes identical replayed sweeps a
+content-token hit.  **Spec** (streamed-lattice) requests are never
+coalesced — each one already streams O(chunk) and may shard across the
+worker pool.
+
+Failures decode-side (bad magic, truncation, unknown hardware, wrong op)
+return HTTP 400 with an ERROR message body; unexpected server faults
+return 500.  The serving loop itself never dies on a bad request.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import threading
+import time
+from collections import deque
+from http.server import BaseHTTPRequestHandler, ThreadingHTTPServer
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from ..core import hardware, sweep
+from ..core.workload import LatticeSpec, WorkloadTable
+from . import codec
+
+#: refuse request bodies beyond this (a 2^31-row table is a streamed
+#: lattice, not an upload)
+MAX_BODY_BYTES = 1 << 30
+
+#: extra seconds the coalescer holds a batch open for companions.  The
+#: default is 0: batching happens naturally — requests that arrive while
+#: an evaluation is in flight pile up and drain as one batch — so a lone
+#: sequential request never pays artificial latency.  Raise it to force
+#: deterministic fusion (tests) or on high-RTT links.
+DEFAULT_COALESCE_WINDOW_S = 0.0
+
+#: fused evaluations stop growing past this many rows — a coalesced batch
+#: should stay LLC-friendly, not become an accidental materialization
+MAX_FUSED_ROWS = 262_144
+
+CONTENT_TYPE = "application/x-repro-wire"
+
+
+class _Pending:
+    """One in-flight table request parked in the coalescer."""
+
+    __slots__ = ("op", "table", "k", "objectives", "event", "result",
+                 "error")
+
+    def __init__(self, op: str, table: WorkloadTable, k: Optional[int],
+                 objectives: Optional[Tuple[str, ...]]):
+        self.op = op
+        self.table = table
+        self.k = k
+        self.objectives = objectives
+        self.event = threading.Event()
+        self.result = None
+        self.error: Optional[BaseException] = None
+
+
+class Coalescer:
+    """Fuses concurrent small table requests into one columnar evaluation.
+
+    Handler threads ``submit()`` and block; one worker thread drains the
+    queue (optionally holding each batch open ``window_s`` for
+    companions), groups by (hardware token, model route), prices each
+    group once, and answers every request from its own row window.
+    """
+
+    def __init__(self, engine: sweep.SweepEngine,
+                 window_s: float = DEFAULT_COALESCE_WINDOW_S,
+                 max_fused_rows: int = MAX_FUSED_ROWS):
+        self.engine = engine
+        self.window_s = window_s
+        self.max_fused_rows = max_fused_rows
+        self._q: deque = deque()
+        self._cv = threading.Condition()
+        self._closed = False
+        self.stats = {"requests": 0, "batches": 0, "fused_evaluations": 0,
+                      "coalesced_requests": 0, "fused_rows": 0}
+        self._thread = threading.Thread(target=self._loop, daemon=True,
+                                        name="serve-coalescer")
+        self._thread.start()
+
+    # ---------------------------------------------------------- client side
+    def submit(self, op: str, table: WorkloadTable, hw, model: Optional[str],
+               k: Optional[int] = None,
+               objectives: Optional[Tuple[str, ...]] = None):
+        req = _Pending(op, table, k, objectives)
+        group = (sweep.hardware_key(hw), model or sweep.default_route(hw))
+        with self._cv:
+            if self._closed:
+                raise RuntimeError("coalescer is shut down")
+            self._q.append((group, hw, model, req))
+            self.stats["requests"] += 1
+            self._cv.notify()
+        req.event.wait()
+        if req.error is not None:
+            raise req.error
+        return req.result
+
+    # ---------------------------------------------------------- worker side
+    def _loop(self) -> None:
+        while True:
+            with self._cv:
+                while not self._q and not self._closed:
+                    self._cv.wait()
+                if self._closed and not self._q:
+                    return
+            # batch is open: let concurrent companions land before draining
+            if self.window_s > 0:
+                time.sleep(self.window_s)
+            with self._cv:
+                drained = list(self._q)
+                self._q.clear()
+            if drained:
+                self._run_batch(drained)
+
+    def _run_batch(self, drained: List) -> None:
+        self.stats["batches"] += 1
+        groups: Dict[Tuple, List] = {}
+        for group, hw, model, req in drained:
+            groups.setdefault(group, []).append((hw, model, req))
+        for members in groups.values():
+            hw, model = members[0][0], members[0][1]
+            reqs = [m[2] for m in members]
+            try:
+                self._run_group(hw, model, reqs)
+            except BaseException as e:       # noqa: BLE001 — reply, not die
+                for r in reqs:
+                    if not r.event.is_set():
+                        r.error = e
+                        r.event.set()
+
+    def _run_group(self, hw, model: Optional[str],
+                   reqs: List[_Pending]) -> None:
+        # split oversized groups so one fused evaluation stays bounded
+        start = 0
+        while start < len(reqs):
+            rows = 0
+            end = start
+            while end < len(reqs) and (
+                    end == start
+                    or rows + len(reqs[end].table) <= self.max_fused_rows):
+                rows += len(reqs[end].table)
+                end += 1
+            self._run_fused(hw, model, reqs[start:end])
+            start = end
+
+    def _run_fused(self, hw, model: Optional[str],
+                   reqs: List[_Pending]) -> None:
+        if len(reqs) == 1:
+            # the common serial case keeps the memoizing path: an identical
+            # replayed sweep is one content-token hit
+            r = reqs[0]
+            try:
+                r.result = self._answer(
+                    self.engine.predict_table(r.table, hw, model=model),
+                    r, lo=0, hi=None)
+            except BaseException as e:       # noqa: BLE001
+                r.error = e
+            r.event.set()
+            return
+        fused = WorkloadTable.concat([r.table for r in reqs])
+        res = self.engine.predict_table(fused, hw, model=model, cache=False)
+        self.stats["fused_evaluations"] += 1
+        self.stats["coalesced_requests"] += len(reqs)
+        self.stats["fused_rows"] += len(fused)
+        lo = 0
+        for r in reqs:
+            hi = lo + len(r.table)
+            try:
+                r.result = self._answer(res, r, lo=lo, hi=hi)
+            except BaseException as e:       # noqa: BLE001
+                r.error = e
+            r.event.set()
+            lo = hi
+
+    @staticmethod
+    def _answer(res, r: _Pending, lo: int, hi: Optional[int]):
+        if r.op == "argmin":
+            return [sweep.argmin_from_result(res, r.table, lo, hi)]
+        if r.op == "topk":
+            # k=0 must round-trip to [] like topk_table, not coerce to 1
+            k = 1 if r.k is None else int(r.k)
+            return sweep.topk_from_result(res, r.table, k, lo, hi)
+        if r.op == "pareto":
+            return sweep.pareto_from_result(
+                res, r.table, r.objectives or ("compute", "memory"), lo, hi)
+        # predict_table: the window's totals column
+        return np.array(res.totals[lo:hi])
+
+    def close(self) -> None:
+        with self._cv:
+            self._closed = True
+            self._cv.notify_all()
+        self._thread.join(timeout=5.0)
+
+
+class PredictionServer:
+    """The serving front end: HTTP endpoints over one engine + coalescer.
+
+    ``port=0`` binds an ephemeral port (read it back from ``address``).
+    ``jobs`` > 1 (or 0 for every core) starts a reusable ``WorkerPool``
+    for streamed-lattice requests; table requests never need it.
+    """
+
+    def __init__(self, host: str = "127.0.0.1", port: int = 0, *,
+                 engine: Optional[sweep.SweepEngine] = None,
+                 jobs=None,
+                 coalesce_window_s: float = DEFAULT_COALESCE_WINDOW_S,
+                 use_threads: Optional[bool] = None,
+                 quiet: bool = True):
+        self.engine = engine or sweep.SweepEngine()
+        self.coalescer = None
+        self.pool = None
+        self.started_at = time.time()
+        self.n_requests = 0
+        server = self
+
+        class Handler(BaseHTTPRequestHandler):
+            protocol_version = "HTTP/1.1"
+
+            def log_message(self, fmt, *args):  # noqa: N802
+                if not quiet:
+                    BaseHTTPRequestHandler.log_message(self, fmt, *args)
+
+            def _reply(self, status: int, body: bytes) -> None:
+                self.send_response(status)
+                self.send_header("Content-Type", CONTENT_TYPE)
+                self.send_header("Content-Length", str(len(body)))
+                if self.close_connection:
+                    self.send_header("Connection", "close")
+                self.end_headers()
+                self.wfile.write(body)
+
+            def do_GET(self):  # noqa: N802
+                server.n_requests += 1
+                if self.path == "/v1/health":
+                    self._reply(200, codec.encode_json(server.health()))
+                elif self.path == "/v1/cache_stats":
+                    self._reply(200, codec.encode_json(server.stats()))
+                else:
+                    self._reply(404, codec.encode_error(
+                        LookupError(f"unknown endpoint {self.path}")))
+
+            def do_POST(self):  # noqa: N802
+                server.n_requests += 1
+                # every error reply below leaves the request body unread,
+                # which would desync the next request on this keep-alive
+                # socket — drop the connection after answering
+                try:
+                    length = int(self.headers.get("Content-Length", ""))
+                except ValueError:
+                    self.close_connection = True
+                    self._reply(411, codec.encode_error(
+                        ValueError("Content-Length required")))
+                    return
+                if length < 0:
+                    # rfile.read(-1) would block on a keep-alive socket
+                    self.close_connection = True
+                    self._reply(400, codec.encode_error(ValueError(
+                        f"invalid Content-Length {length}")))
+                    return
+                if length > MAX_BODY_BYTES:
+                    self.close_connection = True
+                    self._reply(413, codec.encode_error(ValueError(
+                        f"body of {length} bytes exceeds "
+                        f"{MAX_BODY_BYTES}")))
+                    return
+                body = self.rfile.read(length)
+                if self.path == "/v1/clear_cache":
+                    server.engine.clear_cache()
+                    self._reply(200, codec.encode_json({"cleared": True}))
+                    return
+                op = self.path.rsplit("/", 1)[-1]
+                if self.path not in (
+                        "/v1/predict", "/v1/predict_table", "/v1/argmin",
+                        "/v1/topk", "/v1/pareto"):
+                    self._reply(404, codec.encode_error(
+                        LookupError(f"unknown endpoint {self.path}")))
+                    return
+                try:
+                    out = server.handle_request(
+                        body, expect_op=None if op == "predict" else op)
+                    self._reply(200, out)
+                except (codec.WireFormatError, KeyError, ValueError,
+                        TypeError) as e:
+                    self._reply(400, codec.encode_error(e))
+                except Exception as e:       # noqa: BLE001
+                    self._reply(500, codec.encode_error(e))
+
+        # bind before starting the coalescer thread / worker processes: a
+        # bind failure (port in use) must not leak children the caller
+        # has no handle to reap
+        self.httpd = ThreadingHTTPServer((host, port), Handler)
+        self.httpd.daemon_threads = True
+        try:
+            self.coalescer = Coalescer(self.engine,
+                                       window_s=coalesce_window_s)
+            if jobs is not None and sweep.effective_jobs(jobs) > 1:
+                from ..core import parallel
+                self.pool = parallel.WorkerPool(jobs,
+                                                use_threads=use_threads)
+        except BaseException:
+            self.httpd.server_close()
+            if self.coalescer is not None:
+                self.coalescer.close()
+            raise
+
+    # ------------------------------------------------------------ plumbing
+    @property
+    def address(self) -> Tuple[str, int]:
+        return self.httpd.server_address[:2]
+
+    @property
+    def url(self) -> str:
+        host, port = self.address
+        return f"http://{host}:{port}"
+
+    def start(self) -> "PredictionServer":
+        """Serve on a daemon thread (tests, in-process demos)."""
+        self._serving = True
+        t = threading.Thread(target=self.httpd.serve_forever, daemon=True,
+                             name="serve-http")
+        t.start()
+        return self
+
+    def serve_forever(self) -> None:
+        self._serving = True
+        self.httpd.serve_forever()
+
+    def shutdown(self) -> None:
+        # httpd.shutdown() blocks on serve_forever's exit event, which
+        # never fires for a server that was bound but never started
+        if getattr(self, "_serving", False):
+            self.httpd.shutdown()
+        self.httpd.server_close()
+        self.coalescer.close()
+        if self.pool is not None:
+            self.pool.close()
+
+    def __enter__(self) -> "PredictionServer":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.shutdown()
+
+    # ------------------------------------------------------------- queries
+    def health(self) -> Dict:
+        return {"status": "ok", "wire_version": codec.WIRE_VERSION,
+                "hardware": sorted(hardware.REGISTRY),
+                "uptime_s": time.time() - self.started_at,
+                "n_requests": self.n_requests,
+                "pool_jobs": self.pool.njobs if self.pool else 0}
+
+    def stats(self) -> Dict:
+        out = dict(self.engine.cache_stats())
+        out.update({f"coalescer_{k}": v
+                    for k, v in self.coalescer.stats.items()})
+        return out
+
+    def handle_request(self, body: bytes,
+                       expect_op: Optional[str] = None) -> bytes:
+        """Decode one REQUEST message, answer it, encode the reply.
+
+        Split out from the HTTP layer so tests can drive the full
+        decode-dispatch-encode path without sockets."""
+        op, source, meta = codec.decode_request(body)
+        if expect_op is not None and op != expect_op:
+            raise codec.WireFormatError(
+                f"endpoint /v1/{expect_op} got a request for op {op!r}")
+        hw = hardware.get(meta["hw"])
+        model = meta.get("model")
+        k = meta.get("k")
+        objectives = tuple(meta["objectives"]) if meta.get("objectives") \
+            else None
+        if isinstance(source, WorkloadTable):
+            if meta.get("coalesce", True):
+                result = self.coalescer.submit(op, source, hw, model,
+                                               k=k, objectives=objectives)
+            else:
+                res = self.engine.predict_table(source, hw, model=model)
+                result = Coalescer._answer(
+                    res, _Pending(op, source, k, objectives), 0, None)
+            if op == "predict_table":
+                return codec.encode_totals(result)
+            return codec.encode_winners(result)
+        return self._handle_spec(op, source, hw, model, k, objectives,
+                                 meta)
+
+    def _handle_spec(self, op: str, spec: LatticeSpec, hw,
+                     model: Optional[str], k, objectives, meta) -> bytes:
+        kw = dict(chunk_size=meta.get("chunk_size"), model=model,
+                  engine=self.engine, jobs=meta.get("jobs"),
+                  pool=self.pool)
+        if op == "argmin":
+            return codec.encode_winners([sweep.argmin_stream(spec, hw,
+                                                             **kw)])
+        if op == "topk":
+            return codec.encode_winners(sweep.topk_stream(
+                spec, hw, 1 if k is None else int(k), **kw))
+        if op == "pareto":
+            return codec.encode_winners(sweep.pareto_stream(
+                spec, hw, objectives=objectives or ("compute", "memory"),
+                **kw))
+        return codec.encode_totals(
+            sweep.predict_totals_stream(spec, hw, **kw))
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(
+        description="Serve analytical sweep predictions over HTTP "
+                    "(wire format: repro.serve.codec)")
+    ap.add_argument("--host", default="127.0.0.1")
+    ap.add_argument("--port", type=int, default=8707,
+                    help="0 binds an ephemeral port (printed on start)")
+    ap.add_argument("--jobs", type=int, default=None,
+                    help="worker pool size for streamed-lattice requests "
+                         "(0 = every core; omit for serial)")
+    ap.add_argument("--coalesce-window-ms", type=float,
+                    default=DEFAULT_COALESCE_WINDOW_S * 1e3)
+    ap.add_argument("--verbose", action="store_true")
+    args = ap.parse_args(argv)
+    server = PredictionServer(
+        args.host, args.port, jobs=args.jobs,
+        coalesce_window_s=args.coalesce_window_ms / 1e3,
+        quiet=not args.verbose)
+    host, port = server.address
+    # SIGTERM must run the shutdown path: a bare process kill would orphan
+    # the worker-pool children (supervisors and benchmarks terminate the
+    # server with SIGTERM)
+    import signal
+    signal.signal(signal.SIGTERM, lambda *_: sys.exit(0))
+    # parsed by clients that spawn the server as a subprocess — keep stable
+    print(f"[serve] listening on http://{host}:{port}", flush=True)
+    try:
+        server.serve_forever()
+    except KeyboardInterrupt:
+        pass
+    finally:
+        server.shutdown()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,438 @@
+"""Wire-codec tests: round-trip fidelity and malformed-input hardening.
+
+Round-trips must preserve the engine-visible identity of every payload:
+``content_token()`` (including NaN column payloads bit-for-bit), per-row
+names and hit-rate dicts, the read-only/frozen column contract, lattice
+plans chunk-for-chunk, and ``SweepWinner`` floats exactly.  Malformed
+buffers — truncations at every byte prefix, bad magic, future versions,
+out-of-range section tables, garbage JSON — must raise ``WireFormatError``
+rather than the IndexError/struct.error soup a server loop would crash
+on.  Also pins the vocab-canonicalization bugfix: semantically identical
+tables built with different precision/wclass insertion orders share one
+content token (and therefore one memo-cache entry).
+
+Property-style sweeps use ``hypothesis`` when installed and fall back to
+a seeded ``numpy.random`` sweep otherwise (the container has no
+hypothesis).
+"""
+import json
+
+import numpy as np
+import pytest
+
+from repro.core import hardware, sweep
+from repro.core.workload import LatticeSpec, TileConfig, Workload, \
+    WorkloadTable, gemm_workload, streaming_workload
+from repro.serve import codec
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+B200 = hardware.B200
+TILES = [TileConfig(bm, bn, bk) for bm in (64, 128, 256)
+         for bn in (64, 128) for bk in (16, 32)]
+
+
+def gemm_base(name="g", m=4096):
+    return gemm_workload(name, m, 4096, 4096, precision="fp16")
+
+
+def sample_tables():
+    """Tables exercising every metadata shape: per-row names, shared
+    names + offsets, hit-rate dicts, merged vocabularies, zero rows."""
+    ws = [gemm_base("a"), streaming_workload("b", 1e9),
+          Workload(name="hr", wclass="memory", flops=1e9, bytes=1e9,
+                   hit_rates={"h_l2": 0.7, "h_l1": 0.4})]
+    yield WorkloadTable.from_workloads(ws)                 # names + hr
+    yield WorkloadTable.tile_lattice(gemm_base(), TILES)   # shared name
+    lat = LatticeSpec.cartesian(gemm_base(), k_tiles=[4, 8, 16, 32],
+                                precision=["fp16", "fp8"])
+    yield lat.chunk(3, 7)                                  # name_offset
+    yield WorkloadTable.concat(
+        [WorkloadTable.from_workloads([w]) for w in ws])   # merged vocab
+    yield WorkloadTable.tile_lattice(gemm_base(), TILES)._slice(0, 0)
+
+
+def table_equal(a: WorkloadTable, b: WorkloadTable) -> bool:
+    return (a.content_token() == b.content_token()
+            and a.cols.tobytes() == b.cols.tobytes()
+            and a.precision_vocab == b.precision_vocab
+            and a.wclass_vocab == b.wclass_vocab
+            and list(a.precision_codes) == list(b.precision_codes)
+            and list(a.wclass_codes) == list(b.wclass_codes)
+            and a.hit_rates == b.hit_rates
+            and [a.name(i) for i in range(len(a))]
+            == [b.name(i) for i in range(len(b))])
+
+
+class TestTableRoundTrip:
+    def test_samples_round_trip(self):
+        for table in sample_tables():
+            out = codec.decode_table(codec.encode_table(table))
+            assert table_equal(table, out)
+
+    def test_decoded_arrays_are_frozen_views(self):
+        table = WorkloadTable.tile_lattice(gemm_base(), TILES)
+        out = codec.decode_table(codec.encode_table(table))
+        assert not out.cols.flags.writeable
+        assert not out.cols.flags.owndata          # zero-copy view
+        with pytest.raises(ValueError):
+            out.cols[0, 0] = 1.0
+
+    def test_writable_buffer_decode_is_still_frozen(self):
+        # bytearray/memoryview payloads (reusable receive buffers) give
+        # numpy WRITABLE zero-copy views; the decoded table must freeze
+        # cols AND the code arrays or a mutation would leave the cached
+        # content_token stale and poison the engine's memo cache
+        table = WorkloadTable.tile_lattice(gemm_base(), TILES)
+        out = codec.decode_table(bytearray(codec.encode_table(table)))
+        for arr in (out.cols, out.precision_codes, out.wclass_codes):
+            assert not arr.flags.writeable
+        with pytest.raises(ValueError):
+            out.precision_codes[0] = 0
+        assert out.content_token() == table.content_token()
+
+    def test_nan_payloads_survive_bit_for_bit(self):
+        # a quiet NaN with a distinctive payload must not be canonicalized
+        # by the wire (raw column bytes travel untouched)
+        cols = np.array(WorkloadTable.tile_lattice(gemm_base(),
+                                                   TILES).cols)
+        cols[0, 0] = np.float64(float("nan"))
+        weird = np.frombuffer(np.uint64(0x7FF8_0000_DEAD_BEEF).tobytes(),
+                              dtype=np.float64)[0]
+        cols[1, 1] = weird
+        n = cols.shape[0]
+        table = WorkloadTable(cols, np.zeros(n, dtype=np.intp), ("fp16",),
+                              np.zeros(n, dtype=np.intp), ("compute",))
+        out = codec.decode_table(codec.encode_table(table))
+        assert out.cols.tobytes() == table.cols.tobytes()
+        assert np.isnan(out.cols[0, 0]) and np.isnan(out.cols[1, 1])
+        assert out.content_token() == table.content_token()
+
+    def test_predictions_match_after_round_trip(self):
+        table = WorkloadTable.tile_lattice(gemm_base(), TILES)
+        out = codec.decode_table(codec.encode_table(table))
+        eng = sweep.SweepEngine(use_cache=False)
+        a = sweep.argmin_table(table, B200, engine=eng)
+        b = sweep.argmin_table(out, B200, engine=eng)
+        assert a.index == b.index and a.total == b.total
+        assert a.breakdown == b.breakdown
+
+    def test_random_tables_round_trip(self):
+        rng = np.random.default_rng(7)
+        for _ in range(25):
+            n = int(rng.integers(0, 40))
+            cols = rng.standard_normal((n, 26)) * rng.choice(
+                [1.0, 1e12, 1e-12])
+            cols[rng.random((n, 26)) < 0.05] = np.nan
+            pv = tuple(f"p{i}" for i in range(int(rng.integers(1, 4))))
+            wv = tuple(("memory", "compute", "balanced")
+                       [:int(rng.integers(1, 4))])
+            table = WorkloadTable(
+                cols, rng.integers(0, len(pv), n).astype(np.intp), pv,
+                rng.integers(0, len(wv), n).astype(np.intp), wv,
+                names=tuple(f"w{i}" for i in range(n)) if n and
+                rng.random() < 0.5 else None,
+                name_offset=int(rng.integers(0, 100)))
+            out = codec.decode_table(codec.encode_table(table))
+            assert table_equal(table, out)
+
+
+class TestSpecRoundTrip:
+    def specs(self):
+        base = gemm_base()
+        yield LatticeSpec.cartesian(
+            base, k_tiles=[4.0, 8.0, 16.0], num_ctas=[64, 128],
+            precision=["fp16", "fp8"], tile=TILES[:3])
+        yield LatticeSpec.tile_lattice(base, TILES)
+        yield LatticeSpec.from_table(
+            WorkloadTable.from_workloads([base,
+                                          streaming_workload("s", 1e8)]))
+        yield LatticeSpec.concat([
+            LatticeSpec.tile_lattice(base, TILES[:4]),
+            LatticeSpec.from_table(WorkloadTable.tile_lattice(base,
+                                                              TILES[:2])),
+            LatticeSpec.cartesian(base, k_tiles=[4, 8])])
+
+    def test_specs_round_trip_chunk_for_chunk(self):
+        for spec in self.specs():
+            out = codec.decode_spec(codec.encode_spec(spec))
+            assert out.n_rows == spec.n_rows
+            for lo in range(0, spec.n_rows, 5):
+                hi = min(lo + 5, spec.n_rows)
+                a, b = spec.chunk(lo, hi), out.chunk(lo, hi)
+                assert a.cols.tobytes() == b.cols.tobytes()
+                assert a.content_token() == b.content_token()
+                assert [a.name(i) for i in range(len(a))] == \
+                    [b.name(i) for i in range(len(b))]
+
+    def test_streamed_winner_matches_after_round_trip(self):
+        spec = LatticeSpec.cartesian(gemm_base(),
+                                     k_tiles=[4 + i for i in range(32)],
+                                     num_ctas=[32 + 8 * i
+                                               for i in range(32)])
+        out = codec.decode_spec(codec.encode_spec(spec))
+        a = sweep.argmin_stream(spec, B200, chunk_size=100)
+        b = sweep.argmin_stream(out, B200, chunk_size=100)
+        assert a.index == b.index and a.total == b.total
+        assert a.name == b.name and a.breakdown == b.breakdown
+
+    def test_plan_is_tiny_even_for_huge_lattices(self):
+        spec = LatticeSpec.cartesian(
+            gemm_base(), k_tiles=list(range(1, 1025)),
+            num_ctas=list(range(1, 1025)),
+            tma_participants=[1, 2, 4, 8] * 256)
+        assert spec.n_rows == 1024 * 1024 * 1024
+        assert len(codec.encode_spec(spec)) < 64 * 1024
+
+
+class TestResultRoundTrip:
+    def winners(self):
+        table = WorkloadTable.tile_lattice(gemm_base(), TILES)
+        eng = sweep.SweepEngine(use_cache=False)
+        return sweep.topk_table(table, B200, 5, engine=eng)
+
+    def test_winners_round_trip_exact(self):
+        wins = self.winners()
+        out = codec.decode_winners(codec.encode_winners(wins))
+        assert len(out) == len(wins)
+        for a, b in zip(wins, out):
+            assert (a.index, a.name) == (b.index, b.name)
+            assert a.total == b.total          # bit-exact float round-trip
+            assert a.breakdown == b.breakdown
+            assert a.breakdown.detail == b.breakdown.detail
+
+    def test_nan_total_survives(self):
+        w = self.winners()[0]
+        import dataclasses
+        nan_w = dataclasses.replace(w, total=float("nan"))
+        out = codec.decode_winners(codec.encode_winners([nan_w]))[0]
+        assert np.isnan(out.total)
+
+    def test_totals_round_trip(self):
+        t = np.array([1.5e-3, np.nan, -0.0, np.inf, 7e-9])
+        out = codec.decode_totals(codec.encode_totals(t))
+        assert out.tobytes() == t.tobytes()
+        assert not out.flags.writeable
+
+    def test_request_round_trip(self):
+        table = WorkloadTable.tile_lattice(gemm_base(), TILES)
+        buf = codec.encode_request("topk", table, hw="b200", k=7,
+                                   model="roofline", coalesce=False)
+        op, source, meta = codec.decode_request(buf)
+        assert op == "topk" and meta["k"] == 7
+        assert meta["hw"] == "b200" and meta["model"] == "roofline"
+        assert meta["coalesce"] is False
+        assert table_equal(source, table)
+        spec = LatticeSpec.tile_lattice(gemm_base(), TILES)
+        op, source, meta = codec.decode_request(
+            codec.encode_request("argmin", spec, hw="mi300a",
+                                 chunk_size=512, jobs=2))
+        assert op == "argmin" and meta["chunk_size"] == 512
+        assert meta["jobs"] == 2
+        assert source.n_rows == spec.n_rows
+
+    def test_json_and_error_round_trip(self):
+        payload = {"status": "ok", "n": 3, "nested": {"a": [1, 2]}}
+        assert codec.decode_json(codec.encode_json(payload)) == payload
+        buf = codec.encode_error(ValueError("boom"))
+        with pytest.raises(codec.RemoteError, match="ValueError: boom"):
+            codec.raise_if_error(buf)
+        codec.raise_if_error(codec.encode_json({}))   # non-error: no-op
+
+
+class TestMalformed:
+    def payloads(self):
+        table = next(iter(sample_tables()))
+        return [codec.encode_table(table),
+                codec.encode_spec(LatticeSpec.tile_lattice(gemm_base(),
+                                                           TILES)),
+                codec.encode_winners(self.__class__._wins),
+                codec.encode_totals(np.arange(4.0)),
+                codec.encode_request("argmin", table, hw="b200")]
+
+    _wins = None
+
+    @classmethod
+    def setup_class(cls):
+        table = WorkloadTable.tile_lattice(gemm_base(), TILES)
+        cls._wins = sweep.topk_table(
+            table, B200, 2, engine=sweep.SweepEngine(use_cache=False))
+
+    def _decoders(self):
+        return (codec.decode_table, codec.decode_spec,
+                codec.decode_winners, codec.decode_totals,
+                codec.decode_request, codec.message_type)
+
+    def test_truncations_raise_cleanly(self):
+        for buf in self.payloads():
+            step = max(1, len(buf) // 23)     # every stratum of the buffer
+            for cut in list(range(0, len(buf), step)) + [len(buf) - 1]:
+                for decode in self._decoders():
+                    with pytest.raises(codec.WireFormatError):
+                        decode(buf[:cut])
+
+    def test_bad_magic_and_version(self):
+        buf = bytearray(self.payloads()[0])
+        bad = b"XXXX" + bytes(buf[4:])
+        with pytest.raises(codec.WireFormatError, match="magic"):
+            codec.decode_table(bad)
+        future = bytes(buf[:4]) + (99).to_bytes(2, "little") + \
+            bytes(buf[6:])
+        with pytest.raises(codec.WireFormatError, match="version"):
+            codec.decode_table(future)
+
+    def test_wrong_message_type(self):
+        with pytest.raises(codec.WireFormatError, match="expected table"):
+            codec.decode_table(codec.encode_totals(np.arange(3.0)))
+        with pytest.raises(codec.WireFormatError, match="expected totals"):
+            codec.decode_totals(self.payloads()[0])
+
+    def test_section_bounds_are_checked(self):
+        buf = bytearray(self.payloads()[3])
+        # rewrite the first section's length to reach past the buffer
+        import struct
+        tag, off, ln = struct.unpack_from("<4sQQ", buf, 12)
+        struct.pack_into("<4sQQ", buf, 12, tag, off, len(buf) * 2)
+        with pytest.raises(codec.WireFormatError, match="outside"):
+            codec.decode_totals(bytes(buf))
+
+    def test_garbage_json_meta(self):
+        good = codec.encode_json({"x": 1})
+        # corrupt the JSON payload bytes in place
+        bad = good.replace(b'{"payload"', b'{"payload!!')
+        with pytest.raises(codec.WireFormatError, match="JSON"):
+            codec.decode_json(bad)
+
+    def test_wrong_column_payload_size(self):
+        table = next(iter(sample_tables()))
+        assert len(table) == 3
+        # lie about the row count in the meta section (same digit width,
+        # so the section table still frames the JSON correctly)
+        bad = codec.encode_table(table).replace(b'"n":3', b'"n":4', 1)
+        with pytest.raises(codec.WireFormatError):
+            codec.decode_table(bad)
+
+    def test_codes_outside_vocab_rejected(self):
+        table = WorkloadTable.tile_lattice(gemm_base(), TILES[:2])
+        n = len(table)
+        bad = WorkloadTable(np.array(table.cols),
+                            np.array([0, 5], dtype=np.intp)[:n], ("fp16",),
+                            np.zeros(n, dtype=np.intp), ("compute",))
+        with pytest.raises(codec.WireFormatError, match="vocabulary"):
+            codec.decode_table(codec.encode_table(bad))
+
+    def test_random_garbage_never_escapes_wireformaterror(self):
+        rng = np.random.default_rng(11)
+        real = self.payloads()[0]
+        for _ in range(200):
+            size = int(rng.integers(0, 200))
+            blob = rng.integers(0, 256, size).astype(np.uint8).tobytes()
+            if rng.random() < 0.5 and len(real) > 8:
+                # realistic header, scrambled body
+                blob = real[:8] + blob
+            for decode in self._decoders():
+                try:
+                    decode(blob)
+                except codec.WireFormatError:
+                    pass
+
+    if HAVE_HYPOTHESIS:
+        @settings(max_examples=200, deadline=None)
+        @given(st.binary(max_size=300))
+        def test_hypothesis_garbage(self, blob):
+            for decode in self._decoders():
+                try:
+                    decode(blob)
+                except codec.WireFormatError:
+                    pass
+
+        @settings(max_examples=100, deadline=None)
+        @given(st.data())
+        def test_hypothesis_flip_bytes(self, data):
+            buf = bytearray(codec.encode_totals(np.arange(8.0)))
+            i = data.draw(st.integers(0, len(buf) - 1))
+            buf[i] ^= data.draw(st.integers(1, 255))
+            try:
+                codec.decode_totals(bytes(buf))
+            except codec.WireFormatError:
+                pass
+
+
+class TestContentTokenCanonicalization:
+    """The vocab-order bugfix: identical rows => identical token."""
+
+    def _pair(self):
+        w1 = gemm_base("a")
+        w2 = streaming_workload("b", 1e9, precision="fp32")
+        ta = WorkloadTable.from_workloads([w1, w2])
+        # same rows, opposite vocab insertion order
+        tb = WorkloadTable.from_workloads([w2, w1]).take(np.array([1, 0]))
+        return ta, tb
+
+    def test_cross_order_tokens_match(self):
+        ta, tb = self._pair()
+        assert ta.precision_vocab != tb.precision_vocab   # the trap
+        assert np.array_equal(ta.cols, tb.cols)
+        assert ta.content_token() == tb.content_token()
+
+    def test_cross_order_tables_hit_the_memo_cache(self):
+        ta, tb = self._pair()
+        eng = sweep.SweepEngine()
+        eng.predict_table(ta, B200)
+        before = eng.cache_stats()
+        res = eng.predict_table(tb, B200)
+        after = eng.cache_stats()
+        assert after["hits"] == before["hits"] + len(tb)
+        assert after["table_entries"] == before["table_entries"]
+        # and the served rows are correct for tb's row order
+        ref = sweep.SweepEngine(use_cache=False).predict_table(tb, B200)
+        assert list(res.totals) == list(ref.totals)
+
+    def test_wire_decoded_table_hits_the_cache(self):
+        table = WorkloadTable.concat([
+            WorkloadTable.from_workloads([gemm_base("x")]),
+            WorkloadTable.from_workloads(
+                [streaming_workload("y", 1e8)])])
+        out = codec.decode_table(codec.encode_table(table))
+        eng = sweep.SweepEngine()
+        eng.predict_table(table, B200)
+        before = eng.cache_stats()["hits"]
+        eng.predict_table(out, B200)
+        assert eng.cache_stats()["hits"] == before + len(table)
+
+    def test_different_content_still_differs(self):
+        ta, _ = self._pair()
+        other = WorkloadTable.from_workloads(
+            [gemm_base("a"), streaming_workload("b", 2e9,
+                                                precision="fp32")])
+        assert ta.content_token() != other.content_token()
+        # same cols, different per-row precision strings must differ
+        w = gemm_base("a")
+        t1 = WorkloadTable.from_workloads([w])
+        t2 = WorkloadTable(np.array(t1.cols),
+                           np.zeros(1, dtype=np.intp), ("fp8",),
+                           np.zeros(1, dtype=np.intp), ("compute",))
+        assert t1.content_token() != t2.content_token()
+
+    def test_unused_vocab_entries_are_ignored(self):
+        w = gemm_base("a")
+        t1 = WorkloadTable.from_workloads([w])
+        t2 = WorkloadTable(np.array(t1.cols),
+                           np.zeros(1, dtype=np.intp), ("fp16", "fp4"),
+                           np.zeros(1, dtype=np.intp),
+                           ("compute", "memory"))
+        assert t1.content_token() == t2.content_token()
+
+
+class TestWorkloadDictRoundTrip:
+    def test_to_from_dict(self):
+        ws = [gemm_base(), streaming_workload("s", 1e9, irregular=True),
+              Workload(name="hr", wclass="memory", flops=1e9, bytes=1e9,
+                       hit_rates={"h_l2": 0.7})]
+        for w in ws:
+            out = Workload.from_dict(json.loads(json.dumps(w.to_dict())))
+            assert out == w

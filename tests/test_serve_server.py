@@ -1,0 +1,583 @@
+"""Prediction-server tests: endpoints, coalescing, pool reuse, bugfixes.
+
+In-process server instances cover the fast tier: every op (argmin / topk /
+pareto / predict_table) served over real loopback HTTP must be
+bit-identical to its in-process sweep counterpart, concurrent small
+requests must fuse into one columnar evaluation (and still answer each
+request exactly), malformed bodies must come back as clean 400s, and the
+engine's memo cache must serve replayed sweeps across requests.
+
+The ``slow``-marked end-to-end test runs the acceptance criterion for
+real: a separate server *process*, a >=10k-row wire table and a >=1M-row
+lattice plan, winners bit-identical to ``argmin_table``/``argmin_stream``.
+
+Also pins the satellite bugfixes: ``launch.serve --no-smoke`` reachable,
+and spawn/pickled ``HardwareParams`` never inheriting a stale interned
+cache token.
+"""
+import pickle
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.core import hardware, parallel, sweep
+from repro.core.workload import LatticeSpec, TileConfig, WorkloadTable, \
+    gemm_workload, streaming_workload
+from repro.serve import codec
+from repro.serve.client import PredictionClient
+from repro.serve.server import Coalescer, PredictionServer
+
+pytestmark = pytest.mark.serve
+
+B200 = hardware.B200
+TILES = [TileConfig(bm, bn, bk) for bm in (64, 128, 256)
+         for bn in (64, 128, 256) for bk in (16, 32, 64)]
+
+
+def fresh_engine():
+    return sweep.SweepEngine(use_cache=False)
+
+
+def gemm_base(name="g", m=4096):
+    return gemm_workload(name, m, 4096, 4096, precision="fp16")
+
+
+def tile_table(n_shapes=4, tiles=TILES):
+    parts = [WorkloadTable.tile_lattice(
+        gemm_base(f"shape{j}", 2048 + 512 * j), tiles)
+        for j in range(n_shapes)]
+    return WorkloadTable.concat(parts)
+
+
+def same_winner(a, b):
+    return (a.index == b.index and a.name == b.name and a.total == b.total
+            and a.breakdown == b.breakdown
+            and a.breakdown.detail == b.breakdown.detail)
+
+
+@pytest.fixture(scope="module")
+def served():
+    server = PredictionServer(port=0).start()
+    client = PredictionClient(*server.address)
+    yield server, client
+    client.close()
+    server.shutdown()
+
+
+class TestEndpoints:
+    def test_health(self, served):
+        _, client = served
+        h = client.health()
+        assert h["status"] == "ok"
+        assert h["wire_version"] == codec.WIRE_VERSION
+        assert "b200" in h["hardware"]
+
+    def test_argmin_topk_pareto_totals_bit_identical(self, served):
+        _, client = served
+        table = tile_table()
+        assert same_winner(client.argmin(table, "b200"),
+                           sweep.argmin_table(table, B200,
+                                              engine=fresh_engine()))
+        got = client.topk(table, "b200", 7)
+        ref = sweep.topk_table(table, B200, 7, engine=fresh_engine())
+        assert len(got) == 7
+        assert all(same_winner(a, b) for a, b in zip(got, ref))
+        got = client.pareto(table, "b200",
+                            objectives=("compute", "memory"))
+        ref = sweep.pareto_table(table, B200, engine=fresh_engine())
+        assert all(same_winner(a, b) for a, b in zip(got, ref))
+        tots = client.predict_totals(table, "b200")
+        assert np.array_equal(
+            tots, fresh_engine().predict_table(table, B200).totals)
+
+    def test_model_override_and_other_hardware(self, served):
+        _, client = served
+        table = tile_table(n_shapes=1)
+        for hw_name, model in (("b200", "roofline"), ("mi300a", None),
+                               ("tpu_v5e", None)):
+            got = client.argmin(table, hw_name, model=model)
+            ref = sweep.argmin_table(table, hardware.get(hw_name),
+                                     model=model, engine=fresh_engine())
+            assert same_winner(got, ref)
+
+    def test_streamed_spec_routes(self, served):
+        _, client = served
+        spec = LatticeSpec.cartesian(
+            gemm_base(), k_tiles=[8 + i for i in range(32)],
+            num_ctas=[32 + 8 * i for i in range(32)])
+        assert same_winner(client.argmin(spec, "b200"),
+                           sweep.argmin_stream(spec, B200))
+        got = client.topk(spec, "b200", 5, chunk_size=100)
+        ref = sweep.topk_stream(spec, B200, 5, chunk_size=100)
+        assert all(same_winner(a, b) for a, b in zip(got, ref))
+        tots = client.predict_totals(spec, "b200")
+        assert np.array_equal(tots,
+                              sweep.predict_totals_stream(spec, B200))
+
+    def test_replay_hits_the_table_cache(self, served):
+        _, client = served
+        table = tile_table(n_shapes=2)
+        client.argmin(table, "b200")
+        hits = client.cache_stats()["hits"]
+        again = client.argmin(table, "b200")
+        assert client.cache_stats()["hits"] >= hits + len(table)
+        assert same_winner(again, sweep.argmin_table(
+            table, B200, engine=fresh_engine()))
+
+    def test_clear_cache(self, served):
+        _, client = served
+        assert client.clear_cache() == {"cleared": True}
+        assert client.cache_stats()["table_entries"] == 0
+
+    def test_coalesce_opt_out(self, served):
+        _, client = served
+        table = tile_table(n_shapes=1)
+        got = client.argmin(table, "b200", coalesce=False)
+        assert same_winner(got, sweep.argmin_table(table, B200,
+                                                   engine=fresh_engine()))
+
+    def test_close_releases_every_threads_connection(self, served):
+        # a shared client keeps one socket per thread; close() from the
+        # main thread must release all of them, not just its own
+        server, _ = served
+        client = PredictionClient(*server.address)
+        barrier = threading.Barrier(3)
+
+        def hit():
+            client.health()
+            barrier.wait()
+        threads = [threading.Thread(target=hit) for _ in range(2)]
+        for t in threads:
+            t.start()
+        client.health()
+        barrier.wait()
+        for t in threads:
+            t.join()
+        conns = list(client._conns)
+        assert len(conns) == 3
+        client.close()
+        assert client._conns == set()
+        assert all(c.sock is None for c in conns)
+
+    def test_topk_k0_round_trips_empty(self, served):
+        # served k=0 must match topk_table/topk_stream (= []), not
+        # coerce to k=1
+        _, client = served
+        table = tile_table(n_shapes=1)
+        assert sweep.topk_table(table, B200, 0,
+                                engine=fresh_engine()) == []
+        assert client.topk(table, "b200", 0) == []
+        spec = LatticeSpec.cartesian(gemm_base(),
+                                     k_tiles=[8, 16], num_ctas=[32, 64])
+        assert client.topk(spec, "b200", 0) == []
+
+
+class TestErrors:
+    def test_unknown_hardware_is_400(self, served):
+        _, client = served
+        with pytest.raises(codec.RemoteError, match="unknown hardware"):
+            client.argmin(tile_table(1), "gtx1080")
+
+    def test_malformed_body_is_400_not_a_crash(self, served):
+        server, client = served
+        import http.client
+        conn = http.client.HTTPConnection(*server.address)
+        try:
+            for body in (b"", b"garbage", b"RPRW" + b"\x00" * 3):
+                conn.request("POST", "/v1/argmin", body,
+                             {"Content-Type": "application/x-repro-wire"})
+                resp = conn.getresponse()
+                data = resp.read()
+                assert resp.status == 400
+                with pytest.raises(codec.RemoteError):
+                    codec.raise_if_error(data)
+        finally:
+            conn.close()
+        assert client.health()["status"] == "ok"   # server survived
+
+    def test_unknown_endpoint_is_404(self, served):
+        server, _ = served
+        import http.client
+        conn = http.client.HTTPConnection(*server.address)
+        try:
+            conn.request("GET", "/v1/nope")
+            assert conn.getresponse().status == 404
+        finally:
+            conn.close()
+
+    def test_op_endpoint_mismatch_is_400(self, served):
+        server, _ = served
+        body = codec.encode_request("topk", tile_table(1), hw="b200", k=2)
+        import http.client
+        conn = http.client.HTTPConnection(*server.address)
+        try:
+            conn.request("POST", "/v1/argmin", body,
+                         {"Content-Type": "application/x-repro-wire"})
+            resp = conn.getresponse()
+            data = resp.read()
+            assert resp.status == 400
+            with pytest.raises(codec.RemoteError, match="got a request"):
+                codec.raise_if_error(data)
+        finally:
+            conn.close()
+
+    def test_empty_table_argmin_is_400(self, served):
+        _, client = served
+        empty = tile_table(1)._slice(0, 0)
+        with pytest.raises(codec.RemoteError, match="empty sweep"):
+            client.argmin(empty, "b200")
+
+    def test_unread_body_error_closes_connection(self, served):
+        # 413/411/400-negative replies skip reading the body; the server
+        # must drop the keep-alive connection or the unread bytes desync
+        # the next request on the same socket
+        server, client = served
+        import http.client
+        from repro.serve.server import MAX_BODY_BYTES
+        conn = http.client.HTTPConnection(*server.address)
+        try:
+            conn.request(
+                "POST", "/v1/argmin", b"x" * 64,
+                {"Content-Type": "application/x-repro-wire",
+                 "Content-Length": str(MAX_BODY_BYTES + 1)})
+            resp = conn.getresponse()
+            resp.read()
+            assert resp.status == 413
+            assert resp.will_close
+            # same conn object: http.client reconnects after the close,
+            # and the request must parse cleanly (no stale body bytes)
+            body = codec.encode_request("argmin", tile_table(1),
+                                        hw="b200")
+            conn.request("POST", "/v1/argmin", body,
+                         {"Content-Type": "application/x-repro-wire"})
+            resp = conn.getresponse()
+            data = resp.read()
+            assert resp.status == 200
+            codec.raise_if_error(data)
+        finally:
+            conn.close()
+        assert client.health()["status"] == "ok"
+
+    def test_negative_content_length_is_400(self, served):
+        # a negative length must be rejected before rfile.read(-1) can
+        # block the handler thread on the open keep-alive socket
+        server, client = served
+        import http.client
+        conn = http.client.HTTPConnection(*server.address)
+        try:
+            conn.request("POST", "/v1/argmin", None,
+                         {"Content-Type": "application/x-repro-wire",
+                          "Content-Length": "-5"})
+            resp = conn.getresponse()
+            data = resp.read()
+            assert resp.status == 400
+            with pytest.raises(codec.RemoteError,
+                               match="invalid Content-Length"):
+                codec.raise_if_error(data)
+        finally:
+            conn.close()
+        assert client.health()["status"] == "ok"   # server survived
+
+
+class TestCoalescing:
+    def test_concurrent_requests_fuse_and_stay_exact(self):
+        # a long window makes the fusion deterministic
+        with PredictionServer(port=0, coalesce_window_s=0.2) as server:
+            server.start()
+            client = PredictionClient(*server.address)
+            parts = [WorkloadTable.tile_lattice(
+                gemm_base(f"s{j}", 2048 + 256 * j), TILES[:9])
+                for j in range(6)]
+            ops = ["argmin", "topk", "pareto"] * 2
+            results = [None] * 6
+
+            def go(j):
+                if ops[j] == "argmin":
+                    results[j] = [client.argmin(parts[j], "b200")]
+                elif ops[j] == "topk":
+                    results[j] = client.topk(parts[j], "b200", 3)
+                else:
+                    results[j] = client.pareto(parts[j], "b200")
+
+            threads = [threading.Thread(target=go, args=(j,))
+                       for j in range(6)]
+            for t in threads:
+                t.start()
+            for t in threads:
+                t.join()
+            for j in range(6):
+                if ops[j] == "argmin":
+                    ref = [sweep.argmin_table(parts[j], B200,
+                                              engine=fresh_engine())]
+                elif ops[j] == "topk":
+                    ref = sweep.topk_table(parts[j], B200, 3,
+                                           engine=fresh_engine())
+                else:
+                    ref = sweep.pareto_table(parts[j], B200,
+                                             engine=fresh_engine())
+                assert all(same_winner(a, b)
+                           for a, b in zip(results[j], ref))
+            st = server.stats()
+            assert st["coalescer_coalesced_requests"] >= 2
+            assert st["coalescer_fused_evaluations"] >= 1
+            assert st["coalescer_fused_evaluations"] < 6
+            client.close()
+
+    def test_mixed_hardware_groups_never_fuse(self):
+        with PredictionServer(port=0, coalesce_window_s=0.2) as server:
+            server.start()
+            client = PredictionClient(*server.address)
+            table = tile_table(n_shapes=1)
+            results = {}
+
+            def go(hw_name):
+                results[hw_name] = client.argmin(table, hw_name)
+
+            threads = [threading.Thread(target=go, args=(n,))
+                       for n in ("b200", "mi300a")]
+            for t in threads:
+                t.start()
+            for t in threads:
+                t.join()
+            for hw_name in ("b200", "mi300a"):
+                ref = sweep.argmin_table(table, hardware.get(hw_name),
+                                         engine=fresh_engine())
+                assert same_winner(results[hw_name], ref)
+            client.close()
+
+    def test_coalescer_direct_exactness_per_window(self):
+        """Unit-level: many windows fused into one table, each answered
+        from its own row slice (no HTTP in the way)."""
+        eng = sweep.SweepEngine(use_cache=False)
+        co = Coalescer(eng, window_s=0.1)
+        parts = [WorkloadTable.tile_lattice(
+            gemm_base(f"u{j}", 2048 + 128 * j), TILES[:7])
+            for j in range(5)]
+        out = [None] * 5
+
+        def go(j):
+            out[j] = co.submit("argmin", parts[j], B200, None)
+
+        threads = [threading.Thread(target=go, args=(j,))
+                   for j in range(5)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        co.close()
+        for j in range(5):
+            ref = [sweep.argmin_table(parts[j], B200,
+                                      engine=fresh_engine())]
+            assert all(same_winner(a, b) for a, b in zip(out[j], ref))
+        assert co.stats["coalesced_requests"] == 5
+        assert co.stats["fused_evaluations"] == 1
+
+    def test_oversized_groups_split(self):
+        eng = sweep.SweepEngine(use_cache=False)
+        co = Coalescer(eng, window_s=0.1, max_fused_rows=10)
+        parts = [WorkloadTable.tile_lattice(gemm_base(f"o{j}"), TILES[:8])
+                 for j in range(4)]
+        out = [None] * 4
+
+        def go(j):
+            out[j] = co.submit("argmin", parts[j], B200, None)
+
+        threads = [threading.Thread(target=go, args=(j,))
+                   for j in range(4)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        co.close()
+        for j in range(4):
+            assert same_winner(
+                out[j][0],
+                sweep.argmin_table(parts[j], B200, engine=fresh_engine()))
+
+
+class TestWorkerPoolReuse:
+    def test_pool_reuse_bit_identical(self):
+        spec = LatticeSpec.cartesian(
+            gemm_base(), k_tiles=[8 + i for i in range(48)],
+            num_ctas=[32 + 8 * i for i in range(48)])
+        ref = sweep.argmin_stream(spec, B200)
+        with parallel.WorkerPool(2, use_threads=True) as pool:
+            for _ in range(3):
+                assert same_winner(
+                    sweep.argmin_stream(spec, B200, pool=pool,
+                                        chunk_size=256), ref)
+
+    @pytest.mark.skipif(not parallel.processes_available(),
+                        reason="worker processes unavailable")
+    def test_process_pool_reuse_and_shared_memory(self):
+        table = tile_table(n_shapes=4)
+        ref = sweep.argmin_table(table, B200, engine=fresh_engine())
+        with parallel.WorkerPool(2) as pool:
+            for _ in range(2):
+                got = sweep.argmin_stream(table, B200, pool=pool,
+                                          chunk_size=64)
+                assert same_winner(got, ref)
+
+    def test_server_uses_pool_for_spec_routes(self):
+        with PredictionServer(port=0, jobs=2, use_threads=True) as server:
+            server.start()
+            assert server.pool is not None
+            client = PredictionClient(*server.address)
+            spec = LatticeSpec.cartesian(
+                gemm_base(), k_tiles=[8 + i for i in range(40)],
+                num_ctas=[32 + 8 * i for i in range(40)])
+            got = client.argmin(spec, "b200", chunk_size=256)
+            assert same_winner(got, sweep.argmin_stream(spec, B200))
+            client.close()
+
+
+class TestSmokeFlagBugfix:
+    def test_no_smoke_reaches_full_configs(self):
+        from repro.launch.serve import build_parser
+        ap = build_parser()
+        assert ap.parse_args(["--arch", "x"]).smoke is True
+        assert ap.parse_args(["--arch", "x", "--smoke"]).smoke is True
+        # the bug: action="store_true", default=True made this unreachable
+        assert ap.parse_args(["--arch", "x", "--no-smoke"]).smoke is False
+
+
+class TestSpawnSafety:
+    def test_pickle_strips_interned_hardware_token(self):
+        hw = hardware.B200
+        sweep.hardware_key(hw)
+        assert "_sweep_content_token" in hw.__dict__
+        out = pickle.loads(pickle.dumps(hw))
+        assert "_sweep_content_token" not in out.__dict__
+        assert out == hw
+        # re-derivation in the same process lands on the same intern
+        assert sweep.hardware_key(out) == sweep.hardware_key(hw)
+
+    def test_spawn_worker_cannot_collide_on_stale_tokens(self, monkeypatch):
+        """Pre-fix, a pickled HardwareParams carried the parent's (name,
+        id) token; a spawn worker's fresh intern table hands the same id
+        to different content, colliding cache keys across hardware."""
+        parent_a = pickle.loads(pickle.dumps(hardware.B200))
+        parent_b = pickle.loads(pickle.dumps(
+            hardware.B200.with_updates(hbm_sustained_bw=1.0)))
+        monkeypatch.setattr(sweep, "_HW_TOKENS", {})
+        sweep.hardware_key(parent_a)          # parent interns A as id 0
+        wire_a = pickle.dumps(parent_a)       # ships to the worker
+        monkeypatch.setattr(sweep, "_HW_TOKENS", {})   # fresh worker
+        child_b = sweep.hardware_key(parent_b)         # B interned first
+        child_a = sweep.hardware_key(pickle.loads(wire_a))
+        assert child_a != child_b
+
+    def test_mp_context_never_forks_a_threaded_process(self):
+        """Forking a multithreaded process can deadlock the child in a
+        mutex another thread held at fork time; the serve front end is
+        always multithreaded (HTTP handlers + coalescer), so its worker
+        pools must come from an exec'd-clean start method."""
+        stop = threading.Event()
+        t = threading.Thread(target=stop.wait, daemon=True)
+        t.start()
+        try:
+            ctx = parallel._mp_context()
+            assert ctx.get_start_method() != "fork"
+        finally:
+            stop.set()
+
+    def test_worker_pool_never_forks(self):
+        """ProcessPoolExecutor starts workers lazily at first submit, so
+        a long-lived WorkerPool constructed while single-threaded could
+        otherwise fork AFTER the caller starts helper threads — it must
+        refuse fork up front."""
+        if not parallel.processes_available():
+            pytest.skip("process pools unavailable in this sandbox")
+        with parallel.WorkerPool(2) as pool:
+            assert pool.is_processes
+            method = pool.executor._mp_context.get_start_method()
+            assert method != "fork"
+
+    def test_bind_failure_leaks_no_coalescer_or_pool(self):
+        """A port-in-use OSError from the constructor must not leave a
+        coalescer thread (or pool workers) running with no handle."""
+        def coalescer_threads():
+            return [t for t in threading.enumerate()
+                    if t.name == "serve-coalescer"]
+        with PredictionServer(port=0) as taken:
+            taken.start()
+            before = len(coalescer_threads())
+            with pytest.raises(OSError):
+                PredictionServer(port=taken.address[1], jobs=2,
+                                 use_threads=True)
+            assert len(coalescer_threads()) == before
+
+    def test_workload_nvec_cache_is_content_pure(self):
+        w = gemm_base()
+        _ = w._nvec                            # populate the lazy buffer
+        out = pickle.loads(pickle.dumps(w))
+        # _nvec is a pure function of the fields, so a pickled copy of the
+        # buffer can never go stale — it must also still be correct
+        assert out._nvec == w._nvec
+
+
+@pytest.mark.slow
+class TestSecondProcessEndToEnd:
+    """The acceptance criterion: a real second process answers a >=10k-row
+    table and a >=1M-row lattice bit-identically to in-process calls."""
+
+    @pytest.fixture(scope="class")
+    def remote(self):
+        from repro.serve.subproc import (start_server_subprocess,
+                                         stop_server_subprocess)
+        proc, host, port = start_server_subprocess()
+        try:
+            client = PredictionClient(host, port, timeout=300.0)
+            # wait for liveness
+            deadline = time.time() + 30
+            while True:
+                try:
+                    assert client.health()["status"] == "ok"
+                    break
+                except Exception:
+                    if time.time() > deadline:
+                        raise
+                    time.sleep(0.1)
+            yield client
+            client.close()
+        finally:
+            stop_server_subprocess(proc)
+
+    def test_10k_row_table_argmin_bit_identical(self, remote):
+        table = tile_table(n_shapes=380)       # 380 * 27 = 10,260 rows
+        assert len(table) >= 10_000
+        got = remote.argmin(table, "b200")
+        ref = sweep.argmin_table(table, B200, engine=fresh_engine())
+        assert same_winner(got, ref)
+        got_k = remote.topk(table, "b200", 10)
+        ref_k = sweep.topk_table(table, B200, 10, engine=fresh_engine())
+        assert all(same_winner(a, b) for a, b in zip(got_k, ref_k))
+
+    def test_1m_row_lattice_argmin_bit_identical(self, remote):
+        spec = LatticeSpec.cartesian(
+            gemm_base("big", 8192),
+            k_tiles=[8 + 4 * i for i in range(64)],
+            num_ctas=[32 + 8 * i for i in range(64)],
+            tma_participants=[1, 2, 4, 8] * 4,
+            concurrent_kernels=[1, 2] * 8)
+        assert spec.n_rows >= 1_000_000
+        got = remote.argmin(spec, "b200")
+        ref = sweep.argmin_stream(spec, B200)
+        assert same_winner(got, ref)
+
+    def test_mixed_precision_wire_table_hits_cache_cross_order(self, remote):
+        """End-to-end replay of the vocab-canonicalization fix: the same
+        semantic table sent with two vocab orders is one cache entry."""
+        w1 = gemm_base("a")
+        w2 = streaming_workload("b", 1e9, precision="fp32")
+        ta = WorkloadTable.from_workloads([w1, w2])
+        tb = WorkloadTable.from_workloads([w2, w1]).take(np.array([1, 0]))
+        remote.clear_cache()
+        remote.argmin(ta, "b200")
+        hits0 = remote.cache_stats()["hits"]
+        got = remote.argmin(tb, "b200")
+        assert remote.cache_stats()["hits"] >= hits0 + len(tb)
+        assert same_winner(got, sweep.argmin_table(tb, B200,
+                                                   engine=fresh_engine()))
