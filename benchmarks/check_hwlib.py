@@ -1,0 +1,110 @@
+"""Schema lint for the declarative hardware library.
+
+A broken data file under ``src/repro/core/hwdata/`` would otherwise
+surface as a confusing lazy-load failure deep inside a sweep (the
+registry parses each file on first ``get()``).  This gate fails fast and
+named instead.  Checks (exit 1 on any failure):
+
+  * every ``hwdata/*.json`` validates against the ``hwlib`` schema
+    (stem == entry name, known fields, canonical units, provenance tags),
+  * round-trip determinism: ``from_dict(to_dict(params)) == params`` and
+    re-serializing the loaded document reproduces it exactly — a file
+    that does not round-trip would break wire-shipped entries,
+  * the registry's lazy load is deterministic: two independent loads of
+    the same file produce equal parameters, and the process registry
+    ``get()`` memoizes to one instance (the sweep cache's per-instance
+    token stash relies on this),
+  * the six paper presets plus at least five data-only accelerators are
+    present,
+  * no data file shadows another entry's name and every entry prices a
+    probe GEMM to a finite positive time on its routed backend.
+
+Fast (< a few seconds, no jax import) — wired into tier-1 via
+tests/test_hwlib.py.
+
+Run:  PYTHONPATH=src python -m benchmarks.check_hwlib
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+REQUIRED = ("b200", "h200", "mi300a", "mi250x", "tpu_v5e", "cpu_host")
+MIN_EXTRA = 5
+
+
+def check(verbose: bool = True) -> list:
+    from repro.core import hardware, hwlib, sweep
+    from repro.core.workload import gemm_workload
+
+    errors = []
+
+    def say(msg):
+        if verbose:
+            print(msg)
+
+    try:
+        entries = hwlib.load_dir(hardware.DATA_DIR)
+    except hwlib.HardwareSchemaError as e:
+        return [f"schema: {e}"]
+    names = [e.params.name for e in entries]
+    say(f"validated {len(entries)} data file(s): {', '.join(names)}")
+
+    if len(set(names)) != len(names):
+        errors.append(f"duplicate entry names in {hardware.DATA_DIR}")
+    missing = [n for n in REQUIRED if n not in names]
+    if missing:
+        errors.append(f"missing required preset file(s): {missing}")
+    extra = [n for n in names if n not in REQUIRED]
+    if len(extra) < MIN_EXTRA:
+        errors.append(f"library ships only {len(extra)} data-only "
+                      f"accelerator(s) beyond the presets (< {MIN_EXTRA})")
+
+    engine = sweep.SweepEngine(use_cache=False)
+    for entry in entries:
+        name = entry.params.name
+        where = entry.path or name
+        # round trip: dict form and document form must be fixed points
+        rt = hwlib.from_dict(hwlib.to_dict(entry.params), where=where)
+        if rt != entry.params:
+            errors.append(f"{where}: from_dict(to_dict(p)) != p")
+        redoc = hwlib.load_entry(entry.to_doc(), where=where)
+        if redoc.params != entry.params or redoc.to_doc() != entry.to_doc():
+            errors.append(f"{where}: document does not round-trip")
+        # lazy-load determinism: a second independent parse is equal...
+        again = hwlib.load_file(entry.path) if entry.path else None
+        if again is not None and again.params != entry.params:
+            errors.append(f"{where}: two loads of the same file differ")
+        # ...and the live registry memoizes one instance per name
+        if hardware.get(name) is not hardware.get(name):
+            errors.append(f"{name}: registry returns distinct instances")
+        if hardware.get(name) != entry.params:
+            errors.append(f"{name}: registry entry differs from its data "
+                          f"file (shadowed?)")
+        # the entry actually prices on its routed backend
+        w = gemm_workload("probe", 1024, 1024, 1024, precision="fp32")
+        t = engine.predict(w, hardware.get(name)).total
+        if not (t > 0.0 and t < 1e6):
+            errors.append(f"{name}: probe GEMM priced at {t!r}")
+        elif verbose:
+            say(f"  {name:14s} route={sweep.default_route(hardware.get(name)):9s} "
+                f"probe gemm1024 fp32 -> {t * 1e3:.4f} ms")
+    return errors
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        description="Validate the hardware library data files and the "
+                    "registry's lazy-load determinism")
+    ap.add_argument("-q", "--quiet", action="store_true")
+    args = ap.parse_args(argv)
+    errors = check(verbose=not args.quiet)
+    for e in errors:
+        print(f"FAIL: {e}", file=sys.stderr)
+    if not errors:
+        print("hwlib check OK")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -25,11 +25,17 @@ from .workload import TimeBreakdown, Workload
 
 @dataclass
 class Calibration:
-    """Disclosed per-case multipliers (paper's m_case, default 1.0)."""
+    """Disclosed per-case multipliers (paper's m_case, default 1.0).
+
+    ``skipped`` lists kernels the fit could not use (non-positive
+    predicted or measured time) — a degenerate backend must not produce
+    an empty calibration that silently claims 0% train MAE.
+    """
 
     per_case: Dict[str, float] = field(default_factory=dict)
     per_class: Dict[str, float] = field(default_factory=dict)
     global_scale: float = 1.0
+    skipped: List[str] = field(default_factory=list)
 
     def multiplier(self, w: Workload) -> float:
         if w.name in self.per_case:
@@ -44,12 +50,49 @@ class Calibration:
         out.detail["m_case"] = m
         return out
 
-    def disclose(self) -> Dict[str, float]:
-        """Full disclosure of applied factors (paper requirement)."""
-        out = {f"case:{k}": v for k, v in self.per_case.items()}
+    def disclose(self) -> Dict[str, object]:
+        """Full disclosure of applied factors (paper §IV-D requirement),
+        including the kernels the fit had to skip."""
+        out: Dict[str, object] = {
+            f"case:{k}": v for k, v in self.per_case.items()}
         out.update({f"class:{k}": v for k, v in self.per_class.items()})
         out["global"] = self.global_scale
+        if self.skipped:
+            out["skipped"] = list(self.skipped)
         return out
+
+    # ------------------------------------------------------- serialization
+    def to_dict(self) -> Dict:
+        """JSON-safe form — what ``serve.codec`` ships over the wire.
+        Multipliers travel in full (the §IV-D disclosure is the payload,
+        not an attachment)."""
+        return {"per_case": dict(self.per_case),
+                "per_class": dict(self.per_class),
+                "global_scale": self.global_scale,
+                "skipped": list(self.skipped)}
+
+    @staticmethod
+    def from_dict(d: Dict) -> "Calibration":
+        """Validated inverse of ``to_dict``."""
+        if not isinstance(d, dict):
+            raise ValueError(f"calibration payload must be a dict, got "
+                             f"{type(d).__name__}")
+        unknown = set(d) - {"per_case", "per_class", "global_scale",
+                            "skipped"}
+        if unknown:
+            raise ValueError(f"unknown calibration key(s): "
+                             f"{sorted(unknown)}")
+
+        def _mults(key: str) -> Dict[str, float]:
+            raw = d.get(key, {})
+            if not isinstance(raw, dict):
+                raise ValueError(f"{key} must be a dict")
+            return {str(k): float(v) for k, v in raw.items()}
+
+        return Calibration(
+            per_case=_mults("per_case"), per_class=_mults("per_class"),
+            global_scale=float(d.get("global_scale", 1.0)),
+            skipped=[str(s) for s in d.get("skipped", [])])
 
 
 PredictFn = Callable[[Workload], TimeBreakdown]
@@ -65,6 +108,10 @@ def fit_per_case(workloads: Sequence[Workload],
         t_pred = predict_fn(w).total
         if t_pred > 0:
             cal.per_case[w.name] = t_meas / t_pred
+        else:
+            # a degenerate backend (every prediction 0) must not yield an
+            # empty calibration that claims perfect train MAE
+            cal.skipped.append(w.name)
     return cal
 
 
@@ -74,11 +121,13 @@ def fit_per_class(workloads: Sequence[Workload],
     """Geometric-mean multiplier per workload class (the paper's
     'separate calibrated scales for memory/compute/balanced/stencil')."""
     logs: Dict[str, List[float]] = {}
+    cal = Calibration()
     for w, t_meas in zip(workloads, measured):
         t_pred = predict_fn(w).total
         if t_pred > 0 and t_meas > 0:
             logs.setdefault(w.wclass, []).append(math.log(t_meas / t_pred))
-    cal = Calibration()
+        else:
+            cal.skipped.append(w.name)
     for cls, vals in logs.items():
         cal.per_class[cls] = math.exp(sum(vals) / len(vals))
     return cal
@@ -124,5 +173,6 @@ def fit_with_holdout(workloads: Sequence[Workload],
             [measured[i] for i in hold_idx]),
         "n_train": float(len(train_idx)),
         "n_holdout": float(len(hold_idx)),
+        "n_skipped": float(len(cal.skipped)),
     }
     return cal, report

@@ -4,17 +4,33 @@ Every coefficient in the analytical models is tied either to a
 microbenchmark measurement or a vendor datasheet (paper Tables II and VII).
 This module is the single source of truth for those values.
 
+Since PR 6 the values themselves live as **data files** under
+``core/hwdata/*.json`` (one schema-validated document per accelerator —
+see ``core/hwlib.py`` for the schema, loader and diff tool), loaded
+lazily by the registry below.  Adding an accelerator is a data entry,
+not a code change: the paper's B200→H200 / MI300A→MI250X ports swap
+parameter files, not formulas (Obs. 6, §V-E).
+
 Parameter files distinguish PEAK (datasheet) from SUSTAINED (microbenchmark)
 values for bandwidth and compute throughput, per paper §V-A ("Datasheet peaks
-are not the sole inputs for validation").
+are not the sole inputs for validation"); each file's ``provenance``
+section mirrors paper Table II's Source column.
 
 Units: seconds, bytes, FLOP/s, bytes/s unless suffixed otherwise.
+
+The classic preset names (``hardware.B200`` ... ``hardware.CPU_HOST``)
+remain importable; they resolve through the registry, so every caller
+shares one instance per entry (which keeps ``core.sweep.hardware_key``'s
+per-instance token stash effective).
 """
 from __future__ import annotations
 
 import dataclasses
+import os
+import threading
+from collections.abc import MutableMapping
 from dataclasses import dataclass, field
-from typing import Dict, Optional
+from typing import Dict, Iterator, Optional
 
 # ---------------------------------------------------------------------------
 # Precision handling
@@ -47,9 +63,9 @@ class CacheLevel:
 class HardwareParams:
     """Parameter file for one accelerator.
 
-    Fields map 1:1 onto paper Tables II / VII rows; ``source`` records
-    whether each came from a microbenchmark or a datasheet (Table II's
-    Source column) for audit.
+    Fields map 1:1 onto paper Tables II / VII rows; the data file's
+    ``provenance`` section records whether each came from a microbenchmark
+    or a datasheet (Table II's Source column) for audit.
     """
 
     name: str
@@ -133,6 +149,10 @@ class HardwareParams:
         return cycles / (self.clock_ghz * 1e9)
 
     def peak_flops(self, precision: str = "fp16", matrix: bool = True) -> float:
+        if precision not in BYTES_PER_ELEM:
+            raise KeyError(
+                f"no peak flops for {precision!r} on {self.name}: unknown "
+                f"precision (known: {sorted(BYTES_PER_ELEM)})")
         table = self.tensor_peak_flops if matrix else self.vector_peak_flops
         if precision in table:
             return table[precision]
@@ -171,241 +191,88 @@ class HardwareParams:
 
 
 # ---------------------------------------------------------------------------
-# Parameter files.  Values from paper Tables II, VII, VIII and §III.
+# The registry: lazily backed by core/hwdata/*.json.
 # ---------------------------------------------------------------------------
 
-B200 = HardwareParams(
-    name="b200",
-    vendor="nvidia",
-    model_family="blackwell",
-    num_sms=176,
-    warp_size=32,
-    max_resident_warps=64,
-    clock_ghz=1.8,
-    # Table II: 2,250 TFLOPS FP16 peak, 4,500 FP8; §II: sustained 1,100-1,400
-    # FP16.  FP8 sustained inferred from the paper's own measured GEMM point
-    # (16384^3 in 4.10 ms end-to-end => MMA-stage rate ~3,050 TF/s once the
-    # stage model's sync/TMEM overheads are separated out).
-    tensor_peak_flops={"fp16": 2250e12, "bf16": 2250e12, "fp8": 4500e12,
-                       "fp4": 9000e12, "tf32": 1100e12, "fp64": 40e12},
-    tensor_sustained_flops={"fp16": 1400e12, "bf16": 1400e12, "fp8": 3050e12,
-                            "fp4": 5600e12, "fp64": 37e12},
-    vector_peak_flops={"fp32": 75e12, "fp64": 37e12},
-    vector_sustained_flops={"fp32": 60e12, "fp64": 30e12},
-    # §II: sustained HBM 6.8-7.1 TB/s vs 8.0 datasheet
-    hbm_peak_bw=8.0e12,
-    hbm_sustained_bw=6.95e12,
-    hbm_capacity=192e9,
-    hbm_latency_cycles=600,
-    cache_levels=(
-        CacheLevel("l1", 256 * 1024, 30, 40e12),
-        CacheLevel("l2", 64 * 1024 * 1024, 200, 12e12),
-    ),
-    # TMEM: 256 KB/SM; Table VII: 16/8 TB/s read/write as the conservative
-    # default; §V-B(c): "TMEM at 22 TB/s is conservative (24-26 TB/s in
-    # tuned kernels reduces error to 2-3%)" — we use the tuned values since
-    # the validation GEMMs are cuBLAS-tuned.
-    accum_capacity_bytes=256 * 1024,
-    accum_read_bw=24e12,
-    accum_write_bw=12e12,
-    # Table VII microbench values
-    tma_latency_cycles=420,
-    tma_bandwidth=6.5e12,          # effective TMA BW, L2-dependent
-    mma_latency_cycles=12.5,       # tcgen05.mma 11-14 cyc midpoint
-    mbarrier_latency_cycles=40,    # L_mbar 40-50 (lower end: tuned kernels)
-    commit_latency_cycles=45,      # L_commit 40-50
-    decomp_engine_rate=800e9,
-    decomp_efficiency=0.9,
-    two_sm_speedup=1.30,           # predicted/measured §V-B(c)
-    tmem_alloc_latency_s=1.0e-6,
-    launch_latency_s=8e-6,         # 5-12us observed (§V-B(c))
-    pipeline_overlap_alpha=0.92,   # alpha in [0.85, 0.95]
-    working_set_scale_bytes=48e6,  # L2-ish scale for Eq. 16 blend
-    precision_efficiency={"fp16": 1.0, "bf16": 1.0, "fp8": 1.0, "fp4": 0.9,
-                          "fp64": 1.0, "fp32": 1.0},
-)
+DATA_DIR = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                         "hwdata")
 
-H200 = B200.with_updates(
-    # Paper §IV-B end + §V-E: same model framework, updated parameters only.
-    name="h200",
-    num_sms=132,
-    hbm_peak_bw=4.8e12,
-    hbm_sustained_bw=4.2e12,     # Obs. 4: ~4.2 TB/s sustained
-    hbm_capacity=141e9,
-    tensor_peak_flops={"fp16": 989e12, "bf16": 989e12, "fp8": 1979e12,
-                       "tf32": 494e12, "fp64": 67e12},
-    tensor_sustained_flops={"fp16": 700e12, "bf16": 700e12, "fp8": 1400e12,
-                            "fp64": 60e12},
-    # Hopper: no TMEM; accumulators in RF/SMEM -> model uses SMEM-as-accum
-    accum_capacity_bytes=228 * 1024,
-    accum_read_bw=9e12,
-    accum_write_bw=4.5e12,
-    tma_bandwidth=4.0e12,
-    two_sm_speedup=1.0,          # no 2-SM UMMA pairs on Hopper
-    cache_levels=(
-        CacheLevel("l1", 256 * 1024, 30, 30e12),
-        CacheLevel("l2", 50 * 1024 * 1024, 220, 9e12),
-    ),
-)
 
-MI300A = HardwareParams(
-    name="mi300a",
-    vendor="amd",
-    model_family="cdna",
-    num_sms=304,                   # 38 CU x 8 XCD
-    warp_size=64,
-    max_resident_warps=32,
-    clock_ghz=2.1,
-    # Table II: FP8 1,307 TFLOPS; FP64 61.3 (SPEChpc roofline uses 30.4
-    # no-FMA).  NOTE on sustained values: the CDNA model's Eq. 12 divides
-    # (T_mem + T_comp) by (1 + eta_overlap), so T_compute is the
-    # PER-WAVEFRONT-SERIAL issue time; end-to-end throughput = serial rate
-    # x (1 + eta).  Sustained numbers below are therefore the measured
-    # serial-issue rates (~ peak * Util / 2 with eta -> 1 at the measured
-    # 0.4-0.7 utilization band).
-    tensor_peak_flops={"fp8": 1307e12, "fp16": 653e12, "bf16": 653e12,
-                       "tf32": 163e12, "fp32": 122e12, "fp64": 61.3e12},
-    tensor_sustained_flops={"fp8": 560e12, "fp16": 280e12, "bf16": 280e12,
-                            "fp32": 52e12, "fp64": 23e12},
-    vector_peak_flops={"fp32": 61.3e12, "fp64": 30.4e12},
-    vector_sustained_flops={"fp32": 45e12, "fp64": 24e12},
-    hbm_peak_bw=5.3e12,
-    hbm_sustained_bw=4.6e12,
-    hbm_capacity=128e9,
-    hbm_latency_cycles=400,        # Table VII L_HBM
-    cache_levels=(
-        # Table VII: L1/L2/LLC latency 5/50/150 cyc; LLC (Infinity Cache)
-        # BW 17.2 TB/s (microbench).
-        CacheLevel("l1", 32 * 1024, 5, 50e12),
-        CacheLevel("l2", 4 * 1024 * 1024, 50, 25e12),
-        CacheLevel("llc", 256 * 1024 * 1024, 150, 17.2e12),
-    ),
-    accum_capacity_bytes=64 * 1024,   # LDS 64 KB/CU (Table II)
-    accum_read_bw=10e12,
-    accum_write_bw=10e12,
-    vgpr_per_cu=65536,
-    llc_transition_alpha=1.5,      # Table III alpha (calibrated)
-    llc_transition_beta=0.85,      # Table III beta
-    llc_resident_mb=205.0,
-    llc_capacity_mb=256.0,
-    coherence_latency_s=150e-9,    # Table IV: 100-200 ns
-    cross_xcd_latency_s=75e-9,     # §III: 50-100 ns
-    mfma_utilization=0.55,         # Table IV 0.4-0.7
-    tau_interference_s=50e-6,      # Table VII tuned
-    tau_interference_gpu_s=100e-6,
-    tau_fusion_s=2e-6,
-    launch_latency_s=6e-6,
-    pipeline_overlap_alpha=0.85,
-    working_set_scale_bytes=200e6,
-    precision_efficiency={"fp64": 1.0, "fp32": 1.0, "fp16": 0.95,
-                          "bf16": 0.95, "fp8": 0.9},
-)
+class _LazyRegistry(MutableMapping):
+    """name -> HardwareParams, loading data files on first access.
 
-MI250X = MI300A.with_updates(
-    # §IV-B end: same CDNA framework; own FP64 peak (383 TFLOPS matrix),
-    # bandwidth 3.2 TB/s, 128 MB LLC, 220 CUs.
-    name="mi250x",
-    num_sms=220,
-    # paper §IV-B: "own peak FP64 (383 TFLOPS)" — read as the FP16 matrix
-    # peak; FP64 matrix peak is 95.7 TFLOPS (vendor datasheet).  FP64
-    # sustained serial-issue rate calibrated against the paper's published
-    # point: dgemm 16384^3 measured = predicted = 0.283 s
-    # (=> 8.8 TFLOP / 0.283 s / (1+eta) with eta=1 -> ~15.6 TF/s serial).
-    tensor_peak_flops={"fp16": 383e12, "bf16": 383e12, "fp64": 95.7e12,
-                       "fp32": 95.7e12},
-    tensor_sustained_flops={"fp16": 150e12, "bf16": 150e12,
-                            "fp32": 38e12, "fp64": 15.55e12},
-    vector_peak_flops={"fp32": 47.9e12, "fp64": 47.9e12},
-    vector_sustained_flops={"fp32": 19e12, "fp64": 19e12},
-    hbm_peak_bw=3.2e12,
-    hbm_sustained_bw=2.8e12,
-    hbm_capacity=128e9,
-    cache_levels=(
-        CacheLevel("l1", 16 * 1024, 5, 30e12),
-        CacheLevel("l2", 8 * 1024 * 1024, 60, 12e12),
-        CacheLevel("llc", 128 * 1024 * 1024, 170, 7e12),
-    ),
-    llc_resident_mb=102.0,
-    llc_capacity_mb=128.0,
-    coherence_latency_s=0.0,       # discrete GPU, no APU coherence term
-    cross_xcd_latency_s=90e-9,     # dual-GCD
-)
+    Iteration and membership see the union of already-loaded/registered
+    entries and the on-disk library without parsing any file; an entry's
+    JSON is validated and decoded exactly once (``get()`` then always
+    returns that same instance, which keeps the sweep cache's
+    per-instance token stash effective).  Thread-safe; the data directory
+    is scanned once per process.
+    """
 
-# ---------------------------------------------------------------------------
-# TPU v5e: our deployment target (hardware-adaptation of the paper's models).
-# Constants per task spec: 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link ICI.
-# ---------------------------------------------------------------------------
+    def __init__(self, data_dir: str = DATA_DIR):
+        self._data_dir = data_dir
+        self._loaded: Dict[str, HardwareParams] = {}
+        self._files: Optional[Dict[str, str]] = None
+        self._removed: set = set()
+        self._lock = threading.RLock()
 
-TPU_V5E = HardwareParams(
-    name="tpu_v5e",
-    vendor="google",
-    model_family="tpu",
-    num_sms=1,                     # one TensorCore per v5e chip
-    warp_size=128,                 # VPU lane width (8x128) - nearest analogue
-    max_resident_warps=1,          # no occupancy concept
-    clock_ghz=1.6,
-    tensor_peak_flops={"bf16": 197e12, "fp16": 197e12, "int8": 394e12,
-                       "fp8": 394e12, "fp32": 49e12},
-    # MXU sustained ~ 0.85 of peak for well-aligned shapes (mult of 128/256)
-    tensor_sustained_flops={"bf16": 167e12, "fp16": 167e12, "int8": 335e12,
-                            "fp32": 42e12},
-    vector_peak_flops={"fp32": 3.2e12, "bf16": 6.4e12},
-    vector_sustained_flops={"fp32": 2.7e12, "bf16": 5.4e12},
-    hbm_peak_bw=819e9,
-    hbm_sustained_bw=740e9,        # ~90% achievable on streaming
-    hbm_capacity=16e9,
-    hbm_latency_cycles=500,
-    cache_levels=(),               # no big LLC: VMEM is software-managed
-    # VMEM = the TPU analogue of TMEM (accumulators + staged tiles)
-    accum_capacity_bytes=128 * 1024 * 1024,
-    accum_read_bw=23e12,           # VMEM<->MXU effective
-    accum_write_bw=11e12,
-    tma_latency_cycles=800,        # DMA issue latency analogue
-    tma_bandwidth=740e9,           # DMA rides HBM sustained BW
-    mbarrier_latency_cycles=60,    # semaphore wait analogue
-    commit_latency_cycles=60,
-    two_sm_speedup=1.0,
-    launch_latency_s=2e-6,         # XLA dispatch per program
-    pipeline_overlap_alpha=0.90,   # Mosaic double-buffers DMA like TMA alpha
-    working_set_scale_bytes=96e6,  # VMEM-residency scale for Eq. 16 blend
-    precision_efficiency={"bf16": 1.0, "fp32": 1.0, "int8": 0.95, "fp8": 0.95},
-    # Interconnect (per task spec: ~50 GB/s/link; v5e 2D torus, 1 link/axis
-    # direction pair here modeled as aggregate per-axis bandwidth).
-    ici_link_bw=50e9,
-    ici_links_per_axis=1,
-    dci_link_bw=12.5e9,            # cross-pod optics, ~ICI/4 (assumption)
-    tau_interference_s=10e-6,      # straggler/multi-slice budget term
-    tau_interference_gpu_s=25e-6,
-)
+    def _scan(self) -> Dict[str, str]:
+        files = self._files
+        if files is None:
+            files = {}
+            if os.path.isdir(self._data_dir):
+                for fn in sorted(os.listdir(self._data_dir)):
+                    if fn.endswith(".json"):
+                        files[fn[:-5]] = os.path.join(self._data_dir, fn)
+            self._files = files
+        return files
 
-# ---------------------------------------------------------------------------
-# CPU-host: parameter file SELF-CALIBRATED by core/microbench.py at runtime.
-# Placeholder values here; microbench.calibrate_host() returns a measured one.
-# ---------------------------------------------------------------------------
+    def __getitem__(self, name: str) -> HardwareParams:
+        with self._lock:
+            p = self._loaded.get(name)
+            if p is not None:
+                return p
+            if name in self._removed:
+                raise KeyError(name)
+            path = self._scan().get(name)
+            if path is None:
+                raise KeyError(name)
+            from . import hwlib  # deferred: hwlib imports this module
+            p = hwlib.load_file(path).params
+            self._loaded[name] = p
+            return p
 
-CPU_HOST = HardwareParams(
-    name="cpu_host",
-    vendor="host",
-    model_family="generic",
-    num_sms=1,
-    warp_size=1,
-    max_resident_warps=1,
-    clock_ghz=2.5,
-    tensor_peak_flops={"fp32": 200e9, "fp64": 100e9},
-    tensor_sustained_flops={"fp32": 120e9, "fp64": 60e9},
-    vector_peak_flops={"fp32": 100e9, "fp64": 50e9},
-    vector_sustained_flops={"fp32": 60e9, "fp64": 30e9},
-    hbm_peak_bw=30e9,
-    hbm_sustained_bw=15e9,
-    hbm_capacity=64e9,
-    launch_latency_s=20e-6,
-    pipeline_overlap_alpha=0.0,    # no async pipeline on host path
-    working_set_scale_bytes=32e6,
-)
+    def __setitem__(self, name: str, params: HardwareParams) -> None:
+        with self._lock:
+            self._removed.discard(name)
+            self._loaded[name] = params
 
-REGISTRY: Dict[str, HardwareParams] = {
-    p.name: p for p in (B200, H200, MI300A, MI250X, TPU_V5E, CPU_HOST)
-}
+    def __delitem__(self, name: str) -> None:
+        with self._lock:
+            if name not in self:
+                raise KeyError(name)
+            self._loaded.pop(name, None)
+            if name in self._scan():
+                self._removed.add(name)   # tombstone the file-backed entry
+
+    def __contains__(self, name) -> bool:
+        with self._lock:
+            if name in self._loaded:
+                return True
+            return name not in self._removed and name in self._scan()
+
+    def __iter__(self) -> Iterator[str]:
+        with self._lock:
+            names = (set(self._loaded) | set(self._scan())) - self._removed
+        return iter(sorted(names))
+
+    def __len__(self) -> int:
+        with self._lock:
+            return len((set(self._loaded) | set(self._scan()))
+                       - self._removed)
+
+
+REGISTRY: MutableMapping = _LazyRegistry()
 
 
 def get(name: str) -> HardwareParams:
@@ -416,5 +283,35 @@ def get(name: str) -> HardwareParams:
             f"unknown hardware '{name}'; known: {sorted(REGISTRY)}") from None
 
 
-def register(params: HardwareParams) -> None:
+def register(params: HardwareParams, *, overwrite: bool = False) -> None:
+    """Add a parameter file to the registry.
+
+    Collisions raise: a typo'd or malicious entry must not silently
+    shadow a shipped one (``b200`` et al. count — the library's data
+    files are part of the namespace even before they're loaded).  Pass
+    ``overwrite=True`` for intentional replacement, e.g. re-registering
+    a re-calibrated ``cpu_host_measured``.
+    """
+    if not isinstance(params, HardwareParams):
+        raise TypeError(f"register() takes a HardwareParams, got "
+                        f"{type(params).__name__}")
+    if not overwrite and params.name in REGISTRY:
+        raise ValueError(
+            f"hardware '{params.name}' is already registered; pass "
+            f"overwrite=True to replace it")
     REGISTRY[params.name] = params
+
+
+# Classic preset attribute names resolve through the registry (module
+# ``__getattr__``): ``hardware.B200`` lazy-loads hwdata/b200.json once.
+_PRESET_ATTRS = {
+    "B200": "b200", "H200": "h200", "MI300A": "mi300a",
+    "MI250X": "mi250x", "TPU_V5E": "tpu_v5e", "CPU_HOST": "cpu_host",
+}
+
+
+def __getattr__(name: str):
+    key = _PRESET_ATTRS.get(name)
+    if key is not None:
+        return get(key)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

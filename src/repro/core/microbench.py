@@ -14,7 +14,8 @@ seconds on CI.
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Dict, Tuple
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -22,6 +23,55 @@ import numpy as np
 
 from .hardware import CPU_HOST, HardwareParams, register
 from .validate import measure_median
+
+
+@dataclass
+class MeasuredSuite:
+    """One microbenchmark suite run: workloads + their measured medians.
+
+    This is the calibration artifact that travels over the wire
+    (``serve.codec.encode_suite``): a client measures kernels locally,
+    ships the suite, and the server fits disclosed multipliers against
+    its own predictions (paper §IV-D loop, served).  ``meta`` carries
+    free-form floats about the run (repeats, warmups, ...).
+    """
+
+    name: str
+    workloads: List["Workload"]
+    measured_s: List[float]
+    meta: Dict[str, float] = field(default_factory=dict)
+
+    def __post_init__(self):
+        if len(self.workloads) != len(self.measured_s):
+            raise ValueError(
+                f"suite {self.name!r}: {len(self.workloads)} workloads "
+                f"vs {len(self.measured_s)} measurements")
+
+    def __len__(self) -> int:
+        return len(self.workloads)
+
+    # ------------------------------------------------------- serialization
+    def to_dict(self) -> Dict:
+        return {"name": self.name,
+                "workloads": [w.to_dict() for w in self.workloads],
+                "measured_s": [float(t) for t in self.measured_s],
+                "meta": dict(self.meta)}
+
+    @staticmethod
+    def from_dict(d: Dict) -> "MeasuredSuite":
+        from .workload import Workload
+        if not isinstance(d, dict):
+            raise ValueError(f"suite payload must be a dict, got "
+                             f"{type(d).__name__}")
+        try:
+            return MeasuredSuite(
+                name=str(d["name"]),
+                workloads=[Workload.from_dict(w) for w in d["workloads"]],
+                measured_s=[float(t) for t in d["measured_s"]],
+                meta={str(k): float(v)
+                      for k, v in (d.get("meta") or {}).items()})
+        except (KeyError, TypeError) as e:
+            raise ValueError(f"bad suite payload: {e}") from None
 
 DEFAULT_REPEATS = 15
 DEFAULT_WARMUPS = 3
@@ -111,7 +161,8 @@ def calibrate_host(*, quick: bool = True) -> HardwareParams:
         working_set_scale_bytes=0.0,  # disable Eq. 16 blend on host (caches
                                       # already folded into sustained number)
     )
-    register(hw)
+    # overwrite: re-calibration legitimately replaces the previous run
+    register(hw, overwrite=True)
     return hw
 
 
@@ -215,3 +266,12 @@ def host_suite(*, quick: bool = True):
         med, _ = measure_median(run, repeats=reps, warmups=warm)
         measured.append(med)
     return workloads, measured
+
+
+def host_suite_result(*, quick: bool = True) -> MeasuredSuite:
+    """``host_suite`` packaged as a wire-shippable :class:`MeasuredSuite`
+    (what ``PredictionClient.calibrate`` uploads)."""
+    workloads, measured = host_suite(quick=quick)
+    return MeasuredSuite(name="host_suite", workloads=workloads,
+                         measured_s=measured,
+                         meta={"quick": 1.0 if quick else 0.0})

@@ -23,10 +23,13 @@ See ``README.md`` in this directory for the wire format, the coalescing
 contract, and when to hit the server vs calling ``SweepEngine``
 in-process.
 """
-from .codec import (WIRE_VERSION, WireFormatError, decode_json,
-                    decode_request, decode_spec, decode_table,
-                    decode_totals, decode_winners, encode_error,
-                    encode_json, encode_request, encode_spec, encode_table,
+from .codec import (WIRE_VERSION, WireFormatError, decode_calibrate_request,
+                    decode_calibration, decode_hardware, decode_json,
+                    decode_request, decode_spec, decode_suite, decode_table,
+                    decode_totals, decode_winners,
+                    encode_calibrate_request, encode_calibration,
+                    encode_error, encode_hardware, encode_json,
+                    encode_request, encode_spec, encode_suite, encode_table,
                     encode_totals, encode_winners, raise_if_error)
 
 
@@ -44,8 +47,11 @@ def __getattr__(name):
 
 __all__ = [
     "WIRE_VERSION", "WireFormatError", "PredictionClient",
-    "PredictionServer", "decode_json", "decode_request", "decode_spec",
-    "decode_table", "decode_totals", "decode_winners", "encode_error",
-    "encode_json", "encode_request", "encode_spec", "encode_table",
-    "encode_totals", "encode_winners", "raise_if_error",
+    "PredictionServer", "decode_calibrate_request", "decode_calibration",
+    "decode_hardware", "decode_json", "decode_request", "decode_spec",
+    "decode_suite", "decode_table", "decode_totals", "decode_winners",
+    "encode_calibrate_request", "encode_calibration", "encode_error",
+    "encode_hardware", "encode_json", "encode_request", "encode_spec",
+    "encode_suite", "encode_table", "encode_totals", "encode_winners",
+    "raise_if_error",
 ]

@@ -122,42 +122,83 @@ class PredictionClient:
     def predict_totals(self, source, hw: str, *,
                        model: Optional[str] = None,
                        chunk_size: Optional[int] = None, jobs=None,
-                       coalesce: bool = True) -> np.ndarray:
+                       coalesce: bool = True,
+                       calibration: Optional[str] = None) -> np.ndarray:
         """Every row's total seconds (the ``predict_table(...).totals``
-        column, served)."""
+        column, served).  ``calibration`` names a server-side calibration
+        (see :meth:`calibrate`) whose multipliers scale the totals."""
         data = self._sweep("predict_table", source, hw, model=model,
                            chunk_size=chunk_size, jobs=jobs,
-                           coalesce=coalesce)
+                           coalesce=coalesce, calibration=calibration)
         return codec.decode_totals(data)
 
     def argmin(self, source, hw: str, *, model: Optional[str] = None,
                chunk_size: Optional[int] = None, jobs=None,
-               coalesce: bool = True):
+               coalesce: bool = True, calibration: Optional[str] = None):
         """The cheapest configuration (a ``SweepWinner``)."""
         data = self._sweep("argmin", source, hw, model=model,
                            chunk_size=chunk_size, jobs=jobs,
-                           coalesce=coalesce)
+                           coalesce=coalesce, calibration=calibration)
         return codec.decode_winners(data)[0]
 
     def topk(self, source, hw: str, k: int, *,
              model: Optional[str] = None,
              chunk_size: Optional[int] = None, jobs=None,
-             coalesce: bool = True):
+             coalesce: bool = True, calibration: Optional[str] = None):
         data = self._sweep("topk", source, hw, model=model, k=int(k),
                            chunk_size=chunk_size, jobs=jobs,
-                           coalesce=coalesce)
+                           coalesce=coalesce, calibration=calibration)
         return codec.decode_winners(data)
 
     def pareto(self, source, hw: str, *,
                objectives: Sequence[str] = ("compute", "memory"),
                model: Optional[str] = None,
                chunk_size: Optional[int] = None, jobs=None,
-               coalesce: bool = True):
+               coalesce: bool = True, calibration: Optional[str] = None):
         data = self._sweep("pareto", source, hw, model=model,
                            objectives=tuple(objectives),
                            chunk_size=chunk_size, jobs=jobs,
-                           coalesce=coalesce)
+                           coalesce=coalesce, calibration=calibration)
         return codec.decode_winners(data)
+
+    # ------------------------------------------------- hardware library
+    def hardware_list(self) -> dict:
+        """GET /v1/hardware: {name: summary} directory of the server's
+        hardware library."""
+        return codec.decode_json(self._request("GET", "/v1/hardware"))
+
+    def hardware_get(self, name: str):
+        """GET /v1/hardware/<name> -> ``hwlib.HardwareEntry`` (file-backed
+        entries arrive with their provenance/units audit trail)."""
+        return codec.decode_hardware(
+            self._request("GET", f"/v1/hardware/{name}"))
+
+    def hardware_register(self, entry, *, overwrite: bool = False) -> dict:
+        """POST /v1/hardware: register a ``HardwareParams`` or
+        ``hwlib.HardwareEntry`` server-side.  Collides (HTTP 400) on a
+        taken name with different parameters unless ``overwrite``;
+        re-posting the identical payload is a no-op success."""
+        path = "/v1/hardware?overwrite=1" if overwrite else "/v1/hardware"
+        return codec.decode_json(
+            self._request("POST", path, codec.encode_hardware(entry)))
+
+    # ---------------------------------------------- calibration-as-data
+    def calibrate(self, suite, hw: str, *, mode: str = "class",
+                  holdout_fraction: float = 0.3, seed: int = 0,
+                  model: Optional[str] = None,
+                  register_as: Optional[str] = None):
+        """POST /v1/calibrate: upload a measured ``MeasuredSuite``, get
+        back ``(Calibration, report)`` fitted against the *server's*
+        predictions with train/holdout discipline (paper §IV-D).
+
+        ``register_as`` stores the fit server-side so follow-up sweeps
+        can price with it (``calibration=<name>`` on the query methods).
+        """
+        body = codec.encode_calibrate_request(
+            suite, hw=hw, mode=mode, holdout_fraction=holdout_fraction,
+            seed=seed, model=model, register_as=register_as)
+        return codec.decode_calibration(
+            self._request("POST", "/v1/calibrate", body))
 
 
 def main(argv=None) -> None:

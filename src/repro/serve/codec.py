@@ -26,6 +26,15 @@ table messages.  Result messages (``SweepWinner`` lists) are pure JSON —
 Python's float repr round-trips bit-exactly, and the stdlib encoder/parser
 pair handles NaN/Infinity — while totals columns are raw float64.
 
+Wire version 2 adds the hardware-library and calibration-as-data message
+types (``MSG_HARDWARE``/``MSG_CALIBRATION``/``MSG_SUITE``/``MSG_CALREQ``):
+hardware entries travel as their schema-validated ``hwlib`` documents
+(JSON numbers round-trip floats bit-exactly), measured microbench suites
+as workload dicts plus a raw float64 measurement column, and fitted
+``Calibration`` objects with their full §IV-D multiplier disclosure.
+Every version-1 message decodes unchanged (the envelope and types 1-7
+did not move) — a v2 decoder accepts ``version <= 2``.
+
 Malformed input (truncated buffers, bad magic, unsupported versions,
 out-of-range section offsets, wrong payload sizes) raises
 ``WireFormatError`` — never an IndexError or struct.error a server loop
@@ -43,7 +52,7 @@ from ..core.workload import LatticeSpec, NV_COLS, TimeBreakdown, \
     WorkloadTable, row_from_tb, tb_from_row
 
 MAGIC = b"RPRW"
-WIRE_VERSION = 1
+WIRE_VERSION = 2
 
 MSG_TABLE = 1
 MSG_SPEC = 2
@@ -52,6 +61,11 @@ MSG_WINNERS = 4
 MSG_TOTALS = 5
 MSG_JSON = 6
 MSG_ERROR = 7
+# --- wire version 2 --------------------------------------------------------
+MSG_HARDWARE = 8
+MSG_CALIBRATION = 9
+MSG_SUITE = 10
+MSG_CALREQ = 11
 
 _HEADER = struct.Struct("<4sHHI")
 _SECTION = struct.Struct("<4sQQ")
@@ -324,10 +338,13 @@ def encode_request(op: str, source, *, hw: str,
                    objectives: Optional[Sequence[str]] = None,
                    chunk_size: Optional[int] = None,
                    jobs=None,
-                   coalesce: bool = True) -> bytes:
+                   coalesce: bool = True,
+                   calibration: Optional[str] = None) -> bytes:
     """One prediction request: an operation + its parameters + the sweep
     source (a built ``WorkloadTable`` or a lazy ``LatticeSpec``).
     Hardware travels by registry name — parameter files live server-side.
+    ``calibration`` names a server-side calibration (registered via
+    ``/v1/calibrate``) whose multipliers scale the predictions.
     """
     if op not in REQUEST_OPS:
         raise ValueError(f"unknown op {op!r}; valid: {REQUEST_OPS}")
@@ -335,6 +352,10 @@ def encode_request(op: str, source, *, hw: str,
             "objectives": list(objectives) if objectives else None,
             "chunk_size": chunk_size, "jobs": jobs,
             "coalesce": bool(coalesce)}
+    if calibration is not None:
+        # only stamped when used: v2 request metas without calibration
+        # stay byte-identical to v1 ones
+        meta["calibration"] = str(calibration)
     sections: List[Tuple[bytes, Buf]] = [(b"meta", _json_bytes(meta))]
     if isinstance(source, WorkloadTable):
         sections.append((b"tabl", encode_table(source)))
@@ -447,6 +468,130 @@ def encode_json(obj, msg_type: int = MSG_JSON) -> bytes:
 def decode_json(data: Buf):
     sections = _expect(data, MSG_JSON, "json")
     return _meta(sections).get("payload")
+
+
+# ---------------------------------------------------------------------------
+# Wire version 2: hardware library + calibration-as-data
+# ---------------------------------------------------------------------------
+
+def encode_hardware(entry) -> bytes:
+    """A hardware-library entry (``hwlib.HardwareEntry`` or a bare
+    ``HardwareParams``) as its schema-validated document.  JSON floats
+    round-trip bit-exactly, so a decoded entry predicts identically to
+    the sender's."""
+    from ..core import hwlib
+    if not isinstance(entry, hwlib.HardwareEntry):
+        entry = hwlib.HardwareEntry(params=entry)
+    return _pack(MSG_HARDWARE, [(b"meta", _json_bytes(
+        {"entry": entry.to_doc()}))])
+
+
+def decode_hardware(data: Buf):
+    """-> ``hwlib.HardwareEntry`` (schema-validated; a payload that fails
+    the hardware schema raises ``WireFormatError``)."""
+    from ..core import hwlib
+    sections = _expect(data, MSG_HARDWARE, "hardware")
+    meta = _meta(sections)
+    doc = meta.get("entry")
+    if not isinstance(doc, dict):
+        raise WireFormatError("hardware message is missing its entry "
+                              "document")
+    try:
+        return hwlib.load_entry(doc, where="<wire>")
+    except hwlib.HardwareSchemaError as e:
+        raise WireFormatError(f"bad hardware entry: {e}") from None
+
+
+def encode_calibration(cal, report: Optional[Dict] = None) -> bytes:
+    """A fitted ``core.calibrate.Calibration`` with its full multiplier
+    disclosure (paper §IV-D: factors must be disclosed — the wire form IS
+    the disclosure), plus the optional train/holdout report."""
+    return _pack(MSG_CALIBRATION, [(b"meta", json.dumps(
+        {"calibration": cal.to_dict(), "report": report}).encode("utf-8"))])
+
+
+def decode_calibration(data: Buf):
+    """-> (``Calibration``, report dict | None)."""
+    from ..core.calibrate import Calibration
+    sections = _expect(data, MSG_CALIBRATION, "calibration")
+    meta = _meta(sections)
+    try:
+        cal = Calibration.from_dict(meta.get("calibration"))
+    except ValueError as e:
+        raise WireFormatError(f"bad calibration payload: {e}") from None
+    report = meta.get("report")
+    if report is not None and not isinstance(report, dict):
+        raise WireFormatError("calibration report must be an object")
+    return cal, report
+
+
+def encode_suite(suite) -> bytes:
+    """A measured microbench suite (``microbench.MeasuredSuite``):
+    workload characterizations as JSON, the measured medians as one raw
+    float64 column."""
+    meas = np.ascontiguousarray(suite.measured_s, dtype=np.float64)
+    meta = {"name": suite.name,
+            "workloads": [w.to_dict() for w in suite.workloads],
+            "meta": dict(suite.meta), "n": int(meas.shape[0])}
+    return _pack(MSG_SUITE, [(b"meta", _json_bytes(meta)),
+                             (b"meas", meas.tobytes())])
+
+
+def decode_suite(data: Buf):
+    """-> ``microbench.MeasuredSuite`` (measured column read as float64)."""
+    from ..core.microbench import MeasuredSuite
+    sections = _expect(data, MSG_SUITE, "suite")
+    meta = _meta(sections)
+    try:
+        n = int(meta["n"])
+    except (KeyError, TypeError, ValueError) as e:
+        raise WireFormatError(f"bad suite meta: {e}") from None
+    meas = _array_section(sections, b"meas", np.float64, n)
+    try:
+        return MeasuredSuite.from_dict(
+            {"name": meta.get("name"), "workloads": meta.get("workloads"),
+             "measured_s": meas.tolist(), "meta": meta.get("meta")})
+    except ValueError as e:
+        raise WireFormatError(str(e)) from None
+
+
+CALIBRATE_MODES = ("case", "class")
+
+
+def encode_calibrate_request(suite, *, hw: str, mode: str = "class",
+                             holdout_fraction: float = 0.3, seed: int = 0,
+                             model: Optional[str] = None,
+                             register_as: Optional[str] = None) -> bytes:
+    """'Here are my measured times — fit multipliers against your
+    predictions.'  ``register_as`` stores the fit server-side under that
+    name so follow-up sweep requests can price against it
+    (``encode_request(..., calibration=name)``)."""
+    if mode not in CALIBRATE_MODES:
+        raise ValueError(f"unknown calibrate mode {mode!r}; valid: "
+                         f"{CALIBRATE_MODES}")
+    meta = {"hw": str(hw), "mode": mode,
+            "holdout_fraction": float(holdout_fraction), "seed": int(seed),
+            "model": model, "register_as": register_as}
+    return _pack(MSG_CALREQ, [(b"meta", _json_bytes(meta)),
+                              (b"suit", encode_suite(suite))])
+
+
+def decode_calibrate_request(data: Buf):
+    """-> (``MeasuredSuite``, params dict with hw/mode/holdout_fraction/
+    seed/model/register_as)."""
+    sections = _expect(data, MSG_CALREQ, "calibrate-request")
+    meta = _meta(sections)
+    if not isinstance(meta.get("hw"), str):
+        raise WireFormatError("calibrate request is missing its hardware "
+                              "name")
+    if meta.get("mode") not in CALIBRATE_MODES:
+        raise WireFormatError(f"unknown calibrate mode "
+                              f"{meta.get('mode')!r}")
+    raw = sections.get(b"suit")
+    if raw is None:
+        raise WireFormatError("calibrate request is missing its suite "
+                              "section")
+    return decode_suite(raw), meta
 
 
 class RemoteError(RuntimeError):

@@ -10,12 +10,26 @@ Endpoints (wire bodies are ``repro.serve.codec`` messages):
 
     GET  /v1/health        liveness + wire version + known hardware
     GET  /v1/cache_stats   engine cache counters + coalescer counters
+    GET  /v1/hardware      JSON directory of the hardware library
+    GET  /v1/hardware/<n>  one entry as a HARDWARE message
+    POST /v1/hardware      HARDWARE -> register a new entry (?overwrite=1)
+    POST /v1/calibrate     CALREQ(suite) -> CALIBRATION (fit w/ holdout)
     POST /v1/predict_table REQUEST(table|spec) -> TOTALS
     POST /v1/argmin        REQUEST(table|spec) -> WINNERS (list of one)
     POST /v1/topk          REQUEST(table|spec) -> WINNERS
     POST /v1/pareto        REQUEST(table|spec) -> WINNERS
     POST /v1/predict       REQUEST, op taken from the request meta
     POST /v1/clear_cache   admin: drop every engine cache tier
+
+Calibration-as-data: ``/v1/calibrate`` accepts a measured microbench
+suite, fits per-case/per-class multipliers against this server's own
+predictions with the paper's train/holdout discipline, and returns the
+fitted ``Calibration`` with its full §IV-D disclosure.  ``register_as``
+stores it server-side; sweep requests that name it
+(``calibration=<name>``) price with its multipliers applied (and group
+separately in the coalescer — calibrated and raw answers never fuse).
+Registering a calibration or hardware entry is idempotent (same payload
+-> same state), preserving the client's retry contract.
 
 Micro-batching contract: concurrent **table** requests that share
 (hardware, model route) and did not opt out (``coalesce=False``) are
@@ -85,6 +99,18 @@ class _Pending:
         self.error: Optional[BaseException] = None
 
 
+class _NamedCalibration:
+    """A registered calibration: the object plus its registry name (the
+    name is the coalescer group key — two requests naming the same
+    registered calibration may fuse; raw and calibrated never do)."""
+
+    __slots__ = ("name", "cal")
+
+    def __init__(self, name: str, cal):
+        self.name = name
+        self.cal = cal
+
+
 class Coalescer:
     """Fuses concurrent small table requests into one columnar evaluation.
 
@@ -112,13 +138,15 @@ class Coalescer:
     # ---------------------------------------------------------- client side
     def submit(self, op: str, table: WorkloadTable, hw, model: Optional[str],
                k: Optional[int] = None,
-               objectives: Optional[Tuple[str, ...]] = None):
+               objectives: Optional[Tuple[str, ...]] = None,
+               calibration: Optional[_NamedCalibration] = None):
         req = _Pending(op, table, k, objectives)
-        group = (sweep.hardware_key(hw), model or sweep.default_route(hw))
+        group = (sweep.hardware_key(hw), model or sweep.default_route(hw),
+                 calibration.name if calibration else None)
         with self._cv:
             if self._closed:
                 raise RuntimeError("coalescer is shut down")
-            self._q.append((group, hw, model, req))
+            self._q.append((group, hw, model, calibration, req))
             self.stats["requests"] += 1
             self._cv.notify()
         req.event.wait()
@@ -146,13 +174,14 @@ class Coalescer:
     def _run_batch(self, drained: List) -> None:
         self.stats["batches"] += 1
         groups: Dict[Tuple, List] = {}
-        for group, hw, model, req in drained:
-            groups.setdefault(group, []).append((hw, model, req))
+        for group, hw, model, calibration, req in drained:
+            groups.setdefault(group, []).append((hw, model, calibration,
+                                                 req))
         for members in groups.values():
-            hw, model = members[0][0], members[0][1]
-            reqs = [m[2] for m in members]
+            hw, model, calibration = members[0][:3]
+            reqs = [m[3] for m in members]
             try:
-                self._run_group(hw, model, reqs)
+                self._run_group(hw, model, calibration, reqs)
             except BaseException as e:       # noqa: BLE001 — reply, not die
                 for r in reqs:
                     if not r.event.is_set():
@@ -160,6 +189,7 @@ class Coalescer:
                         r.event.set()
 
     def _run_group(self, hw, model: Optional[str],
+                   calibration: Optional[_NamedCalibration],
                    reqs: List[_Pending]) -> None:
         # split oversized groups so one fused evaluation stays bounded
         start = 0
@@ -171,25 +201,29 @@ class Coalescer:
                     or rows + len(reqs[end].table) <= self.max_fused_rows):
                 rows += len(reqs[end].table)
                 end += 1
-            self._run_fused(hw, model, reqs[start:end])
+            self._run_fused(hw, model, calibration, reqs[start:end])
             start = end
 
     def _run_fused(self, hw, model: Optional[str],
+                   calibration: Optional[_NamedCalibration],
                    reqs: List[_Pending]) -> None:
+        cal = calibration.cal if calibration else None
         if len(reqs) == 1:
             # the common serial case keeps the memoizing path: an identical
             # replayed sweep is one content-token hit
             r = reqs[0]
             try:
                 r.result = self._answer(
-                    self.engine.predict_table(r.table, hw, model=model),
+                    self.engine.predict_table(r.table, hw, model=model,
+                                              calibration=cal),
                     r, lo=0, hi=None)
             except BaseException as e:       # noqa: BLE001
                 r.error = e
             r.event.set()
             return
         fused = WorkloadTable.concat([r.table for r in reqs])
-        res = self.engine.predict_table(fused, hw, model=model, cache=False)
+        res = self.engine.predict_table(fused, hw, model=model, cache=False,
+                                        calibration=cal)
         self.stats["fused_evaluations"] += 1
         self.stats["coalesced_requests"] += len(reqs)
         self.stats["fused_rows"] += len(fused)
@@ -243,6 +277,10 @@ class PredictionServer:
         self.pool = None
         self.started_at = time.time()
         self.n_requests = 0
+        #: registered calibrations by name — what sweep requests with
+        #: ``calibration=<name>`` resolve against
+        self.calibrations: Dict[str, _NamedCalibration] = {}
+        self._cal_lock = threading.Lock()
         server = self
 
         class Handler(BaseHTTPRequestHandler):
@@ -267,6 +305,15 @@ class PredictionServer:
                     self._reply(200, codec.encode_json(server.health()))
                 elif self.path == "/v1/cache_stats":
                     self._reply(200, codec.encode_json(server.stats()))
+                elif self.path == "/v1/hardware":
+                    self._reply(200, codec.encode_json(
+                        server.hardware_directory()))
+                elif self.path.startswith("/v1/hardware/"):
+                    name = self.path[len("/v1/hardware/"):]
+                    try:
+                        self._reply(200, server.hardware_entry(name))
+                    except KeyError as e:
+                        self._reply(404, codec.encode_error(e))
                 else:
                     self._reply(404, codec.encode_error(
                         LookupError(f"unknown endpoint {self.path}")))
@@ -296,12 +343,33 @@ class PredictionServer:
                         f"{MAX_BODY_BYTES}")))
                     return
                 body = self.rfile.read(length)
-                if self.path == "/v1/clear_cache":
+                path, _, query = self.path.partition("?")
+                if path == "/v1/clear_cache":
                     server.engine.clear_cache()
                     self._reply(200, codec.encode_json({"cleared": True}))
                     return
-                op = self.path.rsplit("/", 1)[-1]
-                if self.path not in (
+                if path == "/v1/hardware":
+                    overwrite = "overwrite=1" in query.split("&")
+                    try:
+                        self._reply(200, server.register_hardware(
+                            body, overwrite=overwrite))
+                    except (codec.WireFormatError, ValueError,
+                            TypeError) as e:
+                        self._reply(400, codec.encode_error(e))
+                    except Exception as e:   # noqa: BLE001
+                        self._reply(500, codec.encode_error(e))
+                    return
+                if path == "/v1/calibrate":
+                    try:
+                        self._reply(200, server.calibrate(body))
+                    except (codec.WireFormatError, KeyError, ValueError,
+                            TypeError) as e:
+                        self._reply(400, codec.encode_error(e))
+                    except Exception as e:   # noqa: BLE001
+                        self._reply(500, codec.encode_error(e))
+                    return
+                op = path.rsplit("/", 1)[-1]
+                if path not in (
                         "/v1/predict", "/v1/predict_table", "/v1/argmin",
                         "/v1/topk", "/v1/pareto"):
                     self._reply(404, codec.encode_error(
@@ -375,8 +443,11 @@ class PredictionServer:
 
     # ------------------------------------------------------------- queries
     def health(self) -> Dict:
+        with self._cal_lock:
+            n_cal = len(self.calibrations)
         return {"status": "ok", "wire_version": codec.WIRE_VERSION,
                 "hardware": sorted(hardware.REGISTRY),
+                "n_calibrations": n_cal,
                 "uptime_s": time.time() - self.started_at,
                 "n_requests": self.n_requests,
                 "pool_jobs": self.pool.njobs if self.pool else 0}
@@ -386,6 +457,98 @@ class PredictionServer:
         out.update({f"coalescer_{k}": v
                     for k, v in self.coalescer.stats.items()})
         return out
+
+    # ------------------------------------------------- hardware library
+    def hardware_directory(self) -> Dict:
+        """GET /v1/hardware: every registry entry with a one-line summary
+        (loads each entry — the directory is a browsing endpoint, not the
+        hot path)."""
+        out: Dict[str, Dict] = {}
+        for name in sorted(hardware.REGISTRY):
+            p = hardware.get(name)
+            out[name] = {
+                "vendor": p.vendor, "model_family": p.model_family,
+                "num_sms": p.num_sms,
+                "hbm_capacity_bytes": p.hbm_capacity,
+                "hbm_sustained_bw": p.hbm_sustained_bw,
+            }
+        return {"hardware": out, "count": len(out)}
+
+    def hardware_entry(self, name: str) -> bytes:
+        """GET /v1/hardware/<name>: one entry as a HARDWARE message.
+
+        File-backed entries travel with their full audit trail
+        (provenance/units/source); runtime registrations (or entries that
+        shadowed their file) travel as bare parameters."""
+        from ..core import hwlib
+        p = hardware.get(name)       # pointed KeyError when unknown
+        path = hwlib.library_file(name)
+        if path is not None:
+            entry = hwlib.load_file(path)
+            if entry.params == p:
+                return codec.encode_hardware(entry)
+        return codec.encode_hardware(p)
+
+    def register_hardware(self, body: bytes, *,
+                          overwrite: bool = False) -> bytes:
+        """POST /v1/hardware: schema-validate and register an entry.
+
+        Idempotent under the client's retry contract: re-posting a
+        payload identical to the live entry succeeds without
+        ``overwrite``; a *different* payload for a taken name still
+        raises the collision error."""
+        entry = codec.decode_hardware(body)
+        p = entry.params
+        existed = p.name in hardware.REGISTRY
+        if existed and not overwrite and hardware.get(p.name) == p:
+            return codec.encode_json({"registered": p.name,
+                                      "replaced": False})
+        hardware.register(p, overwrite=overwrite)
+        return codec.encode_json({"registered": p.name,
+                                  "replaced": existed})
+
+    # ---------------------------------------------- calibration-as-data
+    def calibrate(self, body: bytes) -> bytes:
+        """POST /v1/calibrate: fit disclosed multipliers for an uploaded
+        measured suite against this server's own predictions, with the
+        paper's train/holdout discipline (§IV-D).
+
+        Deterministic (seeded split), so a client retry re-fits to the
+        identical calibration — ``register_as`` stays idempotent."""
+        from ..core import calibrate as calibrate_mod
+        suite, params = codec.decode_calibrate_request(body)
+        hw = hardware.get(params["hw"])
+        model = params.get("model")
+
+        def predict_fn(w):
+            return self.engine.predict(w, hw, model=model)
+
+        cal, report = calibrate_mod.fit_with_holdout(
+            suite.workloads, suite.measured_s, predict_fn,
+            mode=params["mode"],
+            holdout_fraction=float(params.get("holdout_fraction", 0.3)),
+            seed=int(params.get("seed", 0)))
+        name = params.get("register_as")
+        if name:
+            with self._cal_lock:
+                self.calibrations[str(name)] = _NamedCalibration(
+                    str(name), cal)
+        return codec.encode_calibration(cal, report)
+
+    def _resolve_calibration(self, meta: Dict
+                             ) -> Optional[_NamedCalibration]:
+        name = meta.get("calibration")
+        if name is None:
+            return None
+        with self._cal_lock:
+            cal = self.calibrations.get(name)
+        if cal is None:
+            with self._cal_lock:
+                known = sorted(self.calibrations)
+            raise KeyError(
+                f"unknown calibration '{name}' (registered: {known}); "
+                f"POST /v1/calibrate with register_as first")
+        return cal
 
     def handle_request(self, body: bytes,
                        expect_op: Optional[str] = None) -> bytes:
@@ -402,25 +565,32 @@ class PredictionServer:
         k = meta.get("k")
         objectives = tuple(meta["objectives"]) if meta.get("objectives") \
             else None
+        calibration = self._resolve_calibration(meta)
         if isinstance(source, WorkloadTable):
             if meta.get("coalesce", True):
                 result = self.coalescer.submit(op, source, hw, model,
-                                               k=k, objectives=objectives)
+                                               k=k, objectives=objectives,
+                                               calibration=calibration)
             else:
-                res = self.engine.predict_table(source, hw, model=model)
+                res = self.engine.predict_table(
+                    source, hw, model=model,
+                    calibration=calibration.cal if calibration else None)
                 result = Coalescer._answer(
                     res, _Pending(op, source, k, objectives), 0, None)
             if op == "predict_table":
                 return codec.encode_totals(result)
             return codec.encode_winners(result)
         return self._handle_spec(op, source, hw, model, k, objectives,
-                                 meta)
+                                 meta, calibration)
 
     def _handle_spec(self, op: str, spec: LatticeSpec, hw,
-                     model: Optional[str], k, objectives, meta) -> bytes:
+                     model: Optional[str], k, objectives, meta,
+                     calibration: Optional[_NamedCalibration] = None
+                     ) -> bytes:
         kw = dict(chunk_size=meta.get("chunk_size"), model=model,
                   engine=self.engine, jobs=meta.get("jobs"),
-                  pool=self.pool)
+                  pool=self.pool,
+                  calibration=calibration.cal if calibration else None)
         if op == "argmin":
             return codec.encode_winners([sweep.argmin_stream(spec, hw,
                                                              **kw)])

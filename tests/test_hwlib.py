@@ -1,0 +1,381 @@
+"""Declarative hardware library: schema, round-trips, goldens, registry.
+
+The load-bearing guarantee: moving the six presets from Python
+constructors into ``core/hwdata/*.json`` changed *nothing* numerically.
+The golden argmin tests pin the exact (winner index, total seconds) each
+preset produced from the in-code constructors immediately before the
+refactor — JSON floats round-trip via Python's shortest repr, so the
+loaded parameters must predict bit-identically.
+"""
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+from repro.core import calibrate, hardware, hwlib, sweep
+from repro.core.workload import TileConfig, WorkloadTable, gemm_workload
+
+# (winner row index, winner total seconds) of a 27-tile 4096^3 GEMM
+# lattice argmin per preset, captured from the pre-refactor in-code
+# constructors.  Exact equality: the data files ARE those constructors.
+GOLDEN_ARGMIN = {
+    ("b200", "fp16"): (26, 0.0001204135781326555),
+    ("b200", "fp32"): (26, 0.0001466261009694249),
+    ("h200", "fp16"): (17, 0.0002385608426607762),
+    ("h200", "fp32"): (17, 0.0003224656335505636),
+    ("mi300a", "fp16"): (0, 0.000269445995178178),
+    ("mi300a", "fp32"): (0, 0.0013375075941180678),
+    ("mi250x", "fp16"): (0, 0.0005003156677213033),
+    ("mi250x", "fp32"): (0, 0.0018441494995665713),
+    ("tpu_v5e", "fp16"): (0, 0.0008250252453413174),
+    ("tpu_v5e", "fp32"): (0, 0.003274393535047619),
+    ("cpu_host", "fp16"): (0, 0.34361738368),
+    ("cpu_host", "fp32"): (0, 1.1453446122666666),
+}
+
+TILES = [TileConfig(bm, bn, bk) for bm in (64, 128, 256)
+         for bn in (64, 128, 256) for bk in (16, 32, 64)]
+
+NEW_ENTRIES = ("h100", "a100", "mi300x", "mi250x_gcd", "tpu_v4",
+               "tpu_v6e", "cpu_roofline")
+
+
+def data_files():
+    return sorted(fn for fn in os.listdir(hardware.DATA_DIR)
+                  if fn.endswith(".json"))
+
+
+# ---------------------------------------------------------------------------
+# Golden parity: the data files are the old constructors, bit for bit
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("name,precision", sorted(GOLDEN_ARGMIN))
+def test_golden_argmin_parity(name, precision):
+    gi, gt = GOLDEN_ARGMIN[(name, precision)]
+    hw = hardware.get(name)
+    table = WorkloadTable.tile_lattice(
+        gemm_workload("golden", 4096, 4096, 4096, precision=precision),
+        TILES)
+    win = sweep.argmin_table(table, hw,
+                             engine=sweep.SweepEngine(use_cache=False))
+    assert (win.index, win.total) == (gi, gt)
+
+
+def test_preset_attributes_resolve_to_registry_instances():
+    # hardware.B200 et al. must be the registry's single memoized
+    # instance — the sweep cache's per-instance token stash relies on it
+    assert hardware.B200 is hardware.get("b200")
+    assert hardware.TPU_V5E is hardware.get("tpu_v5e")
+    assert hardware.CPU_HOST is hardware.get("cpu_host")
+    with pytest.raises(AttributeError):
+        hardware.NOT_A_PRESET
+
+
+def test_new_accelerators_ship_as_data_and_price():
+    engine = sweep.SweepEngine(use_cache=False)
+    w = gemm_workload("g", 2048, 2048, 2048, precision="fp32")
+    for name in NEW_ENTRIES:
+        hw = hardware.get(name)
+        assert hwlib.library_file(name) is not None, name
+        t = engine.predict(w, hw).total
+        assert 0.0 < t < 10.0, (name, t)
+
+
+# ---------------------------------------------------------------------------
+# Round trips
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("fn", data_files())
+def test_every_data_file_round_trips_bit_exactly(fn):
+    path = os.path.join(hardware.DATA_DIR, fn)
+    entry = hwlib.load_file(path)
+    p = entry.params
+    # dict round trip, including frozen cache_levels tuples
+    q = hwlib.from_dict(hwlib.to_dict(p), where=fn)
+    assert q == p
+    assert isinstance(q.cache_levels, tuple)
+    assert q.cache_levels == p.cache_levels
+    # document round trip preserves provenance/units/source/notes
+    again = hwlib.load_entry(entry.to_doc(), where=fn)
+    assert again.params == p
+    assert again.to_doc() == entry.to_doc()
+    # JSON text round trip (what the wire does to the document)
+    assert hwlib.load_entry(json.loads(json.dumps(entry.to_doc())),
+                            where=fn).params == p
+
+
+def test_sweep_content_token_never_serializes():
+    hw = hardware.get("b200")
+    sweep.hardware_key(hw)                       # stashes the token
+    assert hasattr(hw, "_sweep_content_token")
+    d = hwlib.to_dict(hw)
+    assert "_sweep_content_token" not in d
+    assert "_sweep_content_token" not in json.dumps(d)
+    for fn in data_files():
+        with open(os.path.join(hardware.DATA_DIR, fn)) as f:
+            assert "_sweep_content_token" not in f.read(), fn
+
+
+# ---------------------------------------------------------------------------
+# Loader rejections: pointed errors, not KeyErrors from deep inside
+# ---------------------------------------------------------------------------
+
+def _b200_doc():
+    return hwlib.load_file(
+        os.path.join(hardware.DATA_DIR, "b200.json")).to_doc()
+
+
+def test_loader_rejects_unknown_field_with_suggestion():
+    doc = _b200_doc()
+    doc["params"]["hbm_peak_bww"] = 1.0
+    with pytest.raises(hwlib.HardwareSchemaError,
+                       match=r"unknown field 'hbm_peak_bww' "
+                             r"\(did you mean 'hbm_peak_bw'\?\)"):
+        hwlib.load_entry(doc, where="t")
+
+
+def test_loader_rejects_missing_required_fields():
+    doc = _b200_doc()
+    del doc["params"]["name"]
+    with pytest.raises(hwlib.HardwareSchemaError,
+                       match="missing required field.*name"):
+        hwlib.load_entry(doc, where="t")
+
+
+def test_loader_rejects_wrong_units_declaration():
+    doc = _b200_doc()
+    doc["units"] = {"hbm_peak_bw": "GB/s"}
+    with pytest.raises(hwlib.HardwareSchemaError,
+                       match=r"units\['hbm_peak_bw'\] is 'GB/s'.*"
+                             r"rescale the value"):
+        hwlib.load_entry(doc, where="t")
+
+
+def test_loader_rejects_unknown_precision():
+    doc = _b200_doc()
+    doc["params"]["tensor_peak_flops"]["fp7"] = 1.0
+    with pytest.raises(hwlib.HardwareSchemaError,
+                       match="unknown precision"):
+        hwlib.load_entry(doc, where="t")
+
+
+def test_loader_rejects_unknown_model_family():
+    doc = _b200_doc()
+    doc["params"]["model_family"] = "hopperish"
+    with pytest.raises(hwlib.HardwareSchemaError,
+                       match="unknown model_family 'hopperish'"):
+        hwlib.load_entry(doc, where="t")
+
+
+def test_loader_rejects_bad_provenance_tag():
+    doc = _b200_doc()
+    doc["provenance"] = {"hbm_peak_bw": "guessed"}
+    with pytest.raises(hwlib.HardwareSchemaError,
+                       match="tag 'guessed' not in"):
+        hwlib.load_entry(doc, where="t")
+
+
+def test_loader_rejects_unknown_top_level_key():
+    doc = _b200_doc()
+    doc["paramz"] = {}
+    with pytest.raises(hwlib.HardwareSchemaError,
+                       match=r"unknown top-level key 'paramz'"):
+        hwlib.load_entry(doc, where="t")
+
+
+def test_loader_rejects_bool_and_string_numbers():
+    doc = _b200_doc()
+    doc["params"]["num_sms"] = True
+    with pytest.raises(hwlib.HardwareSchemaError, match="must be a number"):
+        hwlib.load_entry(doc, where="t")
+    doc = _b200_doc()
+    doc["params"]["clock_ghz"] = "1.5"
+    with pytest.raises(hwlib.HardwareSchemaError, match="must be a number"):
+        hwlib.load_entry(doc, where="t")
+
+
+def test_loader_rejects_malformed_cache_levels():
+    doc = _b200_doc()
+    doc["params"]["cache_levels"][0].pop("bandwidth")
+    with pytest.raises(hwlib.HardwareSchemaError,
+                       match=r"cache_levels\[0\] must have exactly"):
+        hwlib.load_entry(doc, where="t")
+
+
+def test_load_file_rejects_stem_mismatch_and_bad_json(tmp_path):
+    doc = _b200_doc()
+    p = tmp_path / "not_b200.json"
+    p.write_text(json.dumps(doc))
+    with pytest.raises(hwlib.HardwareSchemaError,
+                       match="file stem 'not_b200' must equal"):
+        hwlib.load_file(str(p))
+    bad = tmp_path / "broken.json"
+    bad.write_text("{nope")
+    with pytest.raises(hwlib.HardwareSchemaError, match="not valid JSON"):
+        hwlib.load_file(str(bad))
+
+
+def test_loader_rejects_wrong_schema_version():
+    doc = _b200_doc()
+    doc["schema_version"] = 99
+    with pytest.raises(hwlib.HardwareSchemaError,
+                       match="schema_version 99 unsupported"):
+        hwlib.load_entry(doc, where="t")
+
+
+# ---------------------------------------------------------------------------
+# diff: the §V-E port as a query
+# ---------------------------------------------------------------------------
+
+def test_diff_b200_h200_names_exactly_the_port_fields():
+    d = hwlib.diff(hardware.get("b200"), hardware.get("h200"))
+    assert bool(d)
+    assert set(d.fields()) == {
+        "name", "num_sms", "hbm_peak_bw", "hbm_sustained_bw",
+        "hbm_capacity", "tensor_peak_flops", "tensor_sustained_flops",
+        "accum_capacity_bytes", "accum_read_bw", "accum_write_bw",
+        "tma_bandwidth", "two_sm_speedup", "cache_levels",
+    }
+    # B200 has fp4 tensor cores, H200 does not: a removed sub-key
+    assert "tensor_peak_flops.fp4" in d.removed
+    assert "diff b200 -> h200" in d.format()
+
+
+def test_diff_of_identical_params_is_empty():
+    d = hwlib.diff(hardware.get("b200"), hardware.get("b200"))
+    assert not d
+    assert d.fields() == ()
+
+
+# ---------------------------------------------------------------------------
+# Registry semantics (satellite: collision raises; tombstone deletes)
+# ---------------------------------------------------------------------------
+
+def test_register_collision_raises_and_overwrite_replaces():
+    orig = hardware.get("h200")
+    try:
+        with pytest.raises(ValueError, match="already registered.*"
+                                             "overwrite=True"):
+            hardware.register(orig.with_updates(hbm_sustained_bw=1.0))
+        # collision fires even against a *not-yet-loaded* data file
+        fresh = hardware._LazyRegistry()
+        reg, hardware.REGISTRY = hardware.REGISTRY, fresh
+        try:
+            assert "mi300x" not in fresh._loaded
+            with pytest.raises(ValueError, match="already registered"):
+                hardware.register(orig.with_updates(name="mi300x"))
+        finally:
+            hardware.REGISTRY = reg
+        changed = orig.with_updates(hbm_sustained_bw=1.0)
+        hardware.register(changed, overwrite=True)
+        assert hardware.get("h200") is changed
+    finally:
+        hardware.REGISTRY["h200"] = orig
+
+
+def test_register_rejects_non_hardware_params():
+    with pytest.raises(TypeError, match="takes a HardwareParams"):
+        hardware.register({"name": "x"})
+
+
+def test_tombstone_delete_hides_file_backed_entry():
+    orig = hardware.get("tpu_v4")
+    try:
+        del hardware.REGISTRY["tpu_v4"]
+        assert "tpu_v4" not in hardware.REGISTRY
+        with pytest.raises(KeyError, match="unknown hardware 'tpu_v4'"):
+            hardware.get("tpu_v4")
+    finally:
+        hardware.REGISTRY["tpu_v4"] = orig
+    assert hardware.get("tpu_v4") is orig
+
+
+def test_install_goes_through_register(tmp_path):
+    # a data file cannot silently shadow a shipped entry (satellite 1)
+    doc = _b200_doc()
+    doc["params"]["hbm_sustained_bw"] = 1.0
+    p = tmp_path / "b200.json"
+    p.write_text(json.dumps(doc))
+    with pytest.raises(ValueError, match="already registered"):
+        hwlib.install(str(p))
+    assert hardware.get("b200").hbm_sustained_bw != 1.0
+
+
+# ---------------------------------------------------------------------------
+# Satellite: peak_flops validates precision first
+# ---------------------------------------------------------------------------
+
+def test_peak_flops_unknown_precision_is_pointed():
+    hw = hardware.get("b200")
+    with pytest.raises(KeyError, match=r"no peak flops for 'fp7' on "
+                                       r"b200: unknown precision"):
+        hw.peak_flops("fp7")
+    # a *known* precision a lacking entry can't scale-fallback for still
+    # errors (vector tables have no byte-ratio fallback)
+    with pytest.raises(KeyError, match="no peak flops"):
+        hardware.get("tpu_v5e").peak_flops("fp4", matrix=False)
+
+
+# ---------------------------------------------------------------------------
+# Satellite: fit_per_case / fit_per_class record skipped kernels
+# ---------------------------------------------------------------------------
+
+def _suite():
+    ws = [gemm_workload(f"g{n}", n, n, n, precision="fp32")
+          for n in (512, 1024, 2048, 4096)]
+    return ws, [1e-3, 2e-3, 8e-3, 3e-2]
+
+
+def test_fit_per_case_records_skipped_kernels():
+    ws, meas = _suite()
+    eng = sweep.SweepEngine(use_cache=False)
+    hw = hardware.get("b200")
+
+    def degenerate(w):
+        tb = eng.predict(w, hw)
+        return tb.scaled(0.0) if w.name == "g1024" else tb
+
+    cal = calibrate.fit_per_case(ws, meas, degenerate)
+    assert cal.skipped == ["g1024"]
+    assert "g1024" not in cal.per_case
+    assert cal.disclose()["skipped"] == ["g1024"]
+    # the all-zero backend yields no multipliers, not a silent 0% MAE
+    cal0 = calibrate.fit_per_case(ws, meas,
+                                  lambda w: eng.predict(w, hw).scaled(0.0))
+    assert cal0.per_case == {} and len(cal0.skipped) == len(ws)
+
+
+def test_fit_with_holdout_reports_n_skipped():
+    ws, meas = _suite()
+    eng = sweep.SweepEngine(use_cache=False)
+    hw = hardware.get("b200")
+    meas[2] = 0.0                      # non-positive measurement
+    cal, report = calibrate.fit_with_holdout(
+        ws, meas, lambda w: eng.predict(w, hw), mode="class", seed=0)
+    assert report["n_skipped"] == float(len(cal.skipped))
+    # Calibration round trip carries the skip list (§IV-D disclosure)
+    again = calibrate.Calibration.from_dict(cal.to_dict())
+    assert again.to_dict() == cal.to_dict()
+
+
+def test_calibration_from_dict_rejects_unknown_keys():
+    with pytest.raises(ValueError, match="unknown calibration key"):
+        calibrate.Calibration.from_dict({"per_case": {}, "scale": 2.0})
+
+
+# ---------------------------------------------------------------------------
+# CI gate: the schema lint runs clean as a subprocess (tier-1 wiring)
+# ---------------------------------------------------------------------------
+
+def test_check_hwlib_gate_passes():
+    root = os.path.normpath(os.path.join(os.path.dirname(__file__), ".."))
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(root, "src") + os.pathsep + \
+        env.get("PYTHONPATH", "")
+    out = subprocess.run(
+        [sys.executable, "-m", "benchmarks.check_hwlib", "-q"],
+        cwd=root, env=env, capture_output=True, text=True, timeout=120)
+    assert out.returncode == 0, out.stdout + out.stderr
+    assert "hwlib check OK" in out.stdout

@@ -436,3 +436,135 @@ class TestWorkloadDictRoundTrip:
         for w in ws:
             out = Workload.from_dict(json.loads(json.dumps(w.to_dict())))
             assert out == w
+
+
+class TestWireV2HardwareAndCalibration:
+    """v2 message types: hardware entries, calibrations, measured suites,
+    calibrate requests — plus the v1 backward-decode guarantee."""
+
+    def test_hardware_entry_round_trips_with_audit_trail(self):
+        from repro.core import hwlib
+        path = hwlib.library_file("b200")
+        entry = hwlib.load_file(path)
+        out = codec.decode_hardware(codec.encode_hardware(entry))
+        assert out.params == entry.params
+        assert out.provenance == entry.provenance
+        assert out.units == entry.units
+        assert out.source == entry.source
+        # a decoded entry prices bit-identically to the local one
+        table = WorkloadTable.tile_lattice(gemm_base(), TILES)
+        eng = sweep.SweepEngine(use_cache=False)
+        assert np.array_equal(eng.predict_table(table, out.params).totals,
+                              eng.predict_table(table, entry.params).totals)
+
+    def test_bare_params_encode_as_entry(self):
+        out = codec.decode_hardware(codec.encode_hardware(B200))
+        assert out.params == B200
+        assert out.provenance == {}
+
+    def test_hardware_decode_rejects_schema_violations(self):
+        from repro.core import hwlib
+        doc = hwlib.HardwareEntry(params=B200).to_doc()
+        doc["params"]["num_sms"] = "lots"
+        bad = codec._pack(codec.MSG_HARDWARE,
+                          [(b"meta", json.dumps({"entry": doc}).encode())])
+        with pytest.raises(codec.WireFormatError, match="bad hardware"):
+            codec.decode_hardware(bad)
+        with pytest.raises(codec.WireFormatError, match="missing its entry"):
+            codec.decode_hardware(codec._pack(
+                codec.MSG_HARDWARE, [(b"meta", b"{}")]))
+
+    def test_calibration_round_trips_with_disclosure(self):
+        from repro.core.calibrate import Calibration
+        cal = Calibration(per_case={"k1": 1.25, "k2": 0.5},
+                          per_class={"memory": 2.0},
+                          global_scale=1.1, skipped=["dead_kernel"])
+        report = {"train_mae": 0.5, "holdout_mae": 1.5}
+        out, rep = codec.decode_calibration(
+            codec.encode_calibration(cal, report))
+        assert out.to_dict() == cal.to_dict()
+        assert out.disclose() == cal.disclose()
+        assert rep == report
+        out2, rep2 = codec.decode_calibration(codec.encode_calibration(cal))
+        assert out2.to_dict() == cal.to_dict() and rep2 is None
+
+    def test_calibration_decode_rejects_unknown_keys(self):
+        bad = codec._pack(codec.MSG_CALIBRATION, [(b"meta", json.dumps(
+            {"calibration": {"scale": 2.0}}).encode())])
+        with pytest.raises(codec.WireFormatError, match="bad calibration"):
+            codec.decode_calibration(bad)
+
+    def test_suite_round_trips_measurements_bit_exactly(self):
+        from repro.core.microbench import MeasuredSuite
+        ws = [gemm_base(f"s{i}", 1024 + 256 * i) for i in range(5)]
+        meas = [1e-3 * (1 + i) / 3.0 for i in range(5)]
+        suite = MeasuredSuite(name="t", workloads=ws, measured_s=meas,
+                              meta={"repeats": 7.0})
+        out = codec.decode_suite(codec.encode_suite(suite))
+        assert out.name == suite.name
+        assert out.measured_s == meas          # float64 column, bit-exact
+        assert out.meta == suite.meta
+        assert [w.to_dict() for w in out.workloads] == \
+            [w.to_dict() for w in ws]
+
+    def test_suite_decode_rejects_length_mismatch(self):
+        from repro.core.microbench import MeasuredSuite
+        suite = MeasuredSuite(name="t", workloads=[gemm_base()],
+                              measured_s=[1e-3])
+        raw = bytearray(codec.encode_suite(suite))
+        # claim 2 measurements in the meta: the raw column no longer fits
+        raw = codec._pack(codec.MSG_SUITE, [
+            (b"meta", json.dumps({"name": "t", "workloads": [],
+                                  "meta": {}, "n": 2}).encode()),
+            (b"meas", b"\x00" * 8)])
+        with pytest.raises(codec.WireFormatError, match="meas"):
+            codec.decode_suite(raw)
+
+    def test_calibrate_request_round_trips(self):
+        from repro.core.microbench import MeasuredSuite
+        suite = MeasuredSuite(name="t",
+                              workloads=[gemm_base(f"c{i}") for i in
+                                         range(3)],
+                              measured_s=[1e-3, 2e-3, 3e-3])
+        body = codec.encode_calibrate_request(
+            suite, hw="b200", mode="case", holdout_fraction=0.25, seed=7,
+            model="roofline", register_as="mine")
+        out, params = codec.decode_calibrate_request(body)
+        assert out.measured_s == suite.measured_s
+        assert params["hw"] == "b200" and params["mode"] == "case"
+        assert params["holdout_fraction"] == 0.25 and params["seed"] == 7
+        assert params["model"] == "roofline"
+        assert params["register_as"] == "mine"
+        with pytest.raises(ValueError, match="unknown calibrate mode"):
+            codec.encode_calibrate_request(suite, hw="b200", mode="median")
+
+    def test_v1_messages_still_decode(self):
+        """Backward-decode guarantee: a v1 envelope (types 1-7 unchanged)
+        decodes under the v2 codec."""
+        table = WorkloadTable.tile_lattice(gemm_base(), TILES)
+        body = bytearray(codec.encode_request("argmin", table, hw="b200"))
+        assert body[4:6] == (2).to_bytes(2, "little")
+        body[4:6] = (1).to_bytes(2, "little")     # stamp a v1 envelope
+        op, source, meta = codec.decode_request(bytes(body))
+        assert op == "argmin" and meta["hw"] == "b200"
+        assert source.content_token() == table.content_token()
+        # v1 senders never stamp a calibration name
+        assert "calibration" not in meta
+
+    def test_request_without_calibration_matches_v1_meta_shape(self):
+        table = WorkloadTable.tile_lattice(gemm_base(), TILES[:2])
+        plain = codec.encode_request("argmin", table, hw="b200")
+        _, _, meta = codec.decode_request(plain)
+        assert "calibration" not in meta
+        named = codec.encode_request("argmin", table, hw="b200",
+                                     calibration="fit1")
+        _, _, meta2 = codec.decode_request(named)
+        assert meta2["calibration"] == "fit1"
+
+    def test_v2_types_rejected_under_wrong_expected_type(self):
+        from repro.core.calibrate import Calibration
+        msg = codec.encode_calibration(Calibration())
+        with pytest.raises(codec.WireFormatError, match="expected hardware"):
+            codec.decode_hardware(msg)
+        with pytest.raises(codec.WireFormatError, match="expected suite"):
+            codec.decode_suite(msg)

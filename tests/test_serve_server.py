@@ -581,3 +581,245 @@ class TestSecondProcessEndToEnd:
         assert remote.cache_stats()["hits"] >= hits0 + len(tb)
         assert same_winner(got, sweep.argmin_table(tb, B200,
                                                    engine=fresh_engine()))
+
+
+class TestHardwareLibraryEndpoints:
+    def test_directory_lists_every_registry_entry(self, served):
+        _, client = served
+        d = client.hardware_list()
+        assert d["count"] == len(d["hardware"]) == len(hardware.REGISTRY)
+        assert d["hardware"]["b200"]["model_family"] == "blackwell"
+        assert d["hardware"]["mi300a"]["num_sms"] == 304
+
+    def test_get_entry_ships_audit_trail_and_exact_params(self, served):
+        _, client = served
+        entry = client.hardware_get("b200")
+        assert entry.params == hardware.get("b200")
+        assert entry.provenance          # file-backed: provenance travels
+        assert entry.source
+        with pytest.raises(codec.RemoteError, match="unknown hardware"):
+            client.hardware_get("gtx1080")
+
+    def test_register_is_idempotent_and_collision_safe(self, served):
+        _, client = served
+        p = B200.with_updates(name="b200_test_reg", hbm_sustained_bw=5e12)
+        try:
+            assert client.hardware_register(p) == {
+                "registered": "b200_test_reg", "replaced": False}
+            # identical payload replays cleanly (the client retry contract)
+            assert client.hardware_register(p)["registered"] == \
+                "b200_test_reg"
+            # a *different* payload for the taken name is a 400
+            with pytest.raises(codec.RemoteError,
+                               match="already registered"):
+                client.hardware_register(
+                    p.with_updates(hbm_sustained_bw=6e12))
+            out = client.hardware_register(
+                p.with_updates(hbm_sustained_bw=6e12), overwrite=True)
+            assert out == {"registered": "b200_test_reg", "replaced": True}
+            assert hardware.get("b200_test_reg").hbm_sustained_bw == 6e12
+            # the registered entry prices like any shipped one
+            table = tile_table(n_shapes=1)
+            got = client.argmin(table, "b200_test_reg")
+            ref = sweep.argmin_table(table, hardware.get("b200_test_reg"),
+                                     engine=fresh_engine())
+            assert same_winner(got, ref)
+        finally:
+            del hardware.REGISTRY["b200_test_reg"]
+
+    def test_register_rejects_schema_violations(self, served):
+        server, client = served
+        from repro.core import hwlib
+        doc = hwlib.HardwareEntry(params=B200).to_doc()
+        doc["params"]["model_family"] = "volta"
+        import http.client
+        conn = http.client.HTTPConnection(*server.address)
+        try:
+            body = codec._pack(codec.MSG_HARDWARE, [
+                (b"meta", codec._json_bytes({"entry": doc}))])
+            conn.request("POST", "/v1/hardware", body,
+                         {"Content-Type": "application/x-repro-wire"})
+            resp = conn.getresponse()
+            data = resp.read()
+            assert resp.status == 400
+            with pytest.raises(codec.RemoteError,
+                               match="unknown model_family"):
+                codec.raise_if_error(data)
+        finally:
+            conn.close()
+        assert client.health()["status"] == "ok"
+
+
+def synthetic_suite(hw, n_kernels=8, scale=1.17):
+    """Measured-times suite fabricated as (server prediction x scale), so
+    the fitted multipliers are known and deterministic."""
+    eng = sweep.SweepEngine(use_cache=False)
+    ws, meas = [], []
+    for i in range(n_kernels):
+        n = 512 + 256 * i
+        w = gemm_workload(f"cal{i}_{n}", n, n, n, precision="fp16")
+        ws.append(w)
+        meas.append(eng.predict(w, hw).total * (scale + 0.01 * i))
+    from repro.core.microbench import MeasuredSuite
+    return MeasuredSuite(name="synthetic", workloads=ws, measured_s=meas)
+
+
+class TestCalibrationOverTheWire:
+    def test_served_fit_matches_in_process_bit_exactly(self, served):
+        from repro.core import calibrate
+        server, client = served
+        suite = synthetic_suite(B200)
+        cal, report = client.calibrate(suite, "b200", mode="class",
+                                       holdout_fraction=0.3, seed=3,
+                                       register_as="fit_exact")
+        ref_cal, ref_report = calibrate.fit_with_holdout(
+            suite.workloads, suite.measured_s,
+            lambda w: server.engine.predict(w, B200),
+            mode="class", holdout_fraction=0.3, seed=3)
+        assert cal.to_dict() == ref_cal.to_dict()
+        assert report == ref_report
+        assert client.health()["n_calibrations"] >= 1
+
+    def test_calibrated_sweeps_bit_identical_to_in_process(self, served):
+        server, client = served
+        suite = synthetic_suite(B200)
+        # class mode: the fitted "compute" multiplier applies to *other*
+        # gemm kernels too (a per-case fit only matches by kernel name)
+        cal, _ = client.calibrate(suite, "b200", mode="class",
+                                  register_as="fit_sweep")
+        table = tile_table(n_shapes=2)
+        for op, kw in (("argmin", {}), ("topk", {"k": 5}),
+                       ("pareto", {})):
+            got = getattr(client, op)(
+                table, "b200", calibration="fit_sweep",
+                **({"k": 5} if op == "topk" else {}))
+            if op == "argmin":
+                got = [got]
+            if op == "argmin":
+                ref = [sweep.argmin_table(table, B200, calibration=cal,
+                                          engine=fresh_engine())]
+            elif op == "topk":
+                ref = sweep.topk_table(table, B200, 5, calibration=cal,
+                                       engine=fresh_engine())
+            else:
+                ref = sweep.pareto_table(table, B200, calibration=cal,
+                                         engine=fresh_engine())
+            assert all(same_winner(a, b) for a, b in zip(got, ref)), op
+        tots = client.predict_totals(table, "b200",
+                                     calibration="fit_sweep")
+        ref_tots = fresh_engine().predict_table(
+            table, B200, calibration=cal).totals
+        assert np.array_equal(tots, ref_tots)
+        # calibrated != raw (the multipliers actually applied)
+        assert not np.array_equal(tots, client.predict_totals(table,
+                                                              "b200"))
+
+    def test_calibrated_spec_stream_routes(self, served):
+        _, client = served
+        suite = synthetic_suite(B200)
+        cal, _ = client.calibrate(suite, "b200", register_as="fit_spec")
+        spec = LatticeSpec.cartesian(
+            gemm_base(), k_tiles=[8 + i for i in range(16)],
+            num_ctas=[32 + 8 * i for i in range(16)])
+        got = client.argmin(spec, "b200", calibration="fit_spec")
+        ref = sweep.argmin_stream(spec, B200, calibration=cal)
+        assert same_winner(got, ref)
+        tots = client.predict_totals(spec, "b200", calibration="fit_spec")
+        assert np.array_equal(tots, sweep.predict_totals_stream(
+            spec, B200, calibration=cal))
+
+    def test_unknown_calibration_name_is_400(self, served):
+        _, client = served
+        with pytest.raises(codec.RemoteError,
+                           match="unknown calibration 'nope'"):
+            client.argmin(tile_table(1), "b200", calibration="nope")
+
+    def test_calibrate_retry_is_idempotent(self, served):
+        server, client = served
+        suite = synthetic_suite(B200)
+        cal1, rep1 = client.calibrate(suite, "b200",
+                                      register_as="fit_retry")
+        stored1 = server.calibrations["fit_retry"].cal.to_dict()
+        cal2, rep2 = client.calibrate(suite, "b200",
+                                      register_as="fit_retry")
+        assert cal1.to_dict() == cal2.to_dict() and rep1 == rep2
+        assert server.calibrations["fit_retry"].cal.to_dict() == stored1
+
+    def test_skipped_kernels_disclosed_over_the_wire(self, served):
+        """A suite entry with an unusable measurement (0.0 s — a timer
+        failure) must come back with that kernel named in the
+        calibration's skip list rather than silently poisoning the fit."""
+        from repro.core.microbench import MeasuredSuite
+        _, client = served
+        good = synthetic_suite(B200, n_kernels=6)
+        dead = gemm_workload("empty_kernel", 256, 256, 256,
+                             precision="fp16")
+        suite = MeasuredSuite(
+            name="with_dead", workloads=list(good.workloads) + [dead],
+            measured_s=list(good.measured_s) + [0.0])
+        cal, report = client.calibrate(suite, "b200", mode="class",
+                                       holdout_fraction=0.0, seed=0)
+        assert "empty_kernel" in cal.skipped
+        assert report["n_skipped"] == float(len(cal.skipped))
+        assert cal.disclose()["skipped"] == cal.skipped
+
+    def test_raw_and_calibrated_never_fuse(self):
+        """Coalescer contract: same table+hardware with and without a
+        calibration must land in different groups, and each answer stays
+        bit-identical to its own in-process counterpart."""
+        from repro.core.calibrate import Calibration
+        from repro.serve.server import _NamedCalibration
+        eng = sweep.SweepEngine(use_cache=False)
+        co = Coalescer(eng, window_s=0.2)
+        cal = Calibration(per_class={"compute": 3.0}, global_scale=2.0)
+        named = _NamedCalibration("x3", cal)
+        table = tile_table(n_shapes=1)
+        out = {}
+
+        def go(key, calibration):
+            out[key] = co.submit("argmin", table, B200, None,
+                                 calibration=calibration)
+
+        threads = [threading.Thread(target=go, args=("raw", None)),
+                   threading.Thread(target=go, args=("cal", named))]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        co.close()
+        assert same_winner(out["raw"][0], sweep.argmin_table(
+            table, B200, engine=fresh_engine()))
+        assert same_winner(out["cal"][0], sweep.argmin_table(
+            table, B200, calibration=cal, engine=fresh_engine()))
+        assert out["raw"][0].total != out["cal"][0].total
+        # two groups -> no fused cross-group evaluation of the pair
+        assert co.stats["fused_evaluations"] == 0
+
+    def test_same_named_calibration_may_fuse_and_stays_exact(self):
+        from repro.core.calibrate import Calibration
+        from repro.serve.server import _NamedCalibration
+        eng = sweep.SweepEngine(use_cache=False)
+        co = Coalescer(eng, window_s=0.2)
+        named = _NamedCalibration(
+            "shared", Calibration(global_scale=1.5))
+        parts = [WorkloadTable.tile_lattice(
+            gemm_base(f"cf{j}", 2048 + 128 * j), TILES[:7])
+            for j in range(4)]
+        out = [None] * 4
+
+        def go(j):
+            out[j] = co.submit("argmin", parts[j], B200, None,
+                               calibration=named)
+
+        threads = [threading.Thread(target=go, args=(j,))
+                   for j in range(4)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        co.close()
+        for j in range(4):
+            assert same_winner(out[j][0], sweep.argmin_table(
+                parts[j], B200, calibration=named.cal,
+                engine=fresh_engine()))
+        assert co.stats["fused_evaluations"] == 1
