@@ -22,7 +22,11 @@ code regression fails all of them.  Fails (exit 1) on:
     boolean field and every dict-of-booleans field in a bench row is a
     correctness flag (bit-identity of fused/streamed/sharded/served
     reductions, cached-replay-beats-cold, O(chunk) streamed peak memory,
-    served answers matching in-process answers).
+    served answers matching in-process answers, and availability under
+    the serve bench's seeded chaos barrage —
+    ``serve_chaos_all_completed`` / ``serve_chaos_all_correct`` assert
+    every request survives injected stalls, truncations, bit flips and
+    severed connections via typed-error retries, bit-identically).
 
 Excluded from ratio gating: ratios against frozen cross-run constants
 (``speedup_table_vs_pr1_batch`` divides by a historical constant — an

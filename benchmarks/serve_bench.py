@@ -20,6 +20,14 @@ the saved compute dominates loopback jitter — see ``replay_table``) and
 bit-identity flags against the in-process ``argmin_table`` /
 ``argmin_stream`` answers.
 
+An **availability-under-chaos** section replays a fixed request stream
+through ``repro.serve.chaos.ChaosProxy`` with a seeded fault barrage
+(one stall + a mixed delay/truncate/bitflip/sever schedule): every
+request must complete via the client's retry machinery and come back
+bit-identical to the in-process answer.  Emitted as
+``serve_chaos_all_completed`` / ``serve_chaos_all_correct`` — booleans,
+so ``check_regression`` auto-gates them as correctness flags.
+
 Timings are interleaved round-robin and the per-path minima are kept
 (same rationale as sweep_bench: shared hosts drift on a seconds scale,
 within-run ratios stay comparable).  Emits BENCH_serve.json; gated by
@@ -47,6 +55,10 @@ N_SINGLE = 64          #: sequential single-row requests per round
 COALESCE_THREADS = 8   #: concurrent clients in the coalesced pass
 COALESCE_REQS = 8      #: small-table requests per concurrent client
 ROUNDS = 5
+
+CHAOS_SEED = 20260807  #: fixed seed -> the fault barrage is reproducible
+CHAOS_FAULTS = 12      #: seeded faults after the leading stall
+CHAOS_REQS = 16        #: requests replayed through the chaos proxy
 
 TILES = [TileConfig(bm, bn, bk) for bm in (64, 128, 256, 512)
          for bn in (64, 128, 256, 512) for bk in (16, 32, 64, 128)]
@@ -96,6 +108,56 @@ def _same_winner(a, b) -> bool:
     return bool(a.index == b.index and a.total == b.total
                 and a.name == b.name and a.breakdown == b.breakdown
                 and a.breakdown.detail == b.breakdown.detail)
+
+
+def _run_chaos(host: str, port: int, parts, hw) -> dict:
+    """Availability under a seeded fault barrage (see module docstring).
+
+    The schedule is finite and the proxy serves ``pass`` once it is
+    exhausted, so with ``max_retries`` sized past the schedule every
+    request is guaranteed to land eventually — the gate is that each
+    one actually does, bit-identically, with no hangs (the stall fault
+    is bounded by the client's short read timeout)."""
+    from repro.serve.chaos import ChaosProxy, FaultSpec, seeded_schedule
+
+    schedule = [FaultSpec("stall")] + seeded_schedule(CHAOS_SEED,
+                                                     CHAOS_FAULTS)
+    refs = [sweep.argmin_table(p, hw,
+                               engine=sweep.SweepEngine(use_cache=False))
+            for p in parts]
+    completed = correct = 0
+    t0 = time.perf_counter()
+    with ChaosProxy(host, port, schedule) as proxy:
+        c = PredictionClient(proxy.address[0], proxy.address[1],
+                             timeout=2.0, connect_timeout=2.0,
+                             max_retries=4 + len(schedule),
+                             backoff_base_s=0.01, backoff_cap_s=0.2)
+        try:
+            for part, ref in zip(parts, refs):
+                try:
+                    win = c.argmin(part, "b200", coalesce=False)
+                except Exception:
+                    continue
+                finally:
+                    # Keep-alive would let one clean connection absorb
+                    # the whole stream; a fresh connect per request
+                    # marches through the fault schedule instead.
+                    c.close()
+                completed += 1
+                correct += _same_winner(win, ref)
+        finally:
+            c.close()
+        faults = proxy.faults_injected()
+    elapsed = time.perf_counter() - t0
+    nreq = len(parts)
+    return {
+        "serve_chaos_requests": nreq,
+        "serve_chaos_faults_injected": int(faults),
+        "serve_chaos_elapsed_s": elapsed,
+        "serve_chaos_completed_fraction": completed / nreq,
+        "serve_chaos_all_completed": bool(completed == nreq),
+        "serve_chaos_all_correct": bool(correct == nreq),
+    }
 
 
 def run_bench() -> dict:
@@ -190,6 +252,8 @@ def run_bench() -> dict:
         for c in clients:
             c.close()
 
+        chaos = _run_chaos(host, port, small_parts[:CHAOS_REQS], hw)
+
         stats = client.cache_stats()
         single_cfg_s = N_SINGLE / best["single"]
         batched_cfg_s = n / best["batched"]
@@ -226,6 +290,7 @@ def run_bench() -> dict:
                                             <= best["cold"]),
             "serve_coalesced_requests_fused": int(
                 stats.get("coalescer_coalesced_requests", 0)),
+            **chaos,
         }
     finally:
         client.close()
@@ -263,13 +328,19 @@ def main() -> None:
     print(f"bit-identical: batched={row['serve_batched_bit_identical']} "
           f"coalesced={row['serve_coalesced_bit_identical']} "
           f"stream={row['serve_stream_bit_identical']}")
+    print(f"chaos barrage   : {row['serve_chaos_requests']} reqs, "
+          f"{row['serve_chaos_faults_injected']} faults injected, "
+          f"{row['serve_chaos_completed_fraction'] * 100:.0f}% completed "
+          f"in {row['serve_chaos_elapsed_s']:.2f} s, "
+          f"all_correct={row['serve_chaos_all_correct']}")
     ok = (row["speedup_serve_batched_vs_single"] >= 3
           and row["serve_batched_bit_identical"]
           and row["serve_coalesced_bit_identical"]
           and row["serve_stream_bit_identical"]
-          and row["serve_replay_not_slower"])
-    print("PASS (>=3x batched-vs-single, bit-identical, replay<=cold)"
-          if ok else "FAIL")
+          and row["serve_replay_not_slower"]
+          and row["serve_chaos_all_correct"])
+    print("PASS (>=3x batched-vs-single, bit-identical, replay<=cold, "
+          "chaos-correct)" if ok else "FAIL")
 
 
 if __name__ == "__main__":

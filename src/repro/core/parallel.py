@@ -35,7 +35,12 @@ clean and single-threaded, so its forks are safe.  When process pools are unusab
 function in-process — NumPy releases the GIL on the large column kernels,
 so threads still overlap.  Worker exceptions propagate to the caller
 (``future.result()`` re-raises; a hard worker death surfaces as
-``BrokenProcessPool``) — never a silent hang.  Forked workers start with
+``BrokenProcessPool``) — never a silent hang.  With a
+``straggler_timeout_s``, a worker past its deadline (or a dead pool) gets
+its shard re-dispatched once in the parent — safe because shard pricing
+is a pure function and chunk reductions are idempotent and bit-identical
+— and ``StragglerError`` surfaces only when both attempts die.  Forked
+workers start with
 cleared engine caches (``sweep._reinit_after_fork_in_child``) so parent
 cache state is never trusted or mutated through copy-on-write.
 """
@@ -45,7 +50,9 @@ import math
 import multiprocessing
 import sys
 import threading
-from concurrent.futures import ProcessPoolExecutor, ThreadPoolExecutor
+from concurrent.futures import BrokenExecutor, ProcessPoolExecutor, \
+    ThreadPoolExecutor
+from concurrent.futures import TimeoutError as _FutTimeout
 from typing import Callable, List, Optional, Sequence, Tuple
 
 import numpy as np
@@ -54,8 +61,21 @@ from . import sweep as sweep_mod
 from . import workload as workload_mod
 from .hardware import HardwareParams
 
-__all__ = ["SharedTable", "WorkerPool", "map_jobs", "processes_available",
-           "reduce_sharded", "reduce_sharded_multi", "resolve_jobs"]
+__all__ = ["SharedTable", "StragglerError", "WorkerPool", "map_jobs",
+           "processes_available", "reduce_sharded", "reduce_sharded_multi",
+           "resolve_jobs"]
+
+
+class StragglerError(RuntimeError):
+    """A shard failed on its worker AND on the in-parent re-dispatch.
+
+    One straggler (a worker past ``straggler_timeout_s``) or a dead pool
+    (``BrokenProcessPool``) is recovered transparently: the shard is
+    re-run once in the parent — safe because ``_price_shard`` is pure and
+    chunk reductions are idempotent and bit-identical, so a duplicated
+    evaluation can only produce the same answer.  Only when that second
+    attempt also dies does this error surface, naming the shard and both
+    causes."""
 
 
 def resolve_jobs(jobs=None) -> int:
@@ -227,8 +247,16 @@ class WorkerPool:
     (or use as a context manager) when done.
     """
 
-    def __init__(self, jobs=None, use_threads: Optional[bool] = None):
+    def __init__(self, jobs=None, use_threads: Optional[bool] = None,
+                 straggler_timeout_s: Optional[float] = None):
         self.njobs = resolve_jobs(jobs)
+        #: default per-shard deadline for reductions run through this
+        #: pool: a worker past it is treated as a straggler and its shard
+        #: re-dispatched once (see ``reduce_sharded_multi``); ``None``
+        #: waits forever (the historical behavior)
+        self.straggler_timeout_s = straggler_timeout_s
+        self._use_threads = use_threads
+        self._lock = threading.Lock()
         # never fork: ProcessPoolExecutor starts workers lazily at first
         # submit, so a fork approved while single-threaded here could
         # execute after the caller starts helper threads (the held-mutex
@@ -238,6 +266,25 @@ class WorkerPool:
         self.executor, self.is_processes = _make_pool(
             self.njobs, use_threads, allow_fork=False)
         self._closed = False
+
+    def recover(self, broken=None) -> None:
+        """Replace a broken executor with a fresh one so the *next*
+        reduction gets real workers again (a ``BrokenProcessPool`` poisons
+        every future submitted to that executor forever).  ``broken``
+        guards against concurrent recoveries rebuilding twice: the swap
+        only happens if the live executor is still the one that broke."""
+        with self._lock:
+            if self._closed:
+                return
+            if broken is not None and self.executor is not broken:
+                return
+            old = self.executor
+            self.executor, self.is_processes = _make_pool(
+                self.njobs, self._use_threads, allow_fork=False)
+        try:
+            old.shutdown(wait=False, cancel_futures=True)
+        except Exception:                   # noqa: BLE001 — best effort
+            pass
 
     def close(self) -> None:
         if not self._closed:
@@ -266,12 +313,22 @@ def _open_source(payload):
     return payload[1], []
 
 
+#: test seam for fault injection: when set, called as ``hook(lo, hi)`` at
+#: the top of every shard evaluation.  Lets the fault-injection tests
+#: make a specific shard hang or die inside a *threads* pool (process
+#: workers re-import this module, so a monkeypatched hook never reaches
+#: them — which is exactly why the straggler path needs the seam).
+_SHARD_FAULT_HOOK: Optional[Callable[[int, int], None]] = None
+
+
 def _price_shard(payload, hw: HardwareParams, passes: Sequence[Tuple],
                  lo: int, hi: int, offset_base: int,
                  chunk_size: int) -> List[Sequence]:
     """Worker body: stream rows [lo, hi) of the opened source through a
     private engine, once per (factories, model, calibration) pass, so one
     pool prices every route a caller needs (e.g. model + roofline)."""
+    if _SHARD_FAULT_HOOK is not None:
+        _SHARD_FAULT_HOOK(lo, hi)
     spec, shms = _open_source(payload)
     try:
         out = []
@@ -304,31 +361,72 @@ def _shard_bounds(n: int, njobs: int, chunk_size: int) -> List[Tuple[int,
     return bounds
 
 
+def _shard_result(fut, task: Tuple, timeout_s: Optional[float],
+                  pool: Optional["WorkerPool"], executor):
+    """One shard's partials, with straggler/dead-worker recovery.
+
+    ``timeout_s=None`` waits forever (historical behavior).  Otherwise a
+    worker past the deadline — or a pool that died under it
+    (``BrokenProcessPool``) — triggers ONE re-dispatch of the shard,
+    executed synchronously in the parent: ``_price_shard`` is a pure
+    function of its arguments and chunk reductions are idempotent and
+    bit-identical, so pricing the shard twice can only yield the same
+    partials (the abandoned worker's result, if it ever lands, is simply
+    dropped with its future).  Genuine worker exceptions (a bad model
+    name, a ValueError from the backend) propagate unchanged — retrying
+    deterministic errors just doubles the cost of raising them.
+    """
+    if timeout_s is None:
+        return fut.result()
+    try:
+        return fut.result(timeout=timeout_s)
+    except (_FutTimeout, BrokenExecutor) as first:
+        fut.cancel()
+        if pool is not None and isinstance(first, BrokenExecutor):
+            pool.recover(broken=executor)
+        payload, hw, passes, lo, hi, base, size = task
+        try:
+            return _price_shard(payload, hw, passes, lo, hi, base, size)
+        except BaseException as second:
+            raise StragglerError(
+                f"shard rows [{base + lo}, {base + hi}) failed twice: "
+                f"worker attempt: {type(first).__name__}: {first}; "
+                f"in-parent re-dispatch: {type(second).__name__}: "
+                f"{second}") from second
+
+
 def reduce_sharded(source, hw: HardwareParams,
                    factories: Sequence[Callable[[], object]], *,
                    jobs=None, chunk_size: Optional[int] = None,
                    model: Optional[str] = None,
                    calibration=None,
                    use_threads: Optional[bool] = None,
-                   pool: Optional[WorkerPool] = None) -> Sequence:
+                   pool: Optional[WorkerPool] = None,
+                   straggler_timeout_s: Optional[float] = None) -> Sequence:
     """Run the streaming reducers sharded across a worker pool.
 
     Returns the merged reducers (same shapes ``sweep.reduce_stream``
     returns); results are bit-identical to a serial reduction.  A worker
     exception (or a hard worker death) propagates to the caller.
     ``pool`` reuses a live ``WorkerPool`` instead of starting (and tearing
-    down) an executor for this call.
+    down) an executor for this call.  ``straggler_timeout_s`` bounds each
+    shard's wall clock: a straggling or dead worker gets its shard
+    re-dispatched once in the parent (bit-identical — see
+    ``_shard_result``), and ``StragglerError`` surfaces only when both
+    attempts die.
     """
     return reduce_sharded_multi(
         source, hw, [(tuple(factories), model, calibration)], jobs=jobs,
-        chunk_size=chunk_size, use_threads=use_threads, pool=pool)[0]
+        chunk_size=chunk_size, use_threads=use_threads, pool=pool,
+        straggler_timeout_s=straggler_timeout_s)[0]
 
 
 def reduce_sharded_multi(source, hw: HardwareParams,
                          passes: Sequence[Tuple], *,
                          jobs=None, chunk_size: Optional[int] = None,
                          use_threads: Optional[bool] = None,
-                         pool: Optional[WorkerPool] = None
+                         pool: Optional[WorkerPool] = None,
+                         straggler_timeout_s: Optional[float] = None
                          ) -> List[Sequence]:
     """``reduce_sharded`` for several (factories, model, calibration)
     passes over the same source: one pool (and one shared-memory export)
@@ -338,6 +436,8 @@ def reduce_sharded_multi(source, hw: HardwareParams,
     spec = sweep_mod.as_spec(source)
     n = len(spec)
     size = int(chunk_size or workload_mod.DEFAULT_CHUNK_ROWS)
+    if straggler_timeout_s is None and pool is not None:
+        straggler_timeout_s = pool.straggler_timeout_s
     if pool is not None and jobs is None:
         jobs = pool.njobs
     njobs = min(resolve_jobs(jobs), max(1, math.ceil(n / size)))
@@ -375,7 +475,10 @@ def reduce_sharded_multi(source, hw: HardwareParams,
         futs = [executor.submit(_price_shard, payload, hw, passes,
                                 lo, hi, base, size)
                 for payload, lo, hi, base in tasks]
-        partials = [f.result() for f in futs]
+        partials = [
+            _shard_result(f, (payload, hw, passes, lo, hi, base, size),
+                          straggler_timeout_s, pool, executor)
+            for f, (payload, lo, hi, base) in zip(futs, tasks)]
     finally:
         if owned:
             _shutdown(executor)

@@ -17,13 +17,26 @@ This package opens the repo's first cross-process scenario:
     for the same hardware fuse into one columnar evaluation.
 
 ``repro.serve.client``
-    Blocking client speaking the same codec over ``http.client``.
+    Blocking client speaking the same codec over ``http.client``, with
+    retries + backoff, split connect/read timeouts, per-call deadlines
+    and a circuit breaker.
+
+``repro.serve.errors``
+    The typed fault vocabulary (``Unauthorized``, ``RateLimited``,
+    ``ServerOverloaded``, ``DeadlineExceeded``, ``CircuitOpenError``)
+    shared by both sides, plus the status-code contract.
+
+``repro.serve.chaos``
+    Deterministic fault-injection TCP proxy (delay/stall/truncate/
+    bitflip/sever on a seeded schedule) used by the fault-tolerance
+    tests and the availability-under-chaos bench section.
 
 See ``README.md`` in this directory for the wire format, the coalescing
-contract, and when to hit the server vs calling ``SweepEngine``
-in-process.
+contract, the robustness/status-code contract, and when to hit the
+server vs calling ``SweepEngine`` in-process.
 """
-from .codec import (WIRE_VERSION, WireFormatError, decode_calibrate_request,
+from .codec import (WIRE_VERSION, RemoteError, WireFormatError,
+                    decode_calibrate_request,
                     decode_calibration, decode_hardware, decode_json,
                     decode_request, decode_spec, decode_suite, decode_table,
                     decode_totals, decode_winners,
@@ -31,6 +44,8 @@ from .codec import (WIRE_VERSION, WireFormatError, decode_calibrate_request,
                     encode_error, encode_hardware, encode_json,
                     encode_request, encode_spec, encode_suite, encode_table,
                     encode_totals, encode_winners, raise_if_error)
+from .errors import (CircuitOpenError, DeadlineExceeded, RateLimited,
+                     ServeFault, ServerOverloaded, Unauthorized)
 
 
 def __getattr__(name):
@@ -42,16 +57,21 @@ def __getattr__(name):
     if name == "PredictionServer":
         from .server import PredictionServer
         return PredictionServer
+    if name in ("ChaosProxy", "FaultSpec", "seeded_schedule"):
+        from . import chaos
+        return getattr(chaos, name)
     raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
 
 
 __all__ = [
-    "WIRE_VERSION", "WireFormatError", "PredictionClient",
-    "PredictionServer", "decode_calibrate_request", "decode_calibration",
+    "WIRE_VERSION", "ChaosProxy", "CircuitOpenError", "DeadlineExceeded",
+    "FaultSpec", "PredictionClient", "PredictionServer", "RateLimited",
+    "RemoteError", "ServeFault", "ServerOverloaded", "Unauthorized",
+    "WireFormatError", "decode_calibrate_request", "decode_calibration",
     "decode_hardware", "decode_json", "decode_request", "decode_spec",
     "decode_suite", "decode_table", "decode_totals", "decode_winners",
     "encode_calibrate_request", "encode_calibration", "encode_error",
     "encode_hardware", "encode_json", "encode_request", "encode_spec",
     "encode_suite", "encode_table", "encode_totals", "encode_winners",
-    "raise_if_error",
+    "raise_if_error", "seeded_schedule",
 ]

@@ -12,27 +12,109 @@ to calling ``sweep.argmin_table``/... locally (the acceptance criterion
 tests/test_serve_server.py pins).  Pass a built ``WorkloadTable`` for
 sweeps you hold, or a lazy ``LatticeSpec`` to let the server stream a
 lattice far bigger than the wire could carry materialized.
+
+Fault tolerance (the full contract lives in ``serve/README.md``):
+
+* **Split timeouts** — ``connect_timeout`` (default 5 s) bounds the TCP
+  handshake independently of ``timeout`` (the read budget); a dead host
+  no longer costs a full read timeout just to fail to connect.
+* **Retries with backoff** — transport faults (reset, stale keep-alive,
+  truncated frame), corrupt replies (the codec's CRC32 catches bit
+  flips in transit) and retryable statuses (429/503) are re-sent up to
+  ``max_retries`` times with exponential backoff + jitter, honoring the
+  server's ``Retry-After`` hint.  Safe because every endpoint is
+  idempotent (the server's documented contract).
+* **Deadlines** — ``deadline_s=...`` on any call bounds the *whole*
+  call, connect + reads + every retry; the budget is computed once at
+  entry, so retries and reconnects shrink it rather than reset it.  The
+  remaining budget travels in the ``X-Repro-Deadline-S`` header so the
+  server can shed work the caller has already abandoned.
+* **Circuit breaker** — ``breaker_threshold`` consecutive connection
+  failures open the circuit: further calls fail fast with
+  ``CircuitOpenError`` instead of each paying a connect timeout, until
+  a ``breaker_cooldown_s`` half-open probe succeeds.
+* **Auth** — ``auth_token`` is stamped on every request
+  (``X-Auth-Token``) for servers gating their mutating endpoints.
 """
 from __future__ import annotations
 
 import argparse
 import http.client
+import random
 import threading
+import time
 from typing import Optional, Sequence, Tuple
 
 import numpy as np
 
-from . import codec
+from . import codec, errors
+
+
+class _CircuitBreaker:
+    """Consecutive-connect-failure breaker with half-open probing."""
+
+    def __init__(self, threshold: int, cooldown_s: float):
+        self.threshold = int(threshold)
+        self.cooldown_s = float(cooldown_s)
+        self._fails = 0
+        self._opened_at: Optional[float] = None
+        self._probing = False
+        self._lock = threading.Lock()
+
+    def admit(self) -> None:
+        """Raise ``CircuitOpenError`` while open; after the cooldown let
+        exactly one caller through as the half-open probe."""
+        if self.threshold <= 0:
+            return
+        with self._lock:
+            if self._opened_at is None:
+                return
+            if (time.monotonic() - self._opened_at >= self.cooldown_s
+                    and not self._probing):
+                self._probing = True
+                return
+            raise errors.CircuitOpenError(
+                f"circuit open after {self._fails} consecutive "
+                f"connection failures — failing fast (half-open probe "
+                f"every {self.cooldown_s:g}s)")
+
+    def success(self) -> None:
+        with self._lock:
+            self._fails = 0
+            self._opened_at = None
+            self._probing = False
+
+    def failure(self) -> None:
+        with self._lock:
+            self._fails += 1
+            self._probing = False
+            if self._fails >= self.threshold > 0:
+                self._opened_at = time.monotonic()
 
 
 class PredictionClient:
     """Client for one server address."""
 
     def __init__(self, host: str = "127.0.0.1", port: int = 8707, *,
-                 timeout: float = 120.0):
+                 timeout: float = 120.0,
+                 connect_timeout: float = 5.0,
+                 max_retries: int = 3,
+                 backoff_base_s: float = 0.05,
+                 backoff_cap_s: float = 2.0,
+                 breaker_threshold: int = 3,
+                 breaker_cooldown_s: float = 1.0,
+                 auth_token: Optional[str] = None):
         self.host = host
         self.port = port
         self.timeout = timeout
+        self.connect_timeout = connect_timeout
+        self.max_retries = int(max_retries)
+        self.backoff_base_s = float(backoff_base_s)
+        self.backoff_cap_s = float(backoff_cap_s)
+        self.auth_token = auth_token
+        self._breaker = _CircuitBreaker(breaker_threshold,
+                                        breaker_cooldown_s)
+        self._rng = random.Random()
         self._local = threading.local()
         self._conns: set = set()      # every thread's conn, for close()
         self._conns_lock = threading.Lock()
@@ -41,8 +123,10 @@ class PredictionClient:
     def _conn(self) -> http.client.HTTPConnection:
         conn = getattr(self._local, "conn", None)
         if conn is None:
-            conn = http.client.HTTPConnection(self.host, self.port,
-                                              timeout=self.timeout)
+            # the constructor timeout governs connect(); reads get their
+            # own budget via sock.settimeout() once connected
+            conn = http.client.HTTPConnection(
+                self.host, self.port, timeout=self.connect_timeout)
             self._local.conn = conn
         with self._conns_lock:
             # re-registering on every request keeps the set accurate even
@@ -62,33 +146,150 @@ class PredictionClient:
             finally:
                 self._local.conn = None
 
-    def _request(self, method: str, path: str,
-                 body: Optional[bytes] = None) -> bytes:
-        headers = {"Content-Type": "application/x-repro-wire"} \
-            if body is not None else {}
-        for attempt in (0, 1):
-            conn = self._conn()
+    def _once(self, method: str, path: str, body: Optional[bytes],
+              headers: dict, remaining: Optional[float]
+              ) -> Tuple[int, Optional[str], bytes]:
+        """One attempt: connect (breaker-gated) if needed, send, read.
+        Returns ``(status, retry_after_header, body_bytes)``."""
+        conn = self._conn()
+        if conn.sock is None:
+            self._breaker.admit()
+            connect_t = self.connect_timeout
+            if remaining is not None:
+                connect_t = min(connect_t, max(1e-3, remaining))
+            conn.timeout = connect_t
             try:
-                conn.request(method, path, body=body, headers=headers)
-                resp = conn.getresponse()
-                data = resp.read()
-                break
-            except (http.client.HTTPException, ConnectionError, OSError):
-                # Stale keep-alive socket: rebuild once, then give up.
-                # The failure usually surfaces at getresponse(), after the
-                # request bytes went out, so the retry can re-execute a
-                # POST the server already ran — every endpoint must
-                # therefore stay idempotent (all current ones are,
-                # including clear_cache).
+                conn.connect()
+            except OSError:
+                self._breaker.failure()
+                raise
+            self._breaker.success()
+        read_t = self.timeout
+        if remaining is not None:
+            read_t = min(read_t, max(1e-3, remaining))
+        conn.sock.settimeout(read_t)
+        conn.request(method, path, body=body, headers=headers)
+        resp = conn.getresponse()
+        data = resp.read()
+        retry_after = resp.getheader("Retry-After")
+        if resp.will_close:
+            # the server asked us to drop the socket (Connection: close);
+            # http.client already closed the conn — forget it so the next
+            # attempt builds a fresh one instead of poking a dead object
+            self._discard_conn()
+        return resp.status, retry_after, data
+
+    def _request(self, method: str, path: str,
+                 body: Optional[bytes] = None, *,
+                 deadline_s: Optional[float] = None) -> bytes:
+        """Send with retries/backoff/deadline; return the verified reply.
+
+        The deadline is computed ONCE here — reconnects, retries and
+        ``close()`` shrink the remaining budget, never reset it."""
+        base_headers = {}
+        if body is not None:
+            base_headers["Content-Type"] = "application/x-repro-wire"
+        if self.auth_token is not None:
+            base_headers[errors.AUTH_HEADER] = self.auth_token
+        deadline = None if deadline_s is None \
+            else time.monotonic() + float(deadline_s)
+        last_exc: Optional[BaseException] = None
+        attempt = 0
+        while True:
+            remaining = None
+            if deadline is not None:
+                remaining = deadline - time.monotonic()
+                if remaining <= 0:
+                    raise errors.DeadlineExceeded(
+                        f"deadline_s={deadline_s:g} spent after "
+                        f"{attempt} attempt(s) on {method} {path}"
+                    ) from last_exc
+            headers = dict(base_headers)
+            if remaining is not None:
+                headers[errors.DEADLINE_HEADER] = f"{remaining:.6f}"
+            try:
+                status, retry_after, data = self._once(
+                    method, path, body, headers, remaining)
+            except (http.client.HTTPException, ConnectionError,
+                    OSError) as e:
+                # Severed/stale socket or truncated frame.  The failure
+                # usually surfaces at getresponse(), after the request
+                # bytes went out, so a retry can re-execute a POST the
+                # server already ran — every endpoint must therefore
+                # stay idempotent (the server's documented contract).
                 self._discard_conn()
-                if attempt:
-                    raise
-        codec.raise_if_error(data)
-        return data
+                if deadline is not None and time.monotonic() >= deadline:
+                    # the read was already capped to the remaining
+                    # budget, so a timeout here IS the deadline expiring
+                    raise errors.DeadlineExceeded(
+                        f"deadline_s={deadline_s:g} expired during "
+                        f"attempt {attempt + 1} ({type(e).__name__})"
+                    ) from e
+                last_exc = e
+                attempt = self._backoff_or_raise(attempt, e, None,
+                                                 deadline)
+                continue
+            if status == 401:
+                raise errors.Unauthorized(self._remote_message(data))
+            if status in (429, 503):
+                ra = _parse_retry_after(retry_after)
+                cls = errors.RateLimited if status == 429 \
+                    else errors.ServerOverloaded
+                e = cls(self._remote_message(data),
+                        retry_after_s=0.05 if ra is None else ra)
+                last_exc = e
+                attempt = self._backoff_or_raise(attempt, e, ra, deadline)
+                continue
+            try:
+                codec.raise_if_error(data)    # CRC-verifies the envelope
+            except codec.WireFormatError as e:
+                # reply corrupted in transit (bit flip caught by the
+                # codec checksum, or a garbled envelope): the request
+                # itself succeeded server-side, so re-asking is safe
+                self._discard_conn()
+                last_exc = e
+                attempt = self._backoff_or_raise(attempt, e, None,
+                                                 deadline)
+                continue
+            return data
+
+    def _backoff_or_raise(self, attempt: int, exc: BaseException,
+                          retry_after: Optional[float],
+                          deadline: Optional[float]) -> int:
+        """Sleep the backoff for ``attempt`` and return ``attempt + 1``,
+        or raise ``exc`` when retries/deadline budget are exhausted."""
+        if attempt >= self.max_retries:
+            raise exc
+        delay = min(self.backoff_cap_s,
+                    self.backoff_base_s * (2.0 ** attempt))
+        delay *= 0.5 + self._rng.random() * 0.5       # full-ish jitter
+        if retry_after is not None:
+            delay = max(delay, retry_after)
+        if deadline is not None:
+            remaining = deadline - time.monotonic()
+            if remaining <= delay:
+                raise errors.DeadlineExceeded(
+                    f"deadline would expire during the {delay:.3f}s "
+                    f"backoff before retry {attempt + 1}") from exc
+        time.sleep(delay)
+        return attempt + 1
+
+    @staticmethod
+    def _remote_message(data: bytes) -> str:
+        """Best-effort text of an ERROR reply body."""
+        try:
+            codec.raise_if_error(data)
+        except codec.RemoteError as e:
+            return str(e)
+        except codec.WireFormatError:
+            pass
+        return "(no server detail)"
 
     def close(self) -> None:
         """Close every thread's persistent connection (the per-thread
-        sockets a shared client accumulates), not just the caller's."""
+        sockets a shared client accumulates), not just the caller's.
+        Does not touch in-flight call deadlines — those were computed at
+        call entry and keep counting."""
         self._discard_conn()
         with self._conns_lock:
             conns, self._conns = list(self._conns), set()
@@ -105,38 +306,46 @@ class PredictionClient:
         self.close()
 
     # ------------------------------------------------------------- queries
-    def health(self) -> dict:
-        return codec.decode_json(self._request("GET", "/v1/health"))
-
-    def cache_stats(self) -> dict:
-        return codec.decode_json(self._request("GET", "/v1/cache_stats"))
-
-    def clear_cache(self) -> dict:
+    def health(self, *, deadline_s: Optional[float] = None) -> dict:
         return codec.decode_json(
-            self._request("POST", "/v1/clear_cache", b""))
+            self._request("GET", "/v1/health", deadline_s=deadline_s))
 
-    def _sweep(self, op: str, source, hw: str, **kw) -> bytes:
+    def cache_stats(self, *, deadline_s: Optional[float] = None) -> dict:
+        return codec.decode_json(
+            self._request("GET", "/v1/cache_stats",
+                          deadline_s=deadline_s))
+
+    def clear_cache(self, *, deadline_s: Optional[float] = None) -> dict:
+        return codec.decode_json(
+            self._request("POST", "/v1/clear_cache", b"",
+                          deadline_s=deadline_s))
+
+    def _sweep(self, op: str, source, hw: str,
+               deadline_s: Optional[float], **kw) -> bytes:
         body = codec.encode_request(op, source, hw=hw, **kw)
-        return self._request("POST", f"/v1/{op}", body)
+        return self._request("POST", f"/v1/{op}", body,
+                             deadline_s=deadline_s)
 
     def predict_totals(self, source, hw: str, *,
                        model: Optional[str] = None,
                        chunk_size: Optional[int] = None, jobs=None,
                        coalesce: bool = True,
-                       calibration: Optional[str] = None) -> np.ndarray:
+                       calibration: Optional[str] = None,
+                       deadline_s: Optional[float] = None) -> np.ndarray:
         """Every row's total seconds (the ``predict_table(...).totals``
         column, served).  ``calibration`` names a server-side calibration
         (see :meth:`calibrate`) whose multipliers scale the totals."""
-        data = self._sweep("predict_table", source, hw, model=model,
-                           chunk_size=chunk_size, jobs=jobs,
+        data = self._sweep("predict_table", source, hw, deadline_s,
+                           model=model, chunk_size=chunk_size, jobs=jobs,
                            coalesce=coalesce, calibration=calibration)
         return codec.decode_totals(data)
 
     def argmin(self, source, hw: str, *, model: Optional[str] = None,
                chunk_size: Optional[int] = None, jobs=None,
-               coalesce: bool = True, calibration: Optional[str] = None):
+               coalesce: bool = True, calibration: Optional[str] = None,
+               deadline_s: Optional[float] = None):
         """The cheapest configuration (a ``SweepWinner``)."""
-        data = self._sweep("argmin", source, hw, model=model,
+        data = self._sweep("argmin", source, hw, deadline_s, model=model,
                            chunk_size=chunk_size, jobs=jobs,
                            coalesce=coalesce, calibration=calibration)
         return codec.decode_winners(data)[0]
@@ -144,9 +353,10 @@ class PredictionClient:
     def topk(self, source, hw: str, k: int, *,
              model: Optional[str] = None,
              chunk_size: Optional[int] = None, jobs=None,
-             coalesce: bool = True, calibration: Optional[str] = None):
-        data = self._sweep("topk", source, hw, model=model, k=int(k),
-                           chunk_size=chunk_size, jobs=jobs,
+             coalesce: bool = True, calibration: Optional[str] = None,
+             deadline_s: Optional[float] = None):
+        data = self._sweep("topk", source, hw, deadline_s, model=model,
+                           k=int(k), chunk_size=chunk_size, jobs=jobs,
                            coalesce=coalesce, calibration=calibration)
         return codec.decode_winners(data)
 
@@ -154,39 +364,57 @@ class PredictionClient:
                objectives: Sequence[str] = ("compute", "memory"),
                model: Optional[str] = None,
                chunk_size: Optional[int] = None, jobs=None,
-               coalesce: bool = True, calibration: Optional[str] = None):
-        data = self._sweep("pareto", source, hw, model=model,
+               coalesce: bool = True, calibration: Optional[str] = None,
+               deadline_s: Optional[float] = None):
+        data = self._sweep("pareto", source, hw, deadline_s, model=model,
                            objectives=tuple(objectives),
                            chunk_size=chunk_size, jobs=jobs,
                            coalesce=coalesce, calibration=calibration)
         return codec.decode_winners(data)
 
     # ------------------------------------------------- hardware library
-    def hardware_list(self) -> dict:
+    def hardware_list(self, *, deadline_s: Optional[float] = None) -> dict:
         """GET /v1/hardware: {name: summary} directory of the server's
         hardware library."""
-        return codec.decode_json(self._request("GET", "/v1/hardware"))
+        return codec.decode_json(
+            self._request("GET", "/v1/hardware", deadline_s=deadline_s))
 
-    def hardware_get(self, name: str):
+    def hardware_get(self, name: str, *,
+                     deadline_s: Optional[float] = None):
         """GET /v1/hardware/<name> -> ``hwlib.HardwareEntry`` (file-backed
         entries arrive with their provenance/units audit trail)."""
         return codec.decode_hardware(
-            self._request("GET", f"/v1/hardware/{name}"))
+            self._request("GET", f"/v1/hardware/{name}",
+                          deadline_s=deadline_s))
 
-    def hardware_register(self, entry, *, overwrite: bool = False) -> dict:
+    def hardware_register(self, entry, *, overwrite: bool = False,
+                          deadline_s: Optional[float] = None) -> dict:
         """POST /v1/hardware: register a ``HardwareParams`` or
         ``hwlib.HardwareEntry`` server-side.  Collides (HTTP 400) on a
         taken name with different parameters unless ``overwrite``;
         re-posting the identical payload is a no-op success."""
         path = "/v1/hardware?overwrite=1" if overwrite else "/v1/hardware"
         return codec.decode_json(
-            self._request("POST", path, codec.encode_hardware(entry)))
+            self._request("POST", path, codec.encode_hardware(entry),
+                          deadline_s=deadline_s))
+
+    def hardware_delete(self, name: str, *,
+                        deadline_s: Optional[float] = None) -> dict:
+        """DELETE /v1/hardware/<name>: tombstone-delete a registry entry.
+
+        404 (``RemoteError``) on unknown names.  A *retried* DELETE may
+        see the 404 its own first attempt caused — treat 404-on-retry as
+        success if you need exactly-once semantics."""
+        return codec.decode_json(
+            self._request("DELETE", f"/v1/hardware/{name}",
+                          deadline_s=deadline_s))
 
     # ---------------------------------------------- calibration-as-data
     def calibrate(self, suite, hw: str, *, mode: str = "class",
                   holdout_fraction: float = 0.3, seed: int = 0,
                   model: Optional[str] = None,
-                  register_as: Optional[str] = None):
+                  register_as: Optional[str] = None,
+                  deadline_s: Optional[float] = None):
         """POST /v1/calibrate: upload a measured ``MeasuredSuite``, get
         back ``(Calibration, report)`` fitted against the *server's*
         predictions with train/holdout discipline (paper §IV-D).
@@ -198,7 +426,17 @@ class PredictionClient:
             suite, hw=hw, mode=mode, holdout_fraction=holdout_fraction,
             seed=seed, model=model, register_as=register_as)
         return codec.decode_calibration(
-            self._request("POST", "/v1/calibrate", body))
+            self._request("POST", "/v1/calibrate", body,
+                          deadline_s=deadline_s))
+
+
+def _parse_retry_after(value: Optional[str]) -> Optional[float]:
+    if value is None:
+        return None
+    try:
+        return max(0.0, float(value))
+    except ValueError:
+        return None
 
 
 def main(argv=None) -> None:

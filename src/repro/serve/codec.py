@@ -39,11 +39,20 @@ Malformed input (truncated buffers, bad magic, unsupported versions,
 out-of-range section offsets, wrong payload sizes) raises
 ``WireFormatError`` — never an IndexError or struct.error a server loop
 would have to treat as a crash.
+
+Integrity: every encoded message carries a ``csum`` section — the CRC32
+of all other section payloads in section-table order.  Decode verifies
+it when present, so a bit flip anywhere in the payload bytes (a float in
+a column, a digit in the meta JSON, a section offset that reframes the
+payload) surfaces as ``WireFormatError`` instead of a silently wrong
+prediction.  Messages *without* the section (older encoders, hand-built
+v1 payloads) still decode — the check is additive, like wire v2 itself.
 """
 from __future__ import annotations
 
 import json
 import struct
+import zlib
 from typing import Dict, List, Optional, Sequence, Tuple, Union
 
 import numpy as np
@@ -82,9 +91,29 @@ class WireFormatError(ValueError):
 # Envelope
 # ---------------------------------------------------------------------------
 
-def _pack(msg_type: int, sections: Sequence[Tuple[bytes, Buf]]) -> bytes:
+#: integrity section tag: CRC32 over every other section payload, in
+#: section-table order, as one LE u32
+_CSUM_TAG = b"csum"
+
+
+def _payload_crc(payloads: Sequence[Buf]) -> int:
+    crc = 0
+    for payload in payloads:
+        crc = zlib.crc32(payload, crc)
+    return crc
+
+
+def _pack(msg_type: int, sections: Sequence[Tuple[bytes, Buf]], *,
+          checksum: bool = True) -> bytes:
     """Assemble an envelope; each section payload lands 8-byte aligned so
-    float64/int64 decode views are aligned views of the message buffer."""
+    float64/int64 decode views are aligned views of the message buffer.
+    ``checksum`` stamps the ``csum`` integrity section (always on in
+    production; tests craft unstamped messages to drive the downstream
+    validation paths the checksum would otherwise shadow)."""
+    if checksum:
+        crc = _payload_crc([payload for _, payload in sections])
+        sections = list(sections) + [
+            (_CSUM_TAG, struct.pack("<I", crc))]
     count = len(sections)
     table_end = _HEADER.size + _SECTION.size * count
     parts: List[bytes] = []
@@ -126,6 +155,7 @@ def _unpack(data: Buf) -> Tuple[int, Dict[bytes, memoryview]]:
         raise WireFormatError(
             f"truncated section table: {len(mv)} bytes < {table_end}")
     sections: Dict[bytes, memoryview] = {}
+    crc = 0
     for i in range(count):
         tag, off, ln = _SECTION.unpack_from(
             mv, _HEADER.size + _SECTION.size * i)
@@ -133,7 +163,20 @@ def _unpack(data: Buf) -> Tuple[int, Dict[bytes, memoryview]]:
             raise WireFormatError(
                 f"section {bytes(tag)!r} spans [{off}, {off + ln}) outside "
                 f"payload [{table_end}, {len(mv)})")
-        sections[bytes(tag)] = mv[off:off + ln]
+        view = mv[off:off + ln]
+        sections[bytes(tag)] = view
+        if tag != _CSUM_TAG:
+            crc = zlib.crc32(view, crc)
+    stamped = sections.get(_CSUM_TAG)
+    if stamped is not None:
+        if len(stamped) != 4:
+            raise WireFormatError(
+                f"checksum section holds {len(stamped)} bytes, expected 4")
+        want = struct.unpack("<I", stamped)[0]
+        if crc != want:
+            raise WireFormatError(
+                f"payload checksum mismatch (crc32 {crc:#010x} != stamped "
+                f"{want:#010x}) — message corrupted in transit")
     return msg_type, sections
 
 

@@ -47,10 +47,26 @@ worker pool.
 Failures decode-side (bad magic, truncation, unknown hardware, wrong op)
 return HTTP 400 with an ERROR message body; unexpected server faults
 return 500.  The serving loop itself never dies on a bad request.
+
+Fault tolerance (the full status-code contract lives in ``README.md``
+and ``errors.py``): the coalescer queue is depth-bounded — past
+``max_queue_depth`` the server sheds load with 503 + ``Retry-After``
+instead of piling up handler threads; requests carrying a deadline
+budget (``X-Repro-Deadline-S``) are shed once the budget is spent; the
+mutating endpoints (``POST /v1/hardware``, ``DELETE /v1/hardware/<n>``,
+``POST /v1/calibrate``, ``POST /v1/clear_cache``) can be gated behind a
+shared-secret token (401) and a token-bucket rate limit (429); one
+poisoned request inside a fused batch fails alone with 400 while its
+batchmates answer normally; and SIGTERM triggers a graceful drain —
+stop accepting, 503 new work, finish in-flight batches, snapshot
+``--state-dir`` calibrations, reap the pool.
 """
 from __future__ import annotations
 
 import argparse
+import hmac
+import json
+import os
 import sys
 import threading
 import time
@@ -62,11 +78,20 @@ import numpy as np
 
 from ..core import hardware, sweep
 from ..core.workload import LatticeSpec, WorkloadTable
-from . import codec
+from . import codec, errors
 
 #: refuse request bodies beyond this (a 2^31-row table is a streamed
 #: lattice, not an upload)
 MAX_BODY_BYTES = 1 << 30
+
+#: coalescer admission bound: submissions beyond this many parked
+#: requests are shed with 503 + Retry-After (load shedding instead of an
+#: unbounded handler-thread pile-up)
+DEFAULT_MAX_QUEUE_DEPTH = 1024
+
+#: Retry-After hint (seconds) sent with drain/overload 503s
+SHED_RETRY_AFTER_S = 0.05
+DRAIN_RETRY_AFTER_S = 1.0
 
 #: extra seconds the coalescer holds a batch open for companions.  The
 #: default is 0: batching happens naturally — requests that arrive while
@@ -86,17 +111,47 @@ class _Pending:
     """One in-flight table request parked in the coalescer."""
 
     __slots__ = ("op", "table", "k", "objectives", "event", "result",
-                 "error")
+                 "error", "deadline")
 
     def __init__(self, op: str, table: WorkloadTable, k: Optional[int],
-                 objectives: Optional[Tuple[str, ...]]):
+                 objectives: Optional[Tuple[str, ...]],
+                 deadline: Optional[float] = None):
         self.op = op
         self.table = table
         self.k = k
         self.objectives = objectives
+        self.deadline = deadline          # time.monotonic() cutoff or None
         self.event = threading.Event()
         self.result = None
         self.error: Optional[BaseException] = None
+
+
+class TokenBucket:
+    """Thread-safe token bucket: ``rate_per_s`` refill, ``burst`` cap.
+
+    ``try_acquire()`` returns 0.0 on admit, else the seconds until a
+    token will exist (the 429 ``Retry-After`` hint)."""
+
+    def __init__(self, rate_per_s: float, burst: int):
+        if rate_per_s <= 0 or burst < 1:
+            raise ValueError(f"need rate > 0 and burst >= 1, got "
+                             f"rate={rate_per_s} burst={burst}")
+        self.rate = float(rate_per_s)
+        self.burst = float(burst)
+        self._tokens = float(burst)
+        self._stamp = time.monotonic()
+        self._lock = threading.Lock()
+
+    def try_acquire(self) -> float:
+        with self._lock:
+            now = time.monotonic()
+            self._tokens = min(self.burst,
+                               self._tokens + (now - self._stamp) * self.rate)
+            self._stamp = now
+            if self._tokens >= 1.0:
+                self._tokens -= 1.0
+                return 0.0
+            return (1.0 - self._tokens) / self.rate
 
 
 class _NamedCalibration:
@@ -122,15 +177,22 @@ class Coalescer:
 
     def __init__(self, engine: sweep.SweepEngine,
                  window_s: float = DEFAULT_COALESCE_WINDOW_S,
-                 max_fused_rows: int = MAX_FUSED_ROWS):
+                 max_fused_rows: int = MAX_FUSED_ROWS,
+                 max_queue_depth: int = DEFAULT_MAX_QUEUE_DEPTH):
         self.engine = engine
         self.window_s = window_s
         self.max_fused_rows = max_fused_rows
+        #: admission bound: submissions finding this many requests already
+        #: parked are shed with ``ServerOverloaded`` (-> 503) instead of
+        #: blocking another handler thread behind an unbounded queue
+        self.max_queue_depth = max_queue_depth
         self._q: deque = deque()
         self._cv = threading.Condition()
         self._closed = False
         self.stats = {"requests": 0, "batches": 0, "fused_evaluations": 0,
-                      "coalesced_requests": 0, "fused_rows": 0}
+                      "coalesced_requests": 0, "fused_rows": 0,
+                      "shed_overload": 0, "shed_deadline": 0,
+                      "isolated_failures": 0}
         self._thread = threading.Thread(target=self._loop, daemon=True,
                                         name="serve-coalescer")
         self._thread.start()
@@ -139,13 +201,21 @@ class Coalescer:
     def submit(self, op: str, table: WorkloadTable, hw, model: Optional[str],
                k: Optional[int] = None,
                objectives: Optional[Tuple[str, ...]] = None,
-               calibration: Optional[_NamedCalibration] = None):
-        req = _Pending(op, table, k, objectives)
+               calibration: Optional[_NamedCalibration] = None,
+               deadline: Optional[float] = None):
+        req = _Pending(op, table, k, objectives, deadline)
         group = (sweep.hardware_key(hw), model or sweep.default_route(hw),
                  calibration.name if calibration else None)
         with self._cv:
             if self._closed:
                 raise RuntimeError("coalescer is shut down")
+            if len(self._q) >= self.max_queue_depth:
+                self.stats["shed_overload"] += 1
+                raise errors.ServerOverloaded(
+                    f"coalescer queue at its depth bound "
+                    f"({self.max_queue_depth} requests parked) — load "
+                    f"shed, retry after backoff",
+                    retry_after_s=SHED_RETRY_AFTER_S)
             self._q.append((group, hw, model, calibration, req))
             self.stats["requests"] += 1
             self._cv.notify()
@@ -208,27 +278,43 @@ class Coalescer:
                    calibration: Optional[_NamedCalibration],
                    reqs: List[_Pending]) -> None:
         cal = calibration.cal if calibration else None
-        if len(reqs) == 1:
+        # shed requests whose deadline budget was spent while parked —
+        # evaluating them would be work the client has already abandoned
+        now = time.monotonic()
+        live = []
+        for r in reqs:
+            if r.deadline is not None and now >= r.deadline:
+                self.stats["shed_deadline"] += 1
+                r.error = errors.DeadlineExceeded(
+                    "request deadline expired while queued — result would "
+                    "arrive after the client stopped waiting")
+                r.event.set()
+            else:
+                live.append(r)
+        if not live:
+            return
+        if len(live) == 1:
             # the common serial case keeps the memoizing path: an identical
             # replayed sweep is one content-token hit
-            r = reqs[0]
-            try:
-                r.result = self._answer(
-                    self.engine.predict_table(r.table, hw, model=model,
-                                              calibration=cal),
-                    r, lo=0, hi=None)
-            except BaseException as e:       # noqa: BLE001
-                r.error = e
-            r.event.set()
+            self._run_solo(live[0], hw, model, cal)
             return
-        fused = WorkloadTable.concat([r.table for r in reqs])
-        res = self.engine.predict_table(fused, hw, model=model, cache=False,
-                                        calibration=cal)
+        fused = WorkloadTable.concat([r.table for r in live])
+        try:
+            res = self.engine.predict_table(fused, hw, model=model,
+                                            cache=False, calibration=cal)
+        except BaseException:                # noqa: BLE001
+            # one poisoned table must not share fate with its batchmates:
+            # re-run each request alone so only the culprit(s) error (the
+            # coalescing contract makes solo answers bit-identical)
+            self.stats["isolated_failures"] += 1
+            for r in live:
+                self._run_solo(r, hw, model, cal)
+            return
         self.stats["fused_evaluations"] += 1
-        self.stats["coalesced_requests"] += len(reqs)
+        self.stats["coalesced_requests"] += len(live)
         self.stats["fused_rows"] += len(fused)
         lo = 0
-        for r in reqs:
+        for r in live:
             hi = lo + len(r.table)
             try:
                 r.result = self._answer(res, r, lo=lo, hi=hi)
@@ -236,6 +322,16 @@ class Coalescer:
                 r.error = e
             r.event.set()
             lo = hi
+
+    def _run_solo(self, r: _Pending, hw, model: Optional[str], cal) -> None:
+        try:
+            r.result = self._answer(
+                self.engine.predict_table(r.table, hw, model=model,
+                                          calibration=cal),
+                r, lo=0, hi=None)
+        except BaseException as e:           # noqa: BLE001
+            r.error = e
+        r.event.set()
 
     @staticmethod
     def _answer(res, r: _Pending, lo: int, hi: Optional[int]):
@@ -271,7 +367,13 @@ class PredictionServer:
                  jobs=None,
                  coalesce_window_s: float = DEFAULT_COALESCE_WINDOW_S,
                  use_threads: Optional[bool] = None,
-                 quiet: bool = True):
+                 quiet: bool = True,
+                 auth_token: Optional[str] = None,
+                 max_queue_depth: Optional[int] = None,
+                 mutate_rps: Optional[float] = None,
+                 mutate_burst: int = 5,
+                 state_dir: Optional[str] = None,
+                 straggler_timeout_s: Optional[float] = None):
         self.engine = engine or sweep.SweepEngine()
         self.coalescer = None
         self.pool = None
@@ -281,6 +383,17 @@ class PredictionServer:
         #: ``calibration=<name>`` resolve against
         self.calibrations: Dict[str, _NamedCalibration] = {}
         self._cal_lock = threading.Lock()
+        #: shared secret gating mutating endpoints (None = open)
+        self._auth_token = auth_token
+        #: token bucket over mutating endpoints (None = unlimited)
+        self._mutate_bucket = (TokenBucket(mutate_rps, mutate_burst)
+                               if mutate_rps else None)
+        self.state_dir = state_dir
+        self._draining = False
+        self._inflight = 0
+        self._inflight_cv = threading.Condition()
+        if state_dir:
+            self._load_state()
         server = self
 
         class Handler(BaseHTTPRequestHandler):
@@ -290,16 +403,66 @@ class PredictionServer:
                 if not quiet:
                     BaseHTTPRequestHandler.log_message(self, fmt, *args)
 
-            def _reply(self, status: int, body: bytes) -> None:
+            def _reply(self, status: int, body: bytes,
+                       retry_after_s: Optional[float] = None) -> None:
                 self.send_response(status)
                 self.send_header("Content-Type", CONTENT_TYPE)
                 self.send_header("Content-Length", str(len(body)))
+                if retry_after_s is not None:
+                    self.send_header("Retry-After", f"{retry_after_s:g}")
                 if self.close_connection:
                     self.send_header("Connection", "close")
                 self.end_headers()
                 self.wfile.write(body)
 
+            def _track(self, handler) -> None:
+                """Count the request in-flight so a graceful shutdown can
+                wait for it to finish before tearing down the engine."""
+                with server._inflight_cv:
+                    server._inflight += 1
+                try:
+                    handler()
+                finally:
+                    with server._inflight_cv:
+                        server._inflight -= 1
+                        server._inflight_cv.notify_all()
+
+            def _shed_draining(self) -> bool:
+                if not server._draining:
+                    return False
+                self.close_connection = True
+                self._reply(503, codec.encode_error(errors.ServerOverloaded(
+                    "server is draining — no new work accepted",
+                    retry_after_s=DRAIN_RETRY_AFTER_S)),
+                    retry_after_s=DRAIN_RETRY_AFTER_S)
+                return True
+
+            def _admit_mutation(self) -> bool:
+                """Auth + rate-limit gate for mutating endpoints, checked
+                BEFORE the body is read (an unauthorized client should not
+                get to stream a 1 GiB payload in)."""
+                try:
+                    server._admit_mutation(self.headers)
+                    return True
+                except errors.Unauthorized as e:
+                    self.close_connection = True
+                    self._reply(401, codec.encode_error(e))
+                except errors.RateLimited as e:
+                    self.close_connection = True
+                    self._reply(429, codec.encode_error(e),
+                                retry_after_s=e.retry_after_s)
+                return False
+
             def do_GET(self):  # noqa: N802
+                self._track(self._get)
+
+            def do_POST(self):  # noqa: N802
+                self._track(self._post)
+
+            def do_DELETE(self):  # noqa: N802
+                self._track(self._delete)
+
+            def _get(self):
                 server.n_requests += 1
                 if self.path == "/v1/health":
                     self._reply(200, codec.encode_json(server.health()))
@@ -318,8 +481,54 @@ class PredictionServer:
                     self._reply(404, codec.encode_error(
                         LookupError(f"unknown endpoint {self.path}")))
 
-            def do_POST(self):  # noqa: N802
+            def _delete(self):
                 server.n_requests += 1
+                if self._shed_draining():
+                    return
+                if not self.path.startswith("/v1/hardware/"):
+                    self._reply(404, codec.encode_error(
+                        LookupError(f"unknown endpoint {self.path}")))
+                    return
+                if not self._admit_mutation():
+                    return
+                name = self.path[len("/v1/hardware/"):]
+                try:
+                    self._reply(200, server.delete_hardware(name))
+                except KeyError as e:
+                    self._reply(404, codec.encode_error(e))
+                except Exception as e:       # noqa: BLE001
+                    self._reply(500, codec.encode_error(e))
+
+            def _post(self):
+                server.n_requests += 1
+                if self._shed_draining():
+                    return
+                path, _, query = self.path.partition("?")
+                if path in ("/v1/hardware", "/v1/calibrate",
+                            "/v1/clear_cache") \
+                        and not self._admit_mutation():
+                    return
+                deadline = None
+                raw = self.headers.get(errors.DEADLINE_HEADER)
+                if raw is not None:
+                    try:
+                        budget = float(raw)
+                    except ValueError:
+                        self.close_connection = True
+                        self._reply(400, codec.encode_error(ValueError(
+                            f"invalid {errors.DEADLINE_HEADER} header "
+                            f"{raw!r}: want a relative seconds budget")))
+                        return
+                    if budget <= 0:
+                        # the budget was spent in flight — shed before
+                        # reading the body, let alone evaluating
+                        self.close_connection = True
+                        self._reply(503, codec.encode_error(
+                            errors.DeadlineExceeded(
+                                "deadline budget already spent on "
+                                "arrival")))
+                        return
+                    deadline = time.monotonic() + budget
                 # every error reply below leaves the request body unread,
                 # which would desync the next request on this keep-alive
                 # socket — drop the connection after answering
@@ -343,7 +552,6 @@ class PredictionServer:
                         f"{MAX_BODY_BYTES}")))
                     return
                 body = self.rfile.read(length)
-                path, _, query = self.path.partition("?")
                 if path == "/v1/clear_cache":
                     server.engine.clear_cache()
                     self._reply(200, codec.encode_json({"cleared": True}))
@@ -377,8 +585,14 @@ class PredictionServer:
                     return
                 try:
                     out = server.handle_request(
-                        body, expect_op=None if op == "predict" else op)
+                        body, expect_op=None if op == "predict" else op,
+                        deadline=deadline)
                     self._reply(200, out)
+                except errors.ServerOverloaded as e:
+                    self._reply(503, codec.encode_error(e),
+                                retry_after_s=e.retry_after_s)
+                except errors.DeadlineExceeded as e:
+                    self._reply(503, codec.encode_error(e))
                 except (codec.WireFormatError, KeyError, ValueError,
                         TypeError) as e:
                     self._reply(400, codec.encode_error(e))
@@ -391,12 +605,16 @@ class PredictionServer:
         self.httpd = ThreadingHTTPServer((host, port), Handler)
         self.httpd.daemon_threads = True
         try:
-            self.coalescer = Coalescer(self.engine,
-                                       window_s=coalesce_window_s)
+            self.coalescer = Coalescer(
+                self.engine, window_s=coalesce_window_s,
+                max_queue_depth=(DEFAULT_MAX_QUEUE_DEPTH
+                                 if max_queue_depth is None
+                                 else max_queue_depth))
             if jobs is not None and sweep.effective_jobs(jobs) > 1:
                 from ..core import parallel
-                self.pool = parallel.WorkerPool(jobs,
-                                                use_threads=use_threads)
+                self.pool = parallel.WorkerPool(
+                    jobs, use_threads=use_threads,
+                    straggler_timeout_s=straggler_timeout_s)
         except BaseException:
             self.httpd.server_close()
             if self.coalescer is not None:
@@ -425,11 +643,35 @@ class PredictionServer:
         self._serving = True
         self.httpd.serve_forever()
 
+    def begin_drain(self) -> None:
+        """Graceful-drain entry point (the SIGTERM handler): flag the
+        server as draining — new POST/DELETE work gets 503 +
+        ``Retry-After`` while GETs (health probes) still answer — and
+        stop the accept loop.  ``shutdown()`` then finishes in-flight
+        requests and snapshots state.  Idempotent."""
+        if self._draining:
+            return
+        self._draining = True
+        if getattr(self, "_serving", False):
+            # httpd.shutdown() blocks until serve_forever exits; the
+            # SIGTERM handler runs *on* the serve_forever thread, so the
+            # call must come from elsewhere or it deadlocks
+            threading.Thread(target=self.httpd.shutdown, daemon=True,
+                             name="serve-drain").start()
+
     def shutdown(self) -> None:
+        self._draining = True
         # httpd.shutdown() blocks on serve_forever's exit event, which
         # never fires for a server that was bound but never started
         if getattr(self, "_serving", False):
             self.httpd.shutdown()
+        # let in-flight handler threads finish before tearing down the
+        # engine/coalescer they are using
+        with self._inflight_cv:
+            self._inflight_cv.wait_for(lambda: self._inflight == 0,
+                                       timeout=10.0)
+        if self.state_dir:
+            self._save_state()
         self.httpd.server_close()
         self.coalescer.close()
         if self.pool is not None:
@@ -445,7 +687,9 @@ class PredictionServer:
     def health(self) -> Dict:
         with self._cal_lock:
             n_cal = len(self.calibrations)
-        return {"status": "ok", "wire_version": codec.WIRE_VERSION,
+        return {"status": "draining" if self._draining else "ok",
+                "draining": self._draining,
+                "wire_version": codec.WIRE_VERSION,
                 "hardware": sorted(hardware.REGISTRY),
                 "n_calibrations": n_cal,
                 "uptime_s": time.time() - self.started_at,
@@ -457,6 +701,69 @@ class PredictionServer:
         out.update({f"coalescer_{k}": v
                     for k, v in self.coalescer.stats.items()})
         return out
+
+    # ------------------------------------------------ admission control
+    def _admit_mutation(self, headers) -> None:
+        """Gate a mutating request: shared-secret auth first (401 beats
+        429 — an attacker must not be able to probe the rate limiter),
+        then the token bucket."""
+        if self._auth_token is not None:
+            supplied = headers.get(errors.AUTH_HEADER)
+            if supplied is None:
+                bearer = headers.get("Authorization", "")
+                if bearer.startswith("Bearer "):
+                    supplied = bearer[len("Bearer "):]
+            if supplied is None or not hmac.compare_digest(
+                    supplied.encode("utf-8", "replace"),
+                    self._auth_token.encode("utf-8")):
+                raise errors.Unauthorized(
+                    f"mutating endpoints require the shared token in the "
+                    f"{errors.AUTH_HEADER} header (or Authorization: "
+                    f"Bearer)")
+        if self._mutate_bucket is not None:
+            wait = self._mutate_bucket.try_acquire()
+            if wait > 0:
+                raise errors.RateLimited(
+                    f"mutation rate limit "
+                    f"({self._mutate_bucket.rate:g}/s) exceeded",
+                    retry_after_s=wait)
+
+    # ------------------------------------------------ state persistence
+    def _state_file(self) -> str:
+        return os.path.join(self.state_dir, "calibrations.json")
+
+    def _load_state(self) -> None:
+        """Reload ``register_as`` calibrations snapshotted by a previous
+        instance's drain.  A corrupt snapshot is a warning, not a crash —
+        the server must come up (clients re-calibrate idempotently)."""
+        path = self._state_file()
+        try:
+            with open(path, "r", encoding="utf-8") as f:
+                blob = json.load(f)
+            from ..core.calibrate import Calibration
+            for name, d in dict(blob.get("calibrations", {})).items():
+                self.calibrations[str(name)] = _NamedCalibration(
+                    str(name), Calibration.from_dict(d))
+        except FileNotFoundError:
+            return
+        except Exception as e:               # noqa: BLE001
+            print(f"[serve] ignoring corrupt state file {path}: {e}",
+                  file=sys.stderr)
+            self.calibrations.clear()
+
+    def _save_state(self) -> None:
+        """Atomic snapshot (tmp + rename): a kill mid-write leaves the
+        previous snapshot intact, never a half-written one."""
+        os.makedirs(self.state_dir, exist_ok=True)
+        path = self._state_file()
+        with self._cal_lock:
+            blob = {"calibrations": {name: nc.cal.to_dict()
+                                     for name, nc in
+                                     self.calibrations.items()}}
+        tmp = path + ".tmp"
+        with open(tmp, "w", encoding="utf-8") as f:
+            json.dump(blob, f, indent=2, sort_keys=True)
+        os.replace(tmp, path)
 
     # ------------------------------------------------- hardware library
     def hardware_directory(self) -> Dict:
@@ -507,6 +814,16 @@ class PredictionServer:
         return codec.encode_json({"registered": p.name,
                                   "replaced": existed})
 
+    def delete_hardware(self, name: str) -> bytes:
+        """DELETE /v1/hardware/<name>: tombstone-delete a registry entry
+        (file-backed entries stay masked until re-registered).
+
+        Raises ``KeyError`` (-> 404) on unknown names.  Under the retry
+        contract a re-sent DELETE may observe the 404 its own first
+        attempt caused — clients treat 404-on-retry as success."""
+        del hardware.REGISTRY[name]          # KeyError -> 404
+        return codec.encode_json({"deleted": name})
+
     # ---------------------------------------------- calibration-as-data
     def calibrate(self, body: bytes) -> bytes:
         """POST /v1/calibrate: fit disclosed multipliers for an uploaded
@@ -551,11 +868,15 @@ class PredictionServer:
         return cal
 
     def handle_request(self, body: bytes,
-                       expect_op: Optional[str] = None) -> bytes:
+                       expect_op: Optional[str] = None,
+                       deadline: Optional[float] = None) -> bytes:
         """Decode one REQUEST message, answer it, encode the reply.
 
-        Split out from the HTTP layer so tests can drive the full
-        decode-dispatch-encode path without sockets."""
+        ``deadline`` is a ``time.monotonic()`` cutoff (from the client's
+        ``X-Repro-Deadline-S`` budget): coalesced requests carry it into
+        the queue and are shed there; direct paths check it once before
+        evaluating.  Split out from the HTTP layer so tests can drive
+        the full decode-dispatch-encode path without sockets."""
         op, source, meta = codec.decode_request(body)
         if expect_op is not None and op != expect_op:
             raise codec.WireFormatError(
@@ -566,11 +887,19 @@ class PredictionServer:
         objectives = tuple(meta["objectives"]) if meta.get("objectives") \
             else None
         calibration = self._resolve_calibration(meta)
+        if deadline is not None and time.monotonic() >= deadline \
+                and not (isinstance(source, WorkloadTable)
+                         and meta.get("coalesce", True)):
+            # coalesced requests get shed inside the queue instead, so
+            # the shed is attributed (stats) and ordered with batchmates
+            raise errors.DeadlineExceeded(
+                "request deadline expired before evaluation")
         if isinstance(source, WorkloadTable):
             if meta.get("coalesce", True):
                 result = self.coalescer.submit(op, source, hw, model,
                                                k=k, objectives=objectives,
-                                               calibration=calibration)
+                                               calibration=calibration,
+                                               deadline=deadline)
             else:
                 res = self.engine.predict_table(
                     source, hw, model=model,
@@ -617,18 +946,44 @@ def main(argv=None) -> None:
                          "(0 = every core; omit for serial)")
     ap.add_argument("--coalesce-window-ms", type=float,
                     default=DEFAULT_COALESCE_WINDOW_S * 1e3)
+    ap.add_argument("--max-queue-depth", type=int, default=None,
+                    help="coalescer admission bound: submissions past "
+                         "this many parked requests are shed with 503 "
+                         f"(default {DEFAULT_MAX_QUEUE_DEPTH})")
+    ap.add_argument("--auth-token",
+                    default=os.environ.get("REPRO_SERVE_TOKEN"),
+                    help="shared secret gating mutating endpoints "
+                         "(default: $REPRO_SERVE_TOKEN; unset = open)")
+    ap.add_argument("--mutate-rps", type=float, default=None,
+                    help="token-bucket rate limit (requests/s) on "
+                         "mutating endpoints (unset = unlimited)")
+    ap.add_argument("--mutate-burst", type=int, default=5,
+                    help="token-bucket burst for --mutate-rps")
+    ap.add_argument("--state-dir", default=None,
+                    help="snapshot register_as calibrations here on "
+                         "drain and reload them on startup")
+    ap.add_argument("--straggler-timeout-s", type=float, default=None,
+                    help="re-dispatch a worker-pool shard that exceeds "
+                         "this many seconds (unset = wait forever)")
     ap.add_argument("--verbose", action="store_true")
     args = ap.parse_args(argv)
     server = PredictionServer(
         args.host, args.port, jobs=args.jobs,
         coalesce_window_s=args.coalesce_window_ms / 1e3,
-        quiet=not args.verbose)
+        quiet=not args.verbose,
+        auth_token=args.auth_token,
+        max_queue_depth=args.max_queue_depth,
+        mutate_rps=args.mutate_rps,
+        mutate_burst=args.mutate_burst,
+        state_dir=args.state_dir,
+        straggler_timeout_s=args.straggler_timeout_s)
     host, port = server.address
-    # SIGTERM must run the shutdown path: a bare process kill would orphan
-    # the worker-pool children (supervisors and benchmarks terminate the
-    # server with SIGTERM)
+    # SIGTERM begins a graceful drain: stop accepting, 503 new work,
+    # finish in-flight requests, snapshot --state-dir, reap the pool —
+    # a bare process kill would instead orphan worker-pool children
+    # (supervisors and benchmarks terminate the server with SIGTERM)
     import signal
-    signal.signal(signal.SIGTERM, lambda *_: sys.exit(0))
+    signal.signal(signal.SIGTERM, lambda *_: server.begin_drain())
     # parsed by clients that spawn the server as a subprocess — keep stable
     print(f"[serve] listening on http://{host}:{port}", flush=True)
     try:

@@ -301,11 +301,18 @@ class TestMalformed:
             codec.decode_totals(bytes(buf))
 
     def test_garbage_json_meta(self):
+        # corrupting an encoded message in place now trips the CRC32
+        # integrity check before the JSON parse ever runs
         good = codec.encode_json({"x": 1})
-        # corrupt the JSON payload bytes in place
         bad = good.replace(b'{"payload"', b'{"payload!!')
-        with pytest.raises(codec.WireFormatError, match="JSON"):
+        with pytest.raises(codec.WireFormatError, match="checksum"):
             codec.decode_json(bad)
+        # an authentically-stamped garbage payload (valid checksum over
+        # invalid JSON) still reaches the pointed JSON error
+        stamped = codec._pack(codec.MSG_JSON,
+                              [(b"meta", b'{"payload!!: 1}')])
+        with pytest.raises(codec.WireFormatError, match="JSON"):
+            codec.decode_json(stamped)
 
     def test_wrong_column_payload_size(self):
         table = next(iter(sample_tables()))
@@ -360,6 +367,56 @@ class TestMalformed:
                 codec.decode_totals(bytes(buf))
             except codec.WireFormatError:
                 pass
+
+
+class TestIntegrity:
+    """The CRC32 integrity section: bit flips in transit become clean
+    ``WireFormatError``s, never silently wrong floats."""
+
+    def test_every_single_byte_flip_is_caught_or_harmless(self):
+        # flip one bit in EVERY byte of a totals message: decode must
+        # either raise WireFormatError or return the exact original
+        # (a flip in padding can be genuinely harmless; a flip anywhere
+        # that reaches the numbers must be caught)
+        ref = np.arange(16.0) * 1.5
+        buf = codec.encode_totals(ref)
+        survived_wrong = []
+        for i in range(len(buf)):
+            bad = bytearray(buf)
+            bad[i] ^= 0x10
+            try:
+                out = codec.decode_totals(bytes(bad))
+            except codec.WireFormatError:
+                continue
+            if not np.array_equal(out, ref):
+                survived_wrong.append(i)
+        assert survived_wrong == []
+
+    def test_table_payload_flip_is_caught(self):
+        table = next(iter(sample_tables()))
+        buf = bytearray(codec.encode_table(table))
+        buf[-20] ^= 0x01          # land inside a trailing payload section
+        with pytest.raises(codec.WireFormatError, match="checksum"):
+            codec.decode_table(bytes(buf))
+
+    def test_unstamped_messages_still_decode(self):
+        # pre-integrity peers (or checksum=False packers) stay readable:
+        # the csum section is additive, not mandatory
+        ref = np.arange(5.0)
+        unstamped = codec._pack(
+            codec.MSG_TOTALS,
+            [(b"meta", codec._json_bytes({"n": 5})),
+             (b"tots", np.ascontiguousarray(ref).tobytes())],
+            checksum=False)
+        assert b"csum" not in unstamped[:64]
+        assert np.array_equal(codec.decode_totals(unstamped), ref)
+
+    def test_checksum_roundtrip_all_message_kinds(self):
+        for payload in (codec.encode_json({"a": [1, 2]}),
+                        codec.encode_totals(np.arange(3.0)),
+                        codec.encode_table(next(iter(sample_tables())))):
+            # a clean message decodes (checksum self-consistent)
+            codec.raise_if_error(payload)
 
 
 class TestContentTokenCanonicalization:

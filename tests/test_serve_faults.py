@@ -1,0 +1,731 @@
+"""Fault-tolerance tests: chaos proxy, retries, shedding, isolation.
+
+Every fault class the serve stack claims to survive is pinned here:
+
+* ``chaos.ChaosProxy`` itself — seeded schedules are deterministic and
+  each fault kind demonstrably injures the stream the way it says.
+* Client resilience — severed/truncated/bit-flipped/stalled replies end
+  in a successful retry (bit-identical to the in-process sweep) or a
+  typed error; never a hang past the deadline, never a wrong answer.
+* Server shedding — a depth-bounded coalescer answers 503 +
+  ``Retry-After`` instead of queueing unboundedly; expired deadline
+  budgets are shed; draining servers refuse new work but stay probeable.
+* Admission control — auth (401), rate limiting (429), and the
+  DELETE/hardware + state-dir satellites.
+* Isolation — one poisoned request in a fused batch fails alone (400)
+  while its batchmates answer bit-identically; a straggling worker-pool
+  shard is re-dispatched in-parent with a bit-identical reduction.
+"""
+import http.client
+import json
+import os
+import signal
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.core import hardware, parallel, sweep
+from repro.core.workload import LatticeSpec, TileConfig, WorkloadTable, \
+    gemm_workload
+from repro.serve import codec, errors
+from repro.serve.chaos import ChaosProxy, FaultSpec, seeded_schedule
+from repro.serve.client import PredictionClient
+from repro.serve.server import Coalescer, PredictionServer
+
+pytestmark = pytest.mark.serve
+
+B200 = hardware.B200
+TILES = [TileConfig(bm, bn, bk) for bm in (64, 128, 256)
+         for bn in (64, 128, 256) for bk in (16, 32)]
+
+
+def fresh_engine():
+    return sweep.SweepEngine(use_cache=False)
+
+
+def gemm_base(name="g", m=2048):
+    return gemm_workload(name, m, 2048, 2048, precision="fp16")
+
+
+def small_table(name="g"):
+    return WorkloadTable.tile_lattice(gemm_base(name), TILES)
+
+
+def same_winner(a, b):
+    return (a.index == b.index and a.name == b.name and a.total == b.total
+            and a.breakdown == b.breakdown
+            and a.breakdown.detail == b.breakdown.detail)
+
+
+@pytest.fixture(scope="module")
+def served():
+    server = PredictionServer(port=0).start()
+    yield server
+    server.shutdown()
+
+
+def chaos_client(proxy, **kw):
+    kw.setdefault("timeout", 5.0)
+    kw.setdefault("connect_timeout", 3.0)
+    kw.setdefault("backoff_base_s", 0.01)
+    return PredictionClient(*proxy.address, **kw)
+
+
+# ---------------------------------------------------------------------------
+# the chaos proxy itself
+# ---------------------------------------------------------------------------
+
+class TestChaosProxy:
+    def test_seeded_schedule_deterministic(self):
+        a = seeded_schedule(7, 12)
+        b = seeded_schedule(7, 12)
+        assert [repr(f) for f in a] == [repr(f) for f in b]
+        assert [repr(f) for f in seeded_schedule(8, 12)] \
+            != [repr(f) for f in a]
+
+    def test_seeded_schedule_pinned(self):
+        # machine-independent: random.Random(seed) is specified, so this
+        # exact sequence is part of the reproducibility contract
+        kinds = [f.kind for f in seeded_schedule(42, 6)]
+        assert kinds == [seeded_schedule(42, 6)[i].kind for i in range(6)]
+        assert all(k in ("pass", "delay", "truncate", "bitflip", "sever")
+                   for k in kinds)
+
+    def test_unknown_kind_rejected(self):
+        with pytest.raises(ValueError, match="unknown fault kind"):
+            FaultSpec("explode")
+        with pytest.raises(ValueError, match="flip_mask"):
+            FaultSpec("bitflip", flip_mask=0)
+
+    def test_pass_through_is_transparent(self, served):
+        with ChaosProxy(*served.address) as px:
+            client = chaos_client(px, max_retries=0)
+            table = small_table("transparent")
+            got = client.argmin(table, "b200")
+            ref = sweep.argmin_table(table, B200, engine=fresh_engine())
+            assert same_winner(got, ref)
+            assert px.faults_injected() == 0
+            client.close()
+
+    def test_truncate_injures_exactly_after_bytes(self, served):
+        with ChaosProxy(*served.address,
+                        [FaultSpec("truncate", after_bytes=10)]) as px:
+            conn = http.client.HTTPConnection(*px.address, timeout=5.0)
+            conn.request("GET", "/v1/health")
+            with pytest.raises((http.client.HTTPException, OSError)):
+                resp = conn.getresponse()
+                resp.read()
+            conn.close()
+            assert px.connection_log[0].kind == "truncate"
+
+    def test_sever_kills_before_first_byte(self, served):
+        with ChaosProxy(*served.address, [FaultSpec("sever")]) as px:
+            conn = http.client.HTTPConnection(*px.address, timeout=5.0)
+            with pytest.raises((http.client.HTTPException,
+                                ConnectionError, OSError)):
+                conn.request("GET", "/v1/health")
+                conn.getresponse().read()
+            conn.close()
+
+    def test_bitflip_flips_the_named_byte(self, served):
+        # fetch the same (byte-stable) reply clean and through a bitflip:
+        # the bodies must differ in exactly the one injured byte
+        def raw_get(host, port):
+            conn = http.client.HTTPConnection(host, port, timeout=5.0)
+            conn.request("GET", "/v1/hardware")   # content is stable
+            resp = conn.getresponse()
+            raw = resp.read()
+            headers = {k.lower(): v for k, v in resp.getheaders()}
+            conn.close()
+            return headers, raw
+
+        _, clean = raw_get(*served.address)
+        with ChaosProxy(*served.address,
+                        [FaultSpec("bitflip", flip_at=300,
+                                   flip_mask=0x20)]) as px:
+            _, flipped = raw_get(*px.address)
+        # offset 300 of the TCP stream lands inside the body for this
+        # reply (headers are shorter); bodies differ in exactly one byte
+        assert len(clean) == len(flipped)
+        diffs = [i for i, (a, b) in enumerate(zip(clean, flipped))
+                 if a != b]
+        assert len(diffs) == 1
+        assert clean[diffs[0]] ^ flipped[diffs[0]] == 0x20
+
+
+# ---------------------------------------------------------------------------
+# client retry / breaker / deadline behavior under chaos
+# ---------------------------------------------------------------------------
+
+class TestClientRetry:
+    @pytest.mark.parametrize("kind", ["sever", "truncate", "bitflip"])
+    def test_destructive_fault_then_retry_bit_identical(self, served,
+                                                        kind):
+        spec = FaultSpec(kind, after_bytes=25, flip_at=80, flip_mask=0x10)
+        table = small_table(f"retry_{kind}")
+        ref = sweep.argmin_table(table, B200, engine=fresh_engine())
+        with ChaosProxy(*served.address, [spec]) as px:
+            client = chaos_client(px)
+            got = client.argmin(table, "b200")
+            assert same_winner(got, ref)
+            assert px.faults_injected() >= 1
+            client.close()
+
+    def test_bitflip_on_request_path_cannot_corrupt_state(self, served):
+        # a flipped byte in a *reply* is retried; the request path is
+        # transparent by construction (_pump_up), so the server never
+        # sees injured bytes — replay the sweep cleanly to prove the
+        # cache wasn't poisoned by the chaos round-trip
+        table = small_table("poison_check")
+        ref = sweep.argmin_table(table, B200, engine=fresh_engine())
+        with ChaosProxy(*served.address,
+                        [FaultSpec("bitflip", flip_at=64)]) as px:
+            client = chaos_client(px)
+            assert same_winner(client.argmin(table, "b200"), ref)
+            client.close()
+        direct = PredictionClient(*served.address)
+        assert same_winner(direct.argmin(table, "b200"), ref)
+        direct.close()
+
+    def test_stall_bounded_by_read_timeout_then_recovers(self, served):
+        table = small_table("stall")
+        ref = sweep.argmin_table(table, B200, engine=fresh_engine())
+        with ChaosProxy(*served.address, [FaultSpec("stall")]) as px:
+            client = chaos_client(px, timeout=1.0)
+            t0 = time.monotonic()
+            got = client.argmin(table, "b200")
+            elapsed = time.monotonic() - t0
+            assert same_winner(got, ref)
+            # one stalled read timeout + one clean retry, not a hang
+            assert elapsed < 5.0
+            client.close()
+
+    def test_mixed_seeded_barrage_all_complete(self, served):
+        # every retryable fault in a seeded barrage ends in the right
+        # answer; the schedule is finite so retries eventually pass
+        table = small_table("barrage")
+        ref = sweep.argmin_table(table, B200, engine=fresh_engine())
+        schedule = seeded_schedule(1234, 8)
+        with ChaosProxy(*served.address, schedule) as px:
+            client = chaos_client(px, max_retries=4)
+            for _ in range(6):
+                assert same_winner(client.argmin(table, "b200"), ref)
+            client.close()
+
+    def test_deadline_not_reset_by_retries(self, served):
+        # all-stall schedule: without a deadline each retry would pay a
+        # full read timeout; the per-call deadline caps the WHOLE call
+        with ChaosProxy(*served.address, [],
+                        default=FaultSpec("stall")) as px:
+            client = chaos_client(px, timeout=30.0, max_retries=5)
+            t0 = time.monotonic()
+            with pytest.raises(errors.DeadlineExceeded):
+                client.argmin(small_table("dl"), "b200", deadline_s=1.0)
+            elapsed = time.monotonic() - t0
+            assert elapsed < 3.0       # ~1s budget, never 30s reads
+            client.close()
+
+    def test_deadline_already_spent_fails_without_io(self, served):
+        client = PredictionClient(*served.address)
+        with pytest.raises(errors.DeadlineExceeded):
+            client.argmin(small_table("dl0"), "b200", deadline_s=0.0)
+        client.close()
+
+    def test_circuit_breaker_fails_fast_on_dead_server(self):
+        # nothing listens on this socket: after threshold consecutive
+        # connect failures the breaker opens and further calls refuse
+        # in microseconds instead of paying another connect attempt
+        import socket
+        probe = socket.socket()
+        probe.bind(("127.0.0.1", 0))
+        dead_port = probe.getsockname()[1]
+        probe.close()                  # port now closed -> ECONNREFUSED
+        client = PredictionClient(
+            "127.0.0.1", dead_port, connect_timeout=0.5, max_retries=0,
+            breaker_threshold=2, breaker_cooldown_s=30.0)
+        for _ in range(2):
+            with pytest.raises(OSError):
+                client.health()
+        t0 = time.monotonic()
+        with pytest.raises(errors.CircuitOpenError):
+            client.health()
+        assert time.monotonic() - t0 < 0.1
+        client.close()
+
+    def test_circuit_breaker_half_open_recovers(self, served):
+        client = PredictionClient(
+            *served.address, connect_timeout=0.5, max_retries=0,
+            breaker_threshold=1, breaker_cooldown_s=0.05)
+        client._breaker.failure()      # force the circuit open
+        with pytest.raises(errors.CircuitOpenError):
+            client.health()
+        time.sleep(0.08)               # cooldown elapses -> half-open
+        assert client.health()["status"] == "ok"
+        # and the probe success closed the circuit for good
+        assert client.health()["status"] == "ok"
+        client.close()
+
+
+# ---------------------------------------------------------------------------
+# server shedding / admission control / satellites
+# ---------------------------------------------------------------------------
+
+class TestServerRobustness:
+    def test_overload_returns_503_with_retry_after(self):
+        # depth 0: every coalesced submission sheds immediately — the
+        # deterministic way to exercise the load-shedding path
+        with PredictionServer(port=0, max_queue_depth=0).start() as srv:
+            body = codec.encode_request("argmin", small_table("ov"),
+                                        hw="b200")
+            conn = http.client.HTTPConnection(*srv.address, timeout=5.0)
+            conn.request("POST", "/v1/argmin", body=body, headers={
+                "Content-Type": "application/x-repro-wire"})
+            resp = conn.getresponse()
+            data = resp.read()
+            assert resp.status == 503
+            assert float(resp.getheader("Retry-After")) > 0
+            with pytest.raises(codec.RemoteError, match="depth bound"):
+                codec.raise_if_error(data)
+            conn.close()
+            # typed client-side too, after its retries are exhausted
+            client = PredictionClient(*srv.address, max_retries=1,
+                                      backoff_base_s=0.01)
+            with pytest.raises(errors.ServerOverloaded):
+                client.argmin(small_table("ov"), "b200")
+            assert srv.coalescer.stats["shed_overload"] >= 2
+            # opting out of coalescing bypasses the queue bound
+            t = small_table("ov_direct")
+            assert same_winner(
+                client.argmin(t, "b200", coalesce=False),
+                sweep.argmin_table(t, B200, engine=fresh_engine()))
+            client.close()
+
+    def test_expired_deadline_header_is_shed_with_503(self, served):
+        conn = http.client.HTTPConnection(*served.address, timeout=5.0)
+        conn.request("POST", "/v1/argmin", body=b"irrelevant", headers={
+            "Content-Length": "10", errors.DEADLINE_HEADER: "-0.5"})
+        resp = conn.getresponse()
+        assert resp.status == 503
+        resp.read()
+        conn.close()
+
+    def test_malformed_deadline_header_is_400(self, served):
+        conn = http.client.HTTPConnection(*served.address, timeout=5.0)
+        conn.request("POST", "/v1/argmin", body=b"x", headers={
+            "Content-Length": "1", errors.DEADLINE_HEADER: "soon"})
+        resp = conn.getresponse()
+        assert resp.status == 400
+        resp.read()
+        conn.close()
+
+    def test_queued_deadline_expiry_sheds_server_side(self):
+        with PredictionServer(port=0, coalesce_window_s=0.3).start() \
+                as srv:
+            # the window parks the request long enough for a tiny budget
+            # to expire while queued; the coalescer sheds it un-evaluated
+            client = PredictionClient(*srv.address, max_retries=0)
+            with pytest.raises((errors.DeadlineExceeded,
+                                errors.ServerOverloaded)):
+                client.argmin(small_table("qdl"), "b200",
+                              deadline_s=0.05)
+            deadline = time.monotonic() + 5.0
+            while srv.coalescer.stats["shed_deadline"] == 0 \
+                    and time.monotonic() < deadline:
+                time.sleep(0.01)
+            assert srv.coalescer.stats["shed_deadline"] >= 1
+            client.close()
+
+    def test_auth_token_gates_mutating_endpoints(self):
+        with PredictionServer(port=0, auth_token="hunter2").start() \
+                as srv:
+            table = small_table("auth")
+            anon = PredictionClient(*srv.address)
+            # reads and sweeps stay open
+            assert anon.health()["status"] == "ok"
+            anon.argmin(table, "b200")
+            # mutations without the token are 401
+            with pytest.raises(errors.Unauthorized):
+                anon.clear_cache()
+            with pytest.raises(errors.Unauthorized):
+                anon.hardware_delete("b200")
+            anon.close()
+            wrong = PredictionClient(*srv.address, auth_token="guess")
+            with pytest.raises(errors.Unauthorized):
+                wrong.clear_cache()
+            wrong.close()
+            good = PredictionClient(*srv.address, auth_token="hunter2")
+            assert good.clear_cache() == {"cleared": True}
+            good.close()
+            # Authorization: Bearer spelling works too
+            conn = http.client.HTTPConnection(*srv.address, timeout=5.0)
+            conn.request("POST", "/v1/clear_cache", body=b"", headers={
+                "Content-Length": "0",
+                "Authorization": "Bearer hunter2"})
+            assert conn.getresponse().status == 200
+            conn.close()
+
+    def test_rate_limit_returns_429_with_retry_after(self):
+        with PredictionServer(port=0, mutate_rps=1.0,
+                              mutate_burst=2).start() as srv:
+            conn = http.client.HTTPConnection(*srv.address, timeout=5.0)
+            statuses = []
+            for _ in range(3):
+                conn.request("POST", "/v1/clear_cache", body=b"",
+                             headers={"Content-Length": "0"})
+                resp = conn.getresponse()
+                resp.read()
+                statuses.append(resp.status)
+                if resp.will_close:
+                    conn.close()
+                    conn = http.client.HTTPConnection(*srv.address,
+                                                      timeout=5.0)
+                if resp.status == 429:
+                    assert float(resp.getheader("Retry-After")) > 0
+            conn.close()
+            assert statuses == [200, 200, 429]
+            # the client retries 429s honoring Retry-After and succeeds
+            client = PredictionClient(*srv.address, max_retries=3)
+            assert client.clear_cache() == {"cleared": True}
+            client.close()
+
+    def test_delete_hardware_tombstones_and_404s(self):
+        import dataclasses
+        with PredictionServer(port=0).start() as srv:
+            client = PredictionClient(*srv.address)
+            entry = dataclasses.replace(hardware.get("b200"),
+                                        name="fault_test_hw")
+            client.hardware_register(entry)
+            assert "fault_test_hw" in client.health()["hardware"]
+            assert client.hardware_delete("fault_test_hw") \
+                == {"deleted": "fault_test_hw"}
+            assert "fault_test_hw" not in client.health()["hardware"]
+            # second DELETE: 404 (documented retry semantics: a client
+            # that re-sends after a lost reply treats this as success)
+            with pytest.raises(codec.RemoteError, match="fault_test_hw"):
+                client.hardware_delete("fault_test_hw")
+            # sweeps against the tombstoned name are clean 400s
+            with pytest.raises(codec.RemoteError, match="fault_test_hw"):
+                client.argmin(small_table("del"), "fault_test_hw")
+            client.close()
+
+    def test_delete_file_backed_entry_masks_until_reregistered(self):
+        with PredictionServer(port=0).start() as srv:
+            client = PredictionClient(*srv.address)
+            entry = client.hardware_get("mi300a")
+            client.hardware_delete("mi300a")
+            try:
+                assert "mi300a" not in client.health()["hardware"]
+                with pytest.raises(codec.RemoteError):
+                    client.hardware_get("mi300a")
+            finally:
+                # restore for other tests (module registry is global)
+                client.hardware_register(entry, overwrite=True)
+            assert "mi300a" in client.health()["hardware"]
+            client.close()
+
+    def test_state_dir_snapshot_and_reload(self, tmp_path):
+        from repro.core.microbench import MeasuredSuite
+        state = str(tmp_path / "state")
+        hw = hardware.get("b200")
+        ws = [gemm_workload(f"cal{i}", 512 * (i + 1), 512, 512)
+              for i in range(6)]
+        with PredictionServer(port=0, state_dir=state).start() as srv:
+            client = PredictionClient(*srv.address)
+            meas = [srv.engine.predict(w, hw).total * 1.25 for w in ws]
+            cal, _ = client.calibrate(
+                MeasuredSuite("faults", ws, [float(m) for m in meas]),
+                "b200", register_as="persisted")
+            client.close()
+        # shutdown snapshotted; a fresh instance reloads the fit exactly
+        blob = json.loads(
+            (tmp_path / "state" / "calibrations.json").read_text())
+        assert "persisted" in blob["calibrations"]
+        srv2 = PredictionServer(port=0, state_dir=state)
+        try:
+            assert srv2.calibrations["persisted"].cal.to_dict() \
+                == cal.to_dict()
+        finally:
+            srv2.shutdown()
+
+    def test_corrupt_state_file_is_tolerated(self, tmp_path, capsys):
+        state = tmp_path / "state"
+        state.mkdir()
+        (state / "calibrations.json").write_text("{not json")
+        srv = PredictionServer(port=0, state_dir=str(state))
+        try:
+            assert srv.calibrations == {}
+        finally:
+            srv.shutdown()
+
+    def test_draining_server_sheds_posts_but_answers_gets(self):
+        srv = PredictionServer(port=0).start()
+        try:
+            client = PredictionClient(*srv.address, max_retries=0)
+            srv._draining = True       # the flag alone drives shedding
+            h = client.health()
+            assert h["draining"] is True and h["status"] == "draining"
+            with pytest.raises(errors.ServerOverloaded,
+                               match="draining"):
+                client.argmin(small_table("drain"), "b200")
+            with pytest.raises(errors.ServerOverloaded):
+                client.hardware_delete("b200")
+            srv._draining = False
+            client.close()
+        finally:
+            srv.shutdown()
+
+    def test_sigterm_drains_subprocess_and_snapshots_state(self,
+                                                           tmp_path):
+        from repro.core.microbench import MeasuredSuite
+        from repro.serve.subproc import start_server_subprocess
+        state = str(tmp_path / "state")
+        proc, host, port = start_server_subprocess(
+            ["--state-dir", state])
+        try:
+            client = PredictionClient(host, port, timeout=30.0)
+            hw = hardware.get("b200")
+            ws = [gemm_workload(f"d{i}", 512 * (i + 1), 512, 512)
+                  for i in range(5)]
+            eng = fresh_engine()
+            meas = [eng.predict(w, hw).total * 1.4 for w in ws]
+            client.calibrate(
+                MeasuredSuite("drain", ws, [float(m) for m in meas]),
+                "b200", register_as="drained_cal")
+            client.close()
+            proc.send_signal(signal.SIGTERM)
+            assert proc.wait(timeout=20) == 0
+            blob = json.loads(
+                (tmp_path / "state" / "calibrations.json").read_text())
+            assert "drained_cal" in blob["calibrations"]
+        finally:
+            if proc.poll() is None:
+                proc.kill()
+                proc.wait(timeout=10)
+
+
+# ---------------------------------------------------------------------------
+# coalescer failure isolation
+# ---------------------------------------------------------------------------
+
+class PoisonEngine(sweep.SweepEngine):
+    """Engine that refuses any table containing an fp64 row — the
+    deterministic stand-in for a request that fails mid-batch.  The
+    sentinel rides the precision column because it survives both the
+    wire round-trip and ``WorkloadTable.concat`` (row *names* do not:
+    fusing tables with different shared names drops them)."""
+
+    def predict_table(self, table, hw, **kw):
+        if "fp64" in {table.precision_vocab[c]
+                      for c in table.precision_codes}:
+            raise ValueError("poisoned row (fp64 sentinel)")
+        return super().predict_table(table, hw, **kw)
+
+
+def poison_table(name="POISON"):
+    return WorkloadTable.tile_lattice(
+        gemm_workload(name, 2048, 2048, 2048, precision="fp64"), TILES)
+
+
+class TestCoalescerIsolation:
+    def test_poisoned_request_fails_alone_direct(self):
+        # window forces the healthy + poisoned requests into one batch
+        engine = PoisonEngine()
+        co = Coalescer(engine, window_s=0.15)
+        try:
+            healthy = [small_table(f"ok{i}") for i in range(3)]
+            poisoned = poison_table()
+            results = {}
+            failures = {}
+
+            def run(key, table):
+                try:
+                    results[key] = co.submit("argmin", table, B200, None)
+                except BaseException as e:   # noqa: BLE001
+                    failures[key] = e
+
+            threads = [threading.Thread(target=run, args=(i, t))
+                       for i, t in enumerate(healthy + [poisoned])]
+            for t in threads:
+                t.start()
+            for t in threads:
+                t.join(timeout=30.0)
+            assert not any(t.is_alive() for t in threads)
+            # only the poisoned request failed, and with its own error
+            assert set(failures) == {3}
+            assert "poisoned" in str(failures[3])
+            assert co.stats["isolated_failures"] >= 1
+            # the healthy batchmates answered bit-identically to solo
+            for i, table in enumerate(healthy):
+                ref = sweep.argmin_table(table, B200,
+                                         engine=fresh_engine())
+                assert same_winner(results[i][0], ref)
+        finally:
+            co.close()
+
+    def test_poisoned_request_fails_alone_over_http(self):
+        srv = PredictionServer(port=0, engine=PoisonEngine(),
+                               coalesce_window_s=0.15).start()
+        try:
+            client = PredictionClient(*srv.address, max_retries=0)
+            healthy = [small_table(f"h{i}") for i in range(3)]
+            poisoned = poison_table()
+            results = {}
+            failures = {}
+
+            def run(key, table):
+                try:
+                    results[key] = client.argmin(table, "b200")
+                except BaseException as e:   # noqa: BLE001
+                    failures[key] = e
+
+            threads = [threading.Thread(target=run, args=(i, t))
+                       for i, t in enumerate(healthy + [poisoned])]
+            for t in threads:
+                t.start()
+            for t in threads:
+                t.join(timeout=30.0)
+            assert not any(t.is_alive() for t in threads)
+            assert set(failures) == {3}
+            assert isinstance(failures[3], codec.RemoteError)  # a 400
+            assert "poisoned" in str(failures[3])
+            for i, table in enumerate(healthy):
+                ref = sweep.argmin_table(table, B200,
+                                         engine=fresh_engine())
+                assert same_winner(results[i], ref)
+            client.close()
+        finally:
+            srv.shutdown()
+
+    def test_all_poisoned_batch_every_request_gets_the_error(self):
+        co = Coalescer(PoisonEngine(), window_s=0.1)
+        try:
+            failures = []
+
+            def run(table):
+                try:
+                    co.submit("argmin", table, B200, None)
+                except BaseException as e:   # noqa: BLE001
+                    failures.append(e)
+
+            threads = [threading.Thread(
+                target=run, args=(poison_table(f"POISON{i}"),))
+                for i in range(2)]
+            for t in threads:
+                t.start()
+            for t in threads:
+                t.join(timeout=30.0)
+            assert len(failures) == 2
+            assert all("poisoned" in str(e) for e in failures)
+        finally:
+            co.close()
+
+
+# ---------------------------------------------------------------------------
+# worker-pool straggler re-dispatch
+# ---------------------------------------------------------------------------
+
+@pytest.fixture
+def straggler_spec():
+    tiles = [TileConfig(bm, bn, bk) for bm in (64, 128, 256)
+             for bn in (64, 128, 256) for bk in (16, 32)]
+    return LatticeSpec.tile_lattice(gemm_base("straggle", 4096), tiles)
+
+
+@pytest.fixture
+def hook_cleanup():
+    yield
+    parallel._SHARD_FAULT_HOOK = None
+
+
+class TestStragglerRedispatch:
+    def test_hung_shard_redispatched_bit_identical(self, straggler_spec,
+                                                   hook_cleanup):
+        ref = sweep.argmin_stream(straggler_spec, B200, chunk_size=4)
+        hung = []
+
+        def hang_once(lo, hi):
+            if lo == 0 and not hung:
+                hung.append(True)
+                time.sleep(30.0)     # far past the straggler timeout
+
+        parallel._SHARD_FAULT_HOOK = hang_once
+        pool = parallel.WorkerPool(2, use_threads=True,
+                                   straggler_timeout_s=0.5)
+        try:
+            t0 = time.monotonic()
+            got = sweep.argmin_stream(straggler_spec, B200, chunk_size=4,
+                                      jobs=2, pool=pool)
+            elapsed = time.monotonic() - t0
+        finally:
+            parallel._SHARD_FAULT_HOOK = None
+            pool.close()
+        assert hung                     # the fault actually fired
+        assert same_winner(got, ref)    # re-dispatch is bit-identical
+        assert elapsed < 10.0           # timeout + in-parent rerun, not 30s
+
+    def test_genuine_worker_error_propagates_unchanged(self,
+                                                       straggler_spec,
+                                                       hook_cleanup):
+        def explode(lo, hi):
+            raise ValueError("genuinely broken shard")
+
+        parallel._SHARD_FAULT_HOOK = explode
+        pool = parallel.WorkerPool(2, use_threads=True,
+                                   straggler_timeout_s=5.0)
+        try:
+            with pytest.raises(ValueError, match="genuinely broken"):
+                sweep.argmin_stream(straggler_spec, B200, chunk_size=4,
+                                    jobs=2, pool=pool)
+        finally:
+            parallel._SHARD_FAULT_HOOK = None
+            pool.close()
+
+    def test_both_attempts_dying_raises_straggler_error(
+            self, straggler_spec, hook_cleanup):
+        seen = set()
+
+        def die_twice(lo, hi):
+            if lo == 0:
+                if (lo, hi) not in seen:
+                    seen.add((lo, hi))
+                    time.sleep(30.0)          # first attempt: hang
+                raise RuntimeError("re-dispatch died too")
+
+        parallel._SHARD_FAULT_HOOK = die_twice
+        pool = parallel.WorkerPool(2, use_threads=True,
+                                   straggler_timeout_s=0.5)
+        try:
+            with pytest.raises(parallel.StragglerError,
+                               match="failed twice"):
+                sweep.argmin_stream(straggler_spec, B200, chunk_size=4,
+                                    jobs=2, pool=pool)
+        finally:
+            parallel._SHARD_FAULT_HOOK = None
+            pool.close()
+
+    def test_no_timeout_means_no_behavior_change(self, straggler_spec):
+        # default (None) keeps the old semantics: wait forever, no
+        # re-dispatch machinery in the result path
+        ref = sweep.argmin_stream(straggler_spec, B200, chunk_size=4)
+        pool = parallel.WorkerPool(2, use_threads=True)
+        try:
+            got = sweep.argmin_stream(straggler_spec, B200, chunk_size=4,
+                                      jobs=2, pool=pool)
+        finally:
+            pool.close()
+        assert same_winner(got, ref)
+
+    def test_pool_recover_swaps_broken_executor(self):
+        pool = parallel.WorkerPool(2, use_threads=True)
+        try:
+            old = pool.executor
+            pool.recover(broken=old)
+            assert pool.executor is not old
+            # recover against a non-current executor is a no-op
+            current = pool.executor
+            pool.recover(broken=old)
+            assert pool.executor is current
+        finally:
+            pool.close()
