@@ -22,11 +22,22 @@ code regression fails all of them.  Fails (exit 1) on:
     boolean field and every dict-of-booleans field in a bench row is a
     correctness flag (bit-identity of fused/streamed/sharded/served
     reductions, cached-replay-beats-cold, O(chunk) streamed peak memory,
-    served answers matching in-process answers, and availability under
-    the serve bench's seeded chaos barrage —
+    served answers matching in-process answers — including
+    ``serve_binary_bit_identical`` / ``serve_dedup_bit_identical`` for
+    the framed persistent-socket transport and its cross-request dedup
+    — and availability under the serve bench's seeded chaos barrage:
     ``serve_chaos_all_completed`` / ``serve_chaos_all_correct`` assert
     every request survives injected stalls, truncations, bit flips and
-    severed connections via typed-error retries, bit-identically).
+    severed connections via typed-error retries, bit-identically),
+  * any boolean the committed baseline carries going *missing* from the
+    fresh run — a deleted or renamed flag must fail loudly, not silently
+    drop its gate.
+
+The serve suite's ``speedup_binary_vs_http_single`` ratio (binary
+pipelined single-row stream vs the HTTP single-row loop, timed against
+the same server in the same run) gates the binary transport's reason to
+exist; ``reqs_per_sec_binary_single`` rides the ``--absolute`` tier
+like every other absolute rate.
 
 Excluded from ratio gating: ratios against frozen cross-run constants
 (``speedup_table_vs_pr1_batch`` divides by a historical constant — an
@@ -73,8 +84,12 @@ def _gated_keys(absolute: bool, excluded):
     return gated
 
 
-def correctness_failures(fresh: dict):
-    """Every boolean field (and dict-of-boolean field) must be true."""
+def correctness_failures(fresh: dict, baseline: dict = ()):
+    """Every boolean field (and dict-of-boolean field) must be true —
+    and every boolean the committed baseline carries must still be
+    *present* in the fresh run.  Without the presence check, deleting a
+    bit-identity flag from a bench would silently drop its gate; a
+    renamed or removed flag must show up here as ``missing``."""
     failures = []
     for key, v in fresh.items():
         if isinstance(v, bool):
@@ -84,6 +99,9 @@ def correctness_failures(fresh: dict):
                 isinstance(x, bool) for x in v.values()):
             failures.extend(f"{key}[{sub}]"
                             for sub, ok in v.items() if not ok)
+    for key, v in dict(baseline).items():
+        if isinstance(v, bool) and not isinstance(fresh.get(key), bool):
+            failures.append(f"{key} (missing from fresh run)")
     return failures
 
 
@@ -98,7 +116,7 @@ def compare(fresh: dict, baseline: dict, tolerance: float, *,
         got = fresh.get(key)
         if got is None or got < base_val * (1.0 - tolerance):
             regressions.append((key, base_val, got))
-    return regressions, correctness_failures(fresh)
+    return regressions, correctness_failures(fresh, baseline)
 
 
 def merge_best(attempts):

@@ -20,6 +20,29 @@ the saved compute dominates loopback jitter — see ``replay_table``) and
 bit-identity flags against the in-process ``argmin_table`` /
 ``argmin_stream`` answers.
 
+A **binary transport** section measures the same single-row stream over
+the length-prefixed persistent-socket protocol (``--binary-port``, see
+``serve/README.md`` "Binary framing (v1)"):
+
+  binary sequential  the HTTP single-row loop's shape, reframed — one
+                     request/reply round-trip at a time on one
+                     persistent socket (no reconnects, no text headers,
+                     no Nagle/delayed-ACK stall)
+  binary pipelined   all N single-row requests written in one burst
+                     with distinct request ids, replies demuxed by id —
+                     the transport's intended operating mode; this is
+                     the ``reqs_per_sec_binary_single`` headline
+  dedup              N pipelined copies of one identical table — the
+                     coalescer's cross-request dedup prices the content
+                     once and answers every request from its own table
+                     (``serve_dedup_requests_saved`` /
+                     ``serve_dedup_rows_saved`` counters)
+
+``serve_binary_bit_identical`` / ``serve_dedup_bit_identical`` pin the
+binary and deduped answers to the in-process ones, and
+``speedup_binary_vs_http_single`` (a within-run ratio, immune to host
+speed) is gated by ``check_regression`` alongside the floors.
+
 An **availability-under-chaos** section replays a fixed request stream
 through ``repro.serve.chaos.ChaosProxy`` with a seeded fault barrage
 (one stall + a mixed delay/truncate/bitflip/sever schedule): every
@@ -52,6 +75,7 @@ from repro.serve.subproc import (start_server_subprocess as start_server,
                                  stop_server_subprocess as stop_server)
 
 N_SINGLE = 64          #: sequential single-row requests per round
+N_DEDUP = 32           #: identical pipelined requests in the dedup pass
 COALESCE_THREADS = 8   #: concurrent clients in the coalesced pass
 COALESCE_REQS = 8      #: small-table requests per concurrent client
 ROUNDS = 5
@@ -170,10 +194,14 @@ def run_bench() -> dict:
     spec = big_lattice()
     hw = hardware.B200
 
-    proc, host, port = start_server(["--jobs", "0"])
-    client = PredictionClient(host, port, timeout=600.0)
+    proc, host, port, bport = start_server(["--jobs", "0"], binary=True)
+    client = PredictionClient(host, port, timeout=600.0,
+                              transport="http")
+    bclient = PredictionClient(host, port, binary_port=bport,
+                               timeout=600.0)
     try:
         client.health()                       # connection warm-up
+        bclient.health()
 
         # parity references, computed in-process
         ref_win = sweep.argmin_table(table, hw,
@@ -202,10 +230,33 @@ def run_bench() -> dict:
             sweep.argmin_table(rtable, mi300a,
                                engine=sweep.SweepEngine(use_cache=False)))
 
+        # binary parity: the framed socket must answer bit-identically
+        # to both the in-process sweep and the HTTP route
+        single_refs = [
+            sweep.argmin_table(s, hw,
+                               engine=sweep.SweepEngine(use_cache=False))
+            for s in singles[:8]]
+        binary_ok = _same_winner(bclient.argmin(table, "b200"), ref_win)
+        for got, ref in zip(bclient.argmin_many(singles[:8], "b200"),
+                            single_refs):
+            binary_ok = binary_ok and _same_winner(got, ref)
+
+        # cross-request dedup: N pipelined copies of one table price
+        # once; every reply must still be the full bit-identical answer
+        before = bclient.cache_stats()
+        dedup_wins = bclient.argmin_many([table] * N_DEDUP, "b200")
+        after = bclient.cache_stats()
+        dedup_ok = all(_same_winner(w, ref_win) for w in dedup_wins)
+        dedup_reqs_saved = (after["coalescer_deduped_requests"]
+                            - before["coalescer_deduped_requests"])
+        dedup_rows_saved = (after["coalescer_dedup_rows_saved"]
+                            - before["coalescer_dedup_rows_saved"])
+
         # ---------------------------------------------- timed round-robin
         best = {"single": float("inf"), "batched": float("inf"),
                 "coalesced": float("inf"), "cold": float("inf"),
-                "replay": float("inf")}
+                "replay": float("inf"), "bin_seq": float("inf"),
+                "bin_pipe": float("inf")}
 
         clients = [PredictionClient(host, port, timeout=600.0)
                    for _ in range(COALESCE_THREADS)]
@@ -228,6 +279,17 @@ def run_bench() -> dict:
                 client.argmin(s, "b200", coalesce=False)
             best["single"] = min(best["single"],
                                  time.perf_counter() - t0)
+
+            t0 = time.perf_counter()
+            for s in singles:
+                bclient.argmin(s, "b200", coalesce=False)
+            best["bin_seq"] = min(best["bin_seq"],
+                                  time.perf_counter() - t0)
+
+            t0 = time.perf_counter()
+            bclient.argmin_many(singles, "b200")
+            best["bin_pipe"] = min(best["bin_pipe"],
+                                   time.perf_counter() - t0)
 
             t0 = time.perf_counter()
             client.argmin(table, "b200")
@@ -256,6 +318,8 @@ def run_bench() -> dict:
 
         stats = client.cache_stats()
         single_cfg_s = N_SINGLE / best["single"]
+        bin_seq_req_s = N_SINGLE / best["bin_seq"]
+        bin_pipe_req_s = N_SINGLE / best["bin_pipe"]
         batched_cfg_s = n / best["batched"]
         n_coal = sum(len(p) for p in small_parts)
         coal_cfg_s = n_coal / best["coalesced"]
@@ -271,8 +335,16 @@ def run_bench() -> dict:
             "serve_replay_s": best["replay"],
             "serve_coalesced_s": best["coalesced"],
             "serve_stream_s": t_stream,
+            "serve_binary_single_seq_s": best["bin_seq"],
+            "serve_binary_pipelined_s": best["bin_pipe"],
             "reqs_per_sec_serve_single": single_cfg_s,
             "reqs_per_sec_serve_coalesced": coal_req_s,
+            "reqs_per_sec_binary_single_seq": bin_seq_req_s,
+            "reqs_per_sec_binary_single": bin_pipe_req_s,
+            "speedup_binary_vs_http_single":
+                bin_pipe_req_s / single_cfg_s,
+            "speedup_binary_seq_vs_http_single":
+                bin_seq_req_s / single_cfg_s,
             "configs_per_sec_serve_single": single_cfg_s,
             "configs_per_sec_serve_batched": batched_cfg_s,
             "configs_per_sec_serve_coalesced": coal_cfg_s,
@@ -283,6 +355,12 @@ def run_bench() -> dict:
                 coal_cfg_s / single_cfg_s,
             "speedup_serve_replay_vs_cold": best["cold"] / best["replay"],
             "serve_batched_bit_identical": batched_ok,
+            "serve_binary_bit_identical": binary_ok,
+            "serve_dedup_bit_identical": dedup_ok,
+            "serve_dedup_requests_saved": int(dedup_reqs_saved),
+            "serve_dedup_rows_saved": int(dedup_rows_saved),
+            "serve_binary_no_protocol_errors": bool(
+                stats.get("binary_protocol_errors", 0) == 0),
             "serve_replay_bit_identical": replay_ok,
             "serve_coalesced_bit_identical": coalesced_ok,
             "serve_stream_bit_identical": stream_ok,
@@ -294,6 +372,7 @@ def run_bench() -> dict:
         }
     finally:
         client.close()
+        bclient.close()
         stop_server(proc)
 
 
@@ -309,6 +388,20 @@ def main() -> None:
           f"(second process, b200 stage model)")
     print(f"single-row loop : {row['serve_single_row_s'] * 1e3:8.1f} ms "
           f"({row['configs_per_sec_serve_single']:10.0f} cfg/s = req/s)")
+    print(f"binary seq      : "
+          f"{row['serve_binary_single_seq_s'] * 1e3:8.1f} ms "
+          f"({row['reqs_per_sec_binary_single_seq']:10.0f} req/s)  "
+          f"{row['speedup_binary_seq_vs_http_single']:.1f}x vs HTTP "
+          f"single-row")
+    print(f"binary pipelined: "
+          f"{row['serve_binary_pipelined_s'] * 1e3:8.1f} ms "
+          f"({row['reqs_per_sec_binary_single']:10.0f} req/s)  "
+          f"{row['speedup_binary_vs_http_single']:.1f}x vs HTTP "
+          f"single-row")
+    print(f"dedup (x{N_DEDUP})     : "
+          f"{row['serve_dedup_requests_saved']} requests deduped, "
+          f"{row['serve_dedup_rows_saved']} rows saved, "
+          f"bit_identical={row['serve_dedup_bit_identical']}")
     print(f"batched request : {row['serve_batched_s'] * 1e3:8.1f} ms "
           f"({row['configs_per_sec_serve_batched']:10.0f} cfg/s)  "
           f"{row['speedup_serve_batched_vs_single']:.1f}x vs single-row")
@@ -327,20 +420,24 @@ def main() -> None:
           f"({row['configs_per_sec_serve_stream']:10.0f} cfg/s)")
     print(f"bit-identical: batched={row['serve_batched_bit_identical']} "
           f"coalesced={row['serve_coalesced_bit_identical']} "
-          f"stream={row['serve_stream_bit_identical']}")
+          f"stream={row['serve_stream_bit_identical']} "
+          f"binary={row['serve_binary_bit_identical']}")
     print(f"chaos barrage   : {row['serve_chaos_requests']} reqs, "
           f"{row['serve_chaos_faults_injected']} faults injected, "
           f"{row['serve_chaos_completed_fraction'] * 100:.0f}% completed "
           f"in {row['serve_chaos_elapsed_s']:.2f} s, "
           f"all_correct={row['serve_chaos_all_correct']}")
     ok = (row["speedup_serve_batched_vs_single"] >= 3
+          and row["speedup_binary_vs_http_single"] >= 10
           and row["serve_batched_bit_identical"]
           and row["serve_coalesced_bit_identical"]
           and row["serve_stream_bit_identical"]
+          and row["serve_binary_bit_identical"]
+          and row["serve_dedup_bit_identical"]
           and row["serve_replay_not_slower"]
           and row["serve_chaos_all_correct"])
-    print("PASS (>=3x batched-vs-single, bit-identical, replay<=cold, "
-          "chaos-correct)" if ok else "FAIL")
+    print("PASS (>=3x batched-vs-single, >=10x binary-vs-http single, "
+          "bit-identical, replay<=cold, chaos-correct)" if ok else "FAIL")
 
 
 if __name__ == "__main__":

@@ -11,7 +11,11 @@ with ``repro.serve.PredictionClient``:
   3. eight client threads firing small per-shape lattices concurrently —
      the server coalesces them into fused columnar evaluations;
   4. a ~1M-row lazy ``LatticeSpec`` sent as a tiny plan (a few hundred
-     bytes on the wire) and streamed server-side in O(chunk) memory.
+     bytes on the wire) and streamed server-side in O(chunk) memory;
+  5. the framed persistent-socket transport (binary framing v1): the
+     server also opens ``--binary-port``, the client auto-negotiates it
+     via ``/v1/health``, and a burst of single-row requests is pipelined
+     over one socket — then deduped server-side when the tables repeat.
 
 Run:  PYTHONPATH=src python examples/serve_predictions.py
 """
@@ -32,7 +36,7 @@ SHAPES = [(2048 + 512 * s, 4096, 4096) for s in range(160)]
 
 
 def main():
-    proc, host, port = start_server_subprocess()
+    proc, host, port, bport = start_server_subprocess(binary=True)
     client = PredictionClient(host, port)
     try:
         print(f"server pid {proc.pid} at {host}:{port} -> "
@@ -92,6 +96,24 @@ def main():
         dt = time.perf_counter() - t0
         print(f"streamed {spec.n_rows:,}-row lattice server-side in "
               f"{dt:.2f} s -> {win.name} {win.total * 1e3:.3f} ms")
+
+        # -- 5. pipelined single-row bursts over the binary socket ------
+        singles = [WorkloadTable.tile_lattice(
+            gemm_workload(f"pipe{j}", 2048 + 128 * j, 4096, 4096,
+                          precision="fp16"), TILES[:1])
+            for j in range(16)]
+        t0 = time.perf_counter()
+        wins = client.argmin_many(singles, "b200")
+        dt_pipe = time.perf_counter() - t0
+        # repeat the burst: identical tables dedup into one evaluation
+        before = client.cache_stats()["coalescer_deduped_requests"]
+        client.argmin_many([singles[0]] * 16, "b200")
+        saved = (client.cache_stats()["coalescer_deduped_requests"]
+                 - before)
+        print(f"binary on port {bport}: 16 pipelined single-row argmins "
+              f"in {dt_pipe * 1e3:.1f} ms "
+              f"({len(wins) / max(dt_pipe, 1e-9):.0f} req/s); repeating "
+              f"one table 16x deduped {saved} request(s) server-side")
     finally:
         client.close()
         stop_server_subprocess(proc)

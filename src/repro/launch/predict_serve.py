@@ -4,7 +4,14 @@
     # start the server (ephemeral port prints on stdout)
     PYTHONPATH=src python -m repro.launch.predict_serve serve --port 8707
 
-    # query it from another shell / machine
+    # also open the framed persistent-socket transport (binary framing
+    # v1; --binary-port 0 picks an ephemeral port, printed as a second
+    # banner) and cap the coalescer's adaptive fused-row budget
+    PYTHONPATH=src python -m repro.launch.predict_serve serve \
+        --port 8707 --binary-port 8708 --max-fused-rows 65536
+
+    # query it from another shell / machine (--transport binary pins the
+    # framed socket; the default auto-negotiates via /v1/health)
     PYTHONPATH=src python -m repro.launch.predict_serve query health
     PYTHONPATH=src python -m repro.launch.predict_serve query argmin-demo \
         --hw b200 --gemm 8192,8192,8192

@@ -35,19 +35,48 @@ Fault tolerance (the full contract lives in ``serve/README.md``):
   a ``breaker_cooldown_s`` half-open probe succeeds.
 * **Auth** — ``auth_token`` is stamped on every request
   (``X-Auth-Token``) for servers gating their mutating endpoints.
+
+Transports: sweeps ride the length-prefixed binary protocol
+(:mod:`repro.serve.framing`) when the server offers one, falling back
+to HTTP otherwise.  ``transport="auto"`` (the default) probes
+``/v1/health`` once for an advertised ``binary_port``; ``"binary"``
+requires it; ``"http"`` never upgrades.  The binary path keeps one
+persistent socket per thread, supports **pipelining** (see
+:meth:`argmin_many`: many request ids in flight, replies demuxed by
+id), and carries the exact same deadline/backoff/circuit-breaker
+semantics — server faults arrive as typed in-band error frames instead
+of status codes, and every retryable case (severed socket, corrupt
+frame, overload shed) re-sends under the same budget rules as HTTP.
 """
 from __future__ import annotations
 
 import argparse
 import http.client
 import random
+import socket
 import threading
 import time
-from typing import Optional, Sequence, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
 from . import codec, errors
+from .framing import (FLAG_ERROR, OP_CACHE_STATS, OP_HEALTH, OP_SWEEP,
+                      FrameParser, pack_frame)
+
+#: server fault classes rebuilt from binary error frames by name —
+#: parity with the HTTP status mapping (401/429/503)
+_FAULT_BY_NAME = {
+    "Unauthorized": errors.Unauthorized,
+    "RateLimited": errors.RateLimited,
+    "ServerOverloaded": errors.ServerOverloaded,
+    "DeadlineExceeded": errors.DeadlineExceeded,
+}
+
+#: faults the binary path retries in-band, mirroring HTTP's 429/503
+#: handling (DeadlineExceeded replies only happen when the caller set a
+#: budget, so the caller's own deadline bounds the retries)
+_RETRYABLE_NAMES = ("RateLimited", "ServerOverloaded", "DeadlineExceeded")
 
 
 class _CircuitBreaker:
@@ -103,7 +132,13 @@ class PredictionClient:
                  backoff_cap_s: float = 2.0,
                  breaker_threshold: int = 3,
                  breaker_cooldown_s: float = 1.0,
-                 auth_token: Optional[str] = None):
+                 auth_token: Optional[str] = None,
+                 transport: str = "auto",
+                 binary_port: Optional[int] = None,
+                 http_fallback: bool = True):
+        if transport not in ("auto", "binary", "http"):
+            raise ValueError(f"transport must be 'auto', 'binary' or "
+                             f"'http', got {transport!r}")
         self.host = host
         self.port = port
         self.timeout = timeout
@@ -112,12 +147,23 @@ class PredictionClient:
         self.backoff_base_s = float(backoff_base_s)
         self.backoff_cap_s = float(backoff_cap_s)
         self.auth_token = auth_token
+        self.transport = transport
+        #: explicit binary port skips the health probe; ``None`` under
+        #: auto/binary means "discover via /v1/health"
+        self._binary_port = binary_port
+        self._http_fallback = bool(http_fallback)
         self._breaker = _CircuitBreaker(breaker_threshold,
                                         breaker_cooldown_s)
         self._rng = random.Random()
         self._local = threading.local()
         self._conns: set = set()      # every thread's conn, for close()
         self._conns_lock = threading.Lock()
+        self._bin_lock = threading.Lock()
+        self._bin_resolved = False
+        self._bin_target: Optional[Tuple[str, int]] = None
+        #: set when auto-negotiation downgrades to HTTP for good (binary
+        #: connect failed but HTTP works — e.g. a proxy in the way)
+        self._bin_disabled = False
 
     # ------------------------------------------------------------ plumbing
     def _conn(self) -> http.client.HTTPConnection:
@@ -285,6 +331,267 @@ class PredictionClient:
             pass
         return "(no server detail)"
 
+    # ---------------------------------------------------- binary transport
+    def _binary_target(self, deadline_s: Optional[float] = None
+                       ) -> Optional[Tuple[str, int]]:
+        """The binary address to use, or ``None`` for HTTP.  Resolved
+        once: an explicit ``binary_port`` wins; otherwise ``auto`` and
+        ``binary`` probe ``/v1/health`` for the advertised port.
+        ``transport="binary"`` raises if the server offers none.
+        ``deadline_s`` bounds the one-time probe so a stalled server
+        can't eat more than the caller's budget before the caller's own
+        attempt (which is charged for the probe's time) even starts."""
+        if self.transport == "http" or self._bin_disabled:
+            return None
+        with self._bin_lock:
+            if self._bin_resolved:
+                return self._bin_target
+            if self._binary_port is not None:
+                self._bin_target = (self.host, int(self._binary_port))
+                self._bin_resolved = True
+                return self._bin_target
+            try:
+                port = codec.decode_json(self._request(
+                    "GET", "/v1/health",
+                    deadline_s=deadline_s)).get("binary_port")
+            except Exception:                # noqa: BLE001
+                if self.transport == "binary":
+                    raise
+                # can't probe — leave unresolved so the sweep's own HTTP
+                # attempt surfaces the real connectivity error
+                return None
+            if port is None and self.transport == "binary":
+                raise RuntimeError(
+                    f"transport='binary' but the server at {self.host}:"
+                    f"{self.port} advertises no binary port")
+            self._bin_target = (self.host, int(port)) if port else None
+            self._bin_resolved = True
+            return self._bin_target
+
+    def _bconn(self, remaining: Optional[float]) -> socket.socket:
+        """The calling thread's persistent binary socket (breaker-gated
+        connect on first use, like the HTTP path)."""
+        sock = getattr(self._local, "bsock", None)
+        if sock is None:
+            self._breaker.admit()
+            connect_t = self.connect_timeout
+            if remaining is not None:
+                connect_t = min(connect_t, max(1e-3, remaining))
+            try:
+                sock = socket.create_connection(self._bin_target,
+                                                timeout=connect_t)
+            except OSError:
+                self._breaker.failure()
+                raise
+            self._breaker.success()
+            # one sendall per frame + NODELAY: no Nagle/delayed-ACK
+            # stall (the HTTP path's split writes pay ~40 ms here)
+            sock.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
+            self._local.bsock = sock
+            self._local.bparser = FrameParser()
+            self._local.bgot: Dict[int, object] = {}
+            self._local.bnext_id = 0
+        with self._conns_lock:
+            self._conns.add(sock)
+        return sock
+
+    def _discard_bconn(self) -> None:
+        """Drop the calling thread's binary socket.  Any replies still
+        in flight on it are lost — the retry loop re-sends under fresh
+        ids, so nothing can demux onto a stale request."""
+        sock = getattr(self._local, "bsock", None)
+        if sock is not None:
+            with self._conns_lock:
+                self._conns.discard(sock)
+            try:
+                sock.close()
+            finally:
+                self._local.bsock = None
+                self._local.bparser = None
+                self._local.bgot = {}
+
+    def _read_frame_into(self, expected: set) -> None:
+        """Read from the thread's binary socket until at least one more
+        frame lands in ``self._local.bgot``.  A reply id outside
+        ``expected`` means the stream can no longer be trusted."""
+        st = self._local
+        before = len(st.bgot)
+        while len(st.bgot) == before:
+            data = st.bsock.recv(1 << 18)
+            if not data:
+                raise ConnectionError(
+                    "server closed the binary connection")
+            st.bparser.feed(data)
+            for frame in st.bparser.frames():
+                if frame.req_id not in expected:
+                    raise codec.WireFormatError(
+                        f"reply for unknown request id {frame.req_id} — "
+                        f"stream desynchronized")
+                st.bgot[frame.req_id] = frame
+
+    def _rebuild_fault(self, payload: bytes) -> BaseException:
+        """Typed exception from an error frame's payload (parity with
+        the HTTP status mapping + ``raise_if_error`` message shape)."""
+        name, message, retry_after = codec.decode_error(payload)
+        cls = _FAULT_BY_NAME.get(name)
+        if cls is None:
+            return codec.RemoteError(f"{name}: {message}")
+        if name in ("RateLimited", "ServerOverloaded"):
+            return cls(message, retry_after_s=(0.05 if retry_after is None
+                                               else retry_after))
+        return cls(message)
+
+    def _request_binary_many(self, bodies: List[bytes], *,
+                             deadline_s: Optional[float] = None
+                             ) -> List[bytes]:
+        """Pipelined sweep round-trips: every outstanding request goes
+        out in ONE write burst, replies demux by id in any order.  Same
+        budget rules as ``_request``: one deadline computed at entry,
+        retries/backoff/breaker shared with HTTP."""
+        deadline = None if deadline_s is None \
+            else time.monotonic() + float(deadline_s)
+        results: List[Optional[bytes]] = [None] * len(bodies)
+        outstanding = list(range(len(bodies)))
+        last_exc: Optional[BaseException] = None
+        attempt = 0
+        while outstanding:
+            remaining = None
+            if deadline is not None:
+                remaining = deadline - time.monotonic()
+                if remaining <= 0:
+                    raise errors.DeadlineExceeded(
+                        f"deadline_s={deadline_s:g} spent after "
+                        f"{attempt} attempt(s), "
+                        f"{len(outstanding)} reply(ies) outstanding"
+                    ) from last_exc
+            try:
+                outstanding, retry_after, fault = self._bin_round(
+                    bodies, outstanding, results, remaining)
+            except (OSError, ConnectionError) as e:
+                self._discard_bconn()
+                if deadline is not None and time.monotonic() >= deadline:
+                    raise errors.DeadlineExceeded(
+                        f"deadline_s={deadline_s:g} expired during "
+                        f"attempt {attempt + 1} ({type(e).__name__})"
+                    ) from e
+                last_exc = e
+                attempt = self._backoff_or_raise(attempt, e, None,
+                                                 deadline)
+                continue
+            except codec.WireFormatError as e:
+                # reply corrupted or stream desynced: the socket's frame
+                # offsets are unusable — rebuild and re-ask (idempotent)
+                self._discard_bconn()
+                last_exc = e
+                attempt = self._backoff_or_raise(attempt, e, None,
+                                                 deadline)
+                continue
+            if outstanding:
+                # only retryable in-band faults (overload shed, rate
+                # limit) remain — back off like HTTP's 429/503 handling
+                last_exc = fault
+                attempt = self._backoff_or_raise(attempt, fault,
+                                                 retry_after, deadline)
+        return results                       # type: ignore[return-value]
+
+    def _bin_round(self, bodies, outstanding, results, remaining):
+        """One pipelined attempt over the current socket.  Returns
+        ``(still_outstanding, retry_after, fault)``; raises transport /
+        wire errors for the caller's retry loop."""
+        sock = self._bconn(remaining)
+        st = self._local
+        read_t = self.timeout
+        if remaining is not None:
+            read_t = min(read_t, max(1e-3, remaining))
+        sock.settimeout(read_t)
+        ids = {}
+        burst = bytearray()
+        for idx in outstanding:
+            req_id = st.bnext_id
+            st.bnext_id += 1
+            ids[req_id] = idx
+            burst += pack_frame(OP_SWEEP, req_id, bodies[idx],
+                                deadline_s=remaining or 0.0)
+        sock.sendall(burst)
+        expected = set(ids)
+        still, retry_after, fault = [], None, None
+        pending = set(ids)
+        while pending:
+            self._read_frame_into(expected)
+            for req_id in list(pending):
+                frame = st.bgot.pop(req_id, None)
+                if frame is None:
+                    continue
+                pending.discard(req_id)
+                idx = ids[req_id]
+                if frame.flags & FLAG_ERROR:
+                    exc = self._rebuild_fault(frame.payload)
+                    if type(exc).__name__ in _RETRYABLE_NAMES:
+                        still.append(idx)
+                        ra = getattr(exc, "retry_after_s", None)
+                        if ra is not None:
+                            retry_after = ra if retry_after is None \
+                                else max(retry_after, ra)
+                        fault = exc
+                        continue
+                    raise exc
+                try:
+                    codec.raise_if_error(frame.payload)  # CRC check
+                except codec.RemoteError:
+                    # an ERROR payload without FLAG_ERROR: the frame
+                    # header and payload disagree (header bit flip) —
+                    # trust neither
+                    raise codec.WireFormatError(
+                        "error payload in a success-flagged frame — "
+                        "frame header untrustworthy") from None
+                results[idx] = frame.payload
+        still.sort()
+        return still, retry_after, fault
+
+    def _request_binary(self, body: bytes, *,
+                        deadline_s: Optional[float] = None) -> bytes:
+        return self._request_binary_many([body],
+                                         deadline_s=deadline_s)[0]
+
+    def _simple_binary(self, op: int, *,
+                       deadline_s: Optional[float] = None) -> bytes:
+        """Health/stats over the binary transport (no retry loop
+        subtleties needed beyond the shared one: reuse the sweep path's
+        machinery with an empty payload)."""
+        deadline = None if deadline_s is None \
+            else time.monotonic() + float(deadline_s)
+        last_exc: Optional[BaseException] = None
+        attempt = 0
+        while True:
+            remaining = None
+            if deadline is not None:
+                remaining = deadline - time.monotonic()
+                if remaining <= 0:
+                    raise errors.DeadlineExceeded(
+                        f"deadline_s={deadline_s:g} spent after "
+                        f"{attempt} attempt(s)") from last_exc
+            try:
+                sock = self._bconn(remaining)
+                st = self._local
+                read_t = self.timeout
+                if remaining is not None:
+                    read_t = min(read_t, max(1e-3, remaining))
+                sock.settimeout(read_t)
+                req_id = st.bnext_id
+                st.bnext_id += 1
+                sock.sendall(pack_frame(op, req_id, b"",
+                                        deadline_s=remaining or 0.0))
+                self._read_frame_into({req_id})
+                frame = st.bgot.pop(req_id)
+                if frame.flags & FLAG_ERROR:
+                    raise self._rebuild_fault(frame.payload)
+                return frame.payload
+            except (OSError, ConnectionError, codec.WireFormatError) as e:
+                self._discard_bconn()
+                last_exc = e
+                attempt = self._backoff_or_raise(attempt, e, None,
+                                                 deadline)
+
     def close(self) -> None:
         """Close every thread's persistent connection (the per-thread
         sockets a shared client accumulates), not just the caller's.
@@ -307,10 +614,20 @@ class PredictionClient:
 
     # ------------------------------------------------------------- queries
     def health(self, *, deadline_s: Optional[float] = None) -> dict:
+        if self.transport == "binary" and self._binary_target(deadline_s):
+            return codec.decode_json(self._simple_binary(
+                OP_HEALTH, deadline_s=deadline_s))
         return codec.decode_json(
             self._request("GET", "/v1/health", deadline_s=deadline_s))
 
     def cache_stats(self, *, deadline_s: Optional[float] = None) -> dict:
+        """One stats schema regardless of transport: the binary
+        ``OP_CACHE_STATS`` frame and ``GET /v1/cache_stats`` return the
+        identical document (engine cache + coalescer dedup/shed/
+        isolation counters + binary frontend counters)."""
+        if self.transport == "binary" and self._binary_target(deadline_s):
+            return codec.decode_json(self._simple_binary(
+                OP_CACHE_STATS, deadline_s=deadline_s))
         return codec.decode_json(
             self._request("GET", "/v1/cache_stats",
                           deadline_s=deadline_s))
@@ -323,41 +640,99 @@ class PredictionClient:
     def _sweep(self, op: str, source, hw: str,
                deadline_s: Optional[float], **kw) -> bytes:
         body = codec.encode_request(op, source, hw=hw, **kw)
+        t0 = time.monotonic()
+        if self._binary_target(deadline_s) is not None:
+            try:
+                return self._request_binary(body, deadline_s=deadline_s)
+            except (OSError, ConnectionError):
+                # the binary port is unreachable (stale advertisement,
+                # proxy in the way): under auto-negotiation downgrade to
+                # HTTP for good rather than paying this again per call
+                if self.transport != "auto" or not self._http_fallback:
+                    raise
+                self._discard_bconn()
+                self._bin_disabled = True
+        if deadline_s is not None:
+            # one budget per call: the probe / failed binary attempt
+            # already spent part of it
+            deadline_s -= time.monotonic() - t0
         return self._request("POST", f"/v1/{op}", body,
                              deadline_s=deadline_s)
+
+    def argmin_many(self, tables, hw: str, *,
+                    model: Optional[str] = None,
+                    coalesce: bool = True,
+                    calibration: Optional[str] = None,
+                    max_fused_rows: Optional[int] = None,
+                    deadline_s: Optional[float] = None):
+        """Pipelined ``argmin`` over many tables: every request goes out
+        in one burst on the thread's binary socket and the coalescer
+        fuses (and dedups) them into shared evaluations — the intended
+        operating mode of the binary transport.  Falls back to
+        sequential HTTP calls when no binary port is available.
+        Returns one ``SweepWinner`` per table, in order."""
+        tables = list(tables)
+        bodies = [codec.encode_request(
+            "argmin", t, hw=hw, model=model, coalesce=coalesce,
+            calibration=calibration, max_fused_rows=max_fused_rows)
+            for t in tables]
+        t0 = time.monotonic()
+        if self._binary_target(deadline_s) is not None:
+            try:
+                replies = self._request_binary_many(
+                    bodies, deadline_s=deadline_s)
+                return [codec.decode_winners(d)[0] for d in replies]
+            except (OSError, ConnectionError):
+                if self.transport != "auto" or not self._http_fallback:
+                    raise
+                self._discard_bconn()
+                self._bin_disabled = True
+        if deadline_s is not None:
+            deadline_s = deadline_s - (time.monotonic() - t0)
+        return [codec.decode_winners(self._request(
+            "POST", "/v1/argmin", b, deadline_s=deadline_s))[0]
+            for b in bodies]
 
     def predict_totals(self, source, hw: str, *,
                        model: Optional[str] = None,
                        chunk_size: Optional[int] = None, jobs=None,
                        coalesce: bool = True,
                        calibration: Optional[str] = None,
+                       max_fused_rows: Optional[int] = None,
                        deadline_s: Optional[float] = None) -> np.ndarray:
         """Every row's total seconds (the ``predict_table(...).totals``
         column, served).  ``calibration`` names a server-side calibration
-        (see :meth:`calibrate`) whose multipliers scale the totals."""
+        (see :meth:`calibrate`) whose multipliers scale the totals.
+        ``max_fused_rows`` caps the estimated row-cost of any coalesced
+        batch this request joins (a hint — clamped server-side)."""
         data = self._sweep("predict_table", source, hw, deadline_s,
                            model=model, chunk_size=chunk_size, jobs=jobs,
-                           coalesce=coalesce, calibration=calibration)
+                           coalesce=coalesce, calibration=calibration,
+                           max_fused_rows=max_fused_rows)
         return codec.decode_totals(data)
 
     def argmin(self, source, hw: str, *, model: Optional[str] = None,
                chunk_size: Optional[int] = None, jobs=None,
                coalesce: bool = True, calibration: Optional[str] = None,
+               max_fused_rows: Optional[int] = None,
                deadline_s: Optional[float] = None):
         """The cheapest configuration (a ``SweepWinner``)."""
         data = self._sweep("argmin", source, hw, deadline_s, model=model,
                            chunk_size=chunk_size, jobs=jobs,
-                           coalesce=coalesce, calibration=calibration)
+                           coalesce=coalesce, calibration=calibration,
+                           max_fused_rows=max_fused_rows)
         return codec.decode_winners(data)[0]
 
     def topk(self, source, hw: str, k: int, *,
              model: Optional[str] = None,
              chunk_size: Optional[int] = None, jobs=None,
              coalesce: bool = True, calibration: Optional[str] = None,
+             max_fused_rows: Optional[int] = None,
              deadline_s: Optional[float] = None):
         data = self._sweep("topk", source, hw, deadline_s, model=model,
                            k=int(k), chunk_size=chunk_size, jobs=jobs,
-                           coalesce=coalesce, calibration=calibration)
+                           coalesce=coalesce, calibration=calibration,
+                           max_fused_rows=max_fused_rows)
         return codec.decode_winners(data)
 
     def pareto(self, source, hw: str, *,
@@ -365,11 +740,13 @@ class PredictionClient:
                model: Optional[str] = None,
                chunk_size: Optional[int] = None, jobs=None,
                coalesce: bool = True, calibration: Optional[str] = None,
+               max_fused_rows: Optional[int] = None,
                deadline_s: Optional[float] = None):
         data = self._sweep("pareto", source, hw, deadline_s, model=model,
                            objectives=tuple(objectives),
                            chunk_size=chunk_size, jobs=jobs,
-                           coalesce=coalesce, calibration=calibration)
+                           coalesce=coalesce, calibration=calibration,
+                           max_fused_rows=max_fused_rows)
         return codec.decode_winners(data)
 
     # ------------------------------------------------- hardware library
@@ -444,6 +821,10 @@ def main(argv=None) -> None:
         description="Query a running prediction server")
     ap.add_argument("--host", default="127.0.0.1")
     ap.add_argument("--port", type=int, default=8707)
+    ap.add_argument("--transport", choices=("auto", "binary", "http"),
+                    default="auto",
+                    help="auto probes /v1/health for a binary port and "
+                         "upgrades sweeps when one is advertised")
     sub = ap.add_subparsers(dest="cmd", required=True)
     sub.add_parser("health")
     sub.add_parser("cache-stats")
@@ -457,7 +838,8 @@ def main(argv=None) -> None:
     demo.add_argument("--precision", default="fp16")
     args = ap.parse_args(argv)
 
-    client = PredictionClient(args.host, args.port)
+    client = PredictionClient(args.host, args.port,
+                              transport=args.transport)
     if args.cmd == "health":
         print(client.health())
     elif args.cmd == "cache-stats":

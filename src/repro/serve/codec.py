@@ -382,12 +382,16 @@ def encode_request(op: str, source, *, hw: str,
                    chunk_size: Optional[int] = None,
                    jobs=None,
                    coalesce: bool = True,
-                   calibration: Optional[str] = None) -> bytes:
+                   calibration: Optional[str] = None,
+                   max_fused_rows: Optional[int] = None) -> bytes:
     """One prediction request: an operation + its parameters + the sweep
     source (a built ``WorkloadTable`` or a lazy ``LatticeSpec``).
     Hardware travels by registry name — parameter files live server-side.
     ``calibration`` names a server-side calibration (registered via
     ``/v1/calibrate``) whose multipliers scale the predictions.
+    ``max_fused_rows`` is a coalescing hint: cap the estimated row-cost
+    budget of any fused batch this request joins (clamped server-side —
+    a hint can tighten the server's bound, never raise it).
     """
     if op not in REQUEST_OPS:
         raise ValueError(f"unknown op {op!r}; valid: {REQUEST_OPS}")
@@ -399,6 +403,11 @@ def encode_request(op: str, source, *, hw: str,
         # only stamped when used: v2 request metas without calibration
         # stay byte-identical to v1 ones
         meta["calibration"] = str(calibration)
+    if max_fused_rows is not None:
+        if int(max_fused_rows) < 1:
+            raise ValueError(
+                f"max_fused_rows must be >= 1, got {max_fused_rows}")
+        meta["max_fused_rows"] = int(max_fused_rows)
     sections: List[Tuple[bytes, Buf]] = [(b"meta", _json_bytes(meta))]
     if isinstance(source, WorkloadTable):
         sections.append((b"tabl", encode_table(source)))
@@ -643,8 +652,31 @@ class RemoteError(RuntimeError):
 
 
 def encode_error(exc: BaseException) -> bytes:
-    return _pack(MSG_ERROR, [(b"meta", _json_bytes(
-        {"error": type(exc).__name__, "message": str(exc)}))])
+    meta = {"error": type(exc).__name__, "message": str(exc)}
+    # ServeFault retry hints travel in-band: the binary transport has no
+    # Retry-After header, so the error payload itself carries the hint
+    # (additive key — older decoders ignore it)
+    retry_after = getattr(exc, "retry_after_s", None)
+    if retry_after is not None:
+        meta["retry_after_s"] = float(retry_after)
+    return _pack(MSG_ERROR, [(b"meta", _json_bytes(meta))])
+
+
+def decode_error(data: Buf) -> Tuple[str, str, Optional[float]]:
+    """Decode an ERROR message to ``(class name, message,
+    retry_after_s | None)`` without raising it — the binary client uses
+    this to rebuild the server's typed fault (``ServerOverloaded`` et
+    al. carry their retryability in the class)."""
+    meta = _meta(_expect(data, MSG_ERROR, "error"))
+    retry_after = meta.get("retry_after_s")
+    if retry_after is not None:
+        try:
+            retry_after = float(retry_after)
+        except (TypeError, ValueError):
+            raise WireFormatError(
+                f"bad retry_after_s {retry_after!r}") from None
+    return (str(meta.get("error", "Error")), str(meta.get("message", "")),
+            retry_after)
 
 
 def raise_if_error(data: Buf) -> None:

@@ -100,9 +100,18 @@ DRAIN_RETRY_AFTER_S = 1.0
 #: deterministic fusion (tests) or on high-RTT links.
 DEFAULT_COALESCE_WINDOW_S = 0.0
 
-#: fused evaluations stop growing past this many rows — a coalesced batch
-#: should stay LLC-friendly, not become an accidental materialization
+#: fused evaluations stop growing past this estimated row-cost budget —
+#: a coalesced batch should stay LLC-friendly, not become an accidental
+#: materialization.  The budget is in *vectorized-row units*: a plain row
+#: costs 1 unit, a scalar-fallback row costs ``SCALAR_ROW_COST`` (so a
+#: batch of expensive rows fuses ~50x fewer rows and stays inside the
+#: same latency envelope as a vectorized one)
 MAX_FUSED_ROWS = 262_144
+
+#: estimated cost of one scalar-fallback row (explicit hit-rate rows take
+#: the wavefront model's per-row latency walk, ~10us vs ~0.2us
+#: vectorized) relative to a vectorized row
+SCALAR_ROW_COST = 50
 
 CONTENT_TYPE = "application/x-repro-wire"
 
@@ -111,16 +120,24 @@ class _Pending:
     """One in-flight table request parked in the coalescer."""
 
     __slots__ = ("op", "table", "k", "objectives", "event", "result",
-                 "error", "deadline")
+                 "error", "deadline", "max_rows", "on_done")
 
     def __init__(self, op: str, table: WorkloadTable, k: Optional[int],
                  objectives: Optional[Tuple[str, ...]],
-                 deadline: Optional[float] = None):
+                 deadline: Optional[float] = None,
+                 max_rows: Optional[int] = None,
+                 on_done=None):
         self.op = op
         self.table = table
         self.k = k
         self.objectives = objectives
         self.deadline = deadline          # time.monotonic() cutoff or None
+        #: per-request fused-batch budget hint (clamped to the server's
+        #: bound — a hint tightens, never raises)
+        self.max_rows = max_rows
+        #: completion callback for event-loop callers (invoked on the
+        #: coalescer thread after result/error is set)
+        self.on_done = on_done
         self.event = threading.Event()
         self.result = None
         self.error: Optional[BaseException] = None
@@ -191,6 +208,7 @@ class Coalescer:
         self._closed = False
         self.stats = {"requests": 0, "batches": 0, "fused_evaluations": 0,
                       "coalesced_requests": 0, "fused_rows": 0,
+                      "deduped_requests": 0, "dedup_rows_saved": 0,
                       "shed_overload": 0, "shed_deadline": 0,
                       "isolated_failures": 0}
         self._thread = threading.Thread(target=self._loop, daemon=True,
@@ -198,12 +216,20 @@ class Coalescer:
         self._thread.start()
 
     # ---------------------------------------------------------- client side
-    def submit(self, op: str, table: WorkloadTable, hw, model: Optional[str],
-               k: Optional[int] = None,
-               objectives: Optional[Tuple[str, ...]] = None,
-               calibration: Optional[_NamedCalibration] = None,
-               deadline: Optional[float] = None):
-        req = _Pending(op, table, k, objectives, deadline)
+    def submit_async(self, op: str, table: WorkloadTable, hw,
+                     model: Optional[str] = None, *,
+                     k: Optional[int] = None,
+                     objectives: Optional[Tuple[str, ...]] = None,
+                     calibration: Optional[_NamedCalibration] = None,
+                     deadline: Optional[float] = None,
+                     max_rows: Optional[int] = None,
+                     on_done=None) -> _Pending:
+        """Park a request without blocking: the returned ``_Pending``'s
+        ``event`` fires (and ``on_done`` runs, on the coalescer thread)
+        once ``result``/``error`` is set.  This is the binary front end's
+        entry point — its event loop must never block on an evaluation."""
+        req = _Pending(op, table, k, objectives, deadline,
+                       max_rows=max_rows, on_done=on_done)
         group = (sweep.hardware_key(hw), model or sweep.default_route(hw),
                  calibration.name if calibration else None)
         with self._cv:
@@ -219,10 +245,34 @@ class Coalescer:
             self._q.append((group, hw, model, calibration, req))
             self.stats["requests"] += 1
             self._cv.notify()
+        return req
+
+    def submit(self, op: str, table: WorkloadTable, hw, model: Optional[str],
+               k: Optional[int] = None,
+               objectives: Optional[Tuple[str, ...]] = None,
+               calibration: Optional[_NamedCalibration] = None,
+               deadline: Optional[float] = None,
+               max_rows: Optional[int] = None):
+        req = self.submit_async(op, table, hw, model, k=k,
+                                objectives=objectives,
+                                calibration=calibration, deadline=deadline,
+                                max_rows=max_rows)
         req.event.wait()
         if req.error is not None:
             raise req.error
         return req.result
+
+    def _finish(self, r: _Pending) -> None:
+        """Fire a parked request's completion: event first (blocking
+        submitters wake), then the event-loop callback.  A callback that
+        throws must not kill the coalescer thread."""
+        r.event.set()
+        cb = r.on_done
+        if cb is not None:
+            try:
+                cb(r)
+            except Exception:                # noqa: BLE001
+                pass
 
     # ---------------------------------------------------------- worker side
     def _loop(self) -> None:
@@ -256,20 +306,41 @@ class Coalescer:
                 for r in reqs:
                     if not r.event.is_set():
                         r.error = e
-                        r.event.set()
+                        self._finish(r)
+
+    @staticmethod
+    def _est_cost(table: WorkloadTable) -> int:
+        """Estimated evaluation cost of a table in vectorized-row units.
+        Rows with explicit hit rates take the wavefront model's scalar
+        latency-walk fallback (~``SCALAR_ROW_COST``x a vectorized row), so
+        a fused batch of them must stay ~50x smaller to hit the same
+        latency budget."""
+        if table.hit_rates is None:
+            return len(table)
+        n_scalar = sum(1 for h in table.hit_rates if h)
+        return len(table) + (SCALAR_ROW_COST - 1) * n_scalar
 
     def _run_group(self, hw, model: Optional[str],
                    calibration: Optional[_NamedCalibration],
                    reqs: List[_Pending]) -> None:
-        # split oversized groups so one fused evaluation stays bounded
+        # split oversized groups so one fused evaluation stays inside the
+        # adaptive cost budget (estimated units, not raw rows); a member's
+        # ``max_rows`` hint tightens the budget for the batch it joins —
+        # it is clamped to the server bound, never raises it
         start = 0
         while start < len(reqs):
-            rows = 0
+            budget = float(self.max_fused_rows)
+            cost = 0
             end = start
-            while end < len(reqs) and (
-                    end == start
-                    or rows + len(reqs[end].table) <= self.max_fused_rows):
-                rows += len(reqs[end].table)
+            while end < len(reqs):
+                r = reqs[end]
+                b = budget if r.max_rows is None \
+                    else min(budget, float(r.max_rows))
+                c = self._est_cost(r.table)
+                if end > start and cost + c > b:
+                    break
+                budget = b
+                cost += c
                 end += 1
             self._run_fused(hw, model, calibration, reqs[start:end])
             start = end
@@ -288,50 +359,84 @@ class Coalescer:
                 r.error = errors.DeadlineExceeded(
                     "request deadline expired while queued — result would "
                     "arrive after the client stopped waiting")
-                r.event.set()
+                self._finish(r)
             else:
                 live.append(r)
         if not live:
             return
-        if len(live) == 1:
-            # the common serial case keeps the memoizing path: an identical
-            # replayed sweep is one content-token hit
-            self._run_solo(live[0], hw, model, cal)
+        # cross-request dedup: requests whose tables share a content token
+        # (within this group the hardware/route/calibration already match)
+        # price once.  The token ignores row names — exactly like the memo
+        # cache — and each request is answered from its OWN table, so
+        # names stay per-request and answers remain bit-identical.
+        order: List[Tuple] = []            # unique tokens, arrival order
+        dedup: Dict[Tuple, List[_Pending]] = {}
+        for r in live:
+            tok = r.table.content_token()
+            if tok in dedup:
+                dedup[tok].append(r)
+            else:
+                dedup[tok] = [r]
+                order.append(tok)
+        n_dup = len(live) - len(order)
+        if n_dup:
+            self.stats["deduped_requests"] += n_dup
+            self.stats["dedup_rows_saved"] += sum(
+                len(r.table) for tok in order for r in dedup[tok][1:])
+        if len(order) == 1:
+            # one distinct table (a lone request, or all duplicates): the
+            # memoizing solo path — identical replayed sweeps stay
+            # whole-table content-token hits, and concurrent duplicates
+            # now share one evaluation instead of fusing into 2N rows
+            self._run_solo(dedup[order[0]], hw, model, cal)
             return
-        fused = WorkloadTable.concat([r.table for r in live])
+        fused = WorkloadTable.concat([dedup[tok][0].table for tok in order])
         try:
             res = self.engine.predict_table(fused, hw, model=model,
                                             cache=False, calibration=cal)
         except BaseException:                # noqa: BLE001
             # one poisoned table must not share fate with its batchmates:
-            # re-run each request alone so only the culprit(s) error (the
+            # re-run each table alone so only the culprit(s) error (the
             # coalescing contract makes solo answers bit-identical)
             self.stats["isolated_failures"] += 1
-            for r in live:
-                self._run_solo(r, hw, model, cal)
+            for tok in order:
+                self._run_solo(dedup[tok], hw, model, cal)
             return
         self.stats["fused_evaluations"] += 1
         self.stats["coalesced_requests"] += len(live)
         self.stats["fused_rows"] += len(fused)
         lo = 0
-        for r in live:
-            hi = lo + len(r.table)
-            try:
-                r.result = self._answer(res, r, lo=lo, hi=hi)
-            except BaseException as e:       # noqa: BLE001
-                r.error = e
-            r.event.set()
+        for tok in order:
+            members = dedup[tok]
+            hi = lo + len(members[0].table)
+            for r in members:
+                try:
+                    r.result = self._answer(res, r, lo=lo, hi=hi)
+                except BaseException as e:   # noqa: BLE001
+                    r.error = e
+                self._finish(r)
             lo = hi
 
-    def _run_solo(self, r: _Pending, hw, model: Optional[str], cal) -> None:
+    def _run_solo(self, rs: List[_Pending], hw, model: Optional[str],
+                  cal) -> None:
+        """Evaluate one distinct table (cached path) and answer every
+        request that shares its content."""
+        if isinstance(rs, _Pending):
+            rs = [rs]
         try:
-            r.result = self._answer(
-                self.engine.predict_table(r.table, hw, model=model,
-                                          calibration=cal),
-                r, lo=0, hi=None)
+            res = self.engine.predict_table(rs[0].table, hw, model=model,
+                                            calibration=cal)
         except BaseException as e:           # noqa: BLE001
-            r.error = e
-        r.event.set()
+            for r in rs:
+                r.error = e
+                self._finish(r)
+            return
+        for r in rs:
+            try:
+                r.result = self._answer(res, r, lo=0, hi=None)
+            except BaseException as e:       # noqa: BLE001
+                r.error = e
+            self._finish(r)
 
     @staticmethod
     def _answer(res, r: _Pending, lo: int, hi: Optional[int]):
@@ -373,10 +478,13 @@ class PredictionServer:
                  mutate_rps: Optional[float] = None,
                  mutate_burst: int = 5,
                  state_dir: Optional[str] = None,
-                 straggler_timeout_s: Optional[float] = None):
+                 straggler_timeout_s: Optional[float] = None,
+                 binary_port: Optional[int] = None,
+                 max_fused_rows: Optional[int] = None):
         self.engine = engine or sweep.SweepEngine()
         self.coalescer = None
         self.pool = None
+        self.binary = None
         self.started_at = time.time()
         self.n_requests = 0
         #: registered calibrations by name — what sweep requests with
@@ -607,6 +715,8 @@ class PredictionServer:
         try:
             self.coalescer = Coalescer(
                 self.engine, window_s=coalesce_window_s,
+                max_fused_rows=(MAX_FUSED_ROWS if max_fused_rows is None
+                                else int(max_fused_rows)),
                 max_queue_depth=(DEFAULT_MAX_QUEUE_DEPTH
                                  if max_queue_depth is None
                                  else max_queue_depth))
@@ -615,10 +725,15 @@ class PredictionServer:
                 self.pool = parallel.WorkerPool(
                     jobs, use_threads=use_threads,
                     straggler_timeout_s=straggler_timeout_s)
+            if binary_port is not None:
+                from .binserver import BinaryFrontend
+                self.binary = BinaryFrontend(self, host, binary_port)
         except BaseException:
             self.httpd.server_close()
             if self.coalescer is not None:
                 self.coalescer.close()
+            if self.pool is not None:
+                self.pool.close()
             raise
 
     # ------------------------------------------------------------ plumbing
@@ -631,9 +746,15 @@ class PredictionServer:
         host, port = self.address
         return f"http://{host}:{port}"
 
+    @property
+    def binary_address(self) -> Optional[Tuple[str, int]]:
+        return self.binary.address if self.binary is not None else None
+
     def start(self) -> "PredictionServer":
         """Serve on a daemon thread (tests, in-process demos)."""
         self._serving = True
+        if self.binary is not None:
+            self.binary.start()
         t = threading.Thread(target=self.httpd.serve_forever, daemon=True,
                              name="serve-http")
         t.start()
@@ -641,6 +762,8 @@ class PredictionServer:
 
     def serve_forever(self) -> None:
         self._serving = True
+        if self.binary is not None:
+            self.binary.start()
         self.httpd.serve_forever()
 
     def begin_drain(self) -> None:
@@ -652,6 +775,8 @@ class PredictionServer:
         if self._draining:
             return
         self._draining = True
+        if self.binary is not None:
+            self.binary.begin_drain()
         if getattr(self, "_serving", False):
             # httpd.shutdown() blocks until serve_forever exits; the
             # SIGTERM handler runs *on* the serve_forever thread, so the
@@ -673,6 +798,8 @@ class PredictionServer:
         if self.state_dir:
             self._save_state()
         self.httpd.server_close()
+        if self.binary is not None:
+            self.binary.close()
         self.coalescer.close()
         if self.pool is not None:
             self.pool.close()
@@ -687,6 +814,7 @@ class PredictionServer:
     def health(self) -> Dict:
         with self._cal_lock:
             n_cal = len(self.calibrations)
+        bin_addr = self.binary_address
         return {"status": "draining" if self._draining else "ok",
                 "draining": self._draining,
                 "wire_version": codec.WIRE_VERSION,
@@ -694,12 +822,30 @@ class PredictionServer:
                 "n_calibrations": n_cal,
                 "uptime_s": time.time() - self.started_at,
                 "n_requests": self.n_requests,
-                "pool_jobs": self.pool.njobs if self.pool else 0}
+                "pool_jobs": self.pool.njobs if self.pool else 0,
+                # binary auto-negotiation: clients probe health over HTTP
+                # and upgrade when a binary port is advertised
+                "binary_port": bin_addr[1] if bin_addr else None}
 
     def stats(self) -> Dict:
+        """One stats schema for both transports: HTTP's
+        ``GET /v1/cache_stats`` and the binary ``OP_CACHE_STATS`` frame
+        both return exactly this document — engine cache counters,
+        every coalescer counter (dedup/shed/isolation included), the
+        live fused-row budget, and binary-frontend connection counters
+        (zeroed when no binary port is bound, so the schema never
+        changes shape between transports)."""
         out = dict(self.engine.cache_stats())
         out.update({f"coalescer_{k}": v
                     for k, v in self.coalescer.stats.items()})
+        out["coalescer_max_fused_rows"] = self.coalescer.max_fused_rows
+        if self.binary is not None:
+            out.update({f"binary_{k}": v
+                        for k, v in self.binary.stats.items()})
+        else:
+            from .binserver import BinaryFrontend
+            out.update({f"binary_{k}": 0
+                        for k in BinaryFrontend.STAT_KEYS})
         return out
 
     # ------------------------------------------------ admission control
@@ -881,12 +1027,38 @@ class PredictionServer:
         if expect_op is not None and op != expect_op:
             raise codec.WireFormatError(
                 f"endpoint /v1/{expect_op} got a request for op {op!r}")
+        return self.answer_decoded(op, source, meta, deadline=deadline)
+
+    def _resolve_sweep(self, meta: Dict):
+        """Resolve a decoded request's metadata against server state:
+        ``(hw, model, k, objectives, calibration, max_rows)``.  Raises
+        the same typed errors as the HTTP path (KeyError for unknown
+        hardware/calibration, ValueError for a bad hint)."""
         hw = hardware.get(meta["hw"])
         model = meta.get("model")
         k = meta.get("k")
         objectives = tuple(meta["objectives"]) if meta.get("objectives") \
             else None
         calibration = self._resolve_calibration(meta)
+        max_rows = meta.get("max_fused_rows")
+        if max_rows is not None:
+            # a hint, clamped server-side: it may tighten the fused-batch
+            # budget for batches this request joins, never widen it
+            if not isinstance(max_rows, int) or isinstance(max_rows, bool) \
+                    or max_rows < 1:
+                raise ValueError(
+                    f"invalid max_fused_rows hint {max_rows!r}: want an "
+                    f"int >= 1")
+            max_rows = min(max_rows, self.coalescer.max_fused_rows)
+        return hw, model, k, objectives, calibration, max_rows
+
+    def answer_decoded(self, op: str, source, meta: Dict,
+                       deadline: Optional[float] = None) -> bytes:
+        """Answer one already-decoded request (shared by the HTTP handler
+        via ``handle_request`` and the binary front end, which decodes on
+        its event loop but answers here on a worker)."""
+        hw, model, k, objectives, calibration, max_rows = \
+            self._resolve_sweep(meta)
         if deadline is not None and time.monotonic() >= deadline \
                 and not (isinstance(source, WorkloadTable)
                          and meta.get("coalesce", True)):
@@ -899,7 +1071,8 @@ class PredictionServer:
                 result = self.coalescer.submit(op, source, hw, model,
                                                k=k, objectives=objectives,
                                                calibration=calibration,
-                                               deadline=deadline)
+                                               deadline=deadline,
+                                               max_rows=max_rows)
             else:
                 res = self.engine.predict_table(
                     source, hw, model=model,
@@ -941,6 +1114,16 @@ def main(argv=None) -> None:
     ap.add_argument("--host", default="127.0.0.1")
     ap.add_argument("--port", type=int, default=8707,
                     help="0 binds an ephemeral port (printed on start)")
+    ap.add_argument("--binary-port", type=int, default=None,
+                    help="also serve the length-prefixed binary protocol "
+                         "(repro.serve.framing) on this port; 0 binds an "
+                         "ephemeral port (printed on start); omit to "
+                         "serve HTTP only")
+    ap.add_argument("--max-fused-rows", type=int, default=None,
+                    help="coalescer fused-batch cost budget in estimated "
+                         "vectorized-row units (scalar-fallback rows "
+                         f"count {SCALAR_ROW_COST}x; default "
+                         f"{MAX_FUSED_ROWS})")
     ap.add_argument("--jobs", type=int, default=None,
                     help="worker pool size for streamed-lattice requests "
                          "(0 = every core; omit for serial)")
@@ -976,7 +1159,9 @@ def main(argv=None) -> None:
         mutate_rps=args.mutate_rps,
         mutate_burst=args.mutate_burst,
         state_dir=args.state_dir,
-        straggler_timeout_s=args.straggler_timeout_s)
+        straggler_timeout_s=args.straggler_timeout_s,
+        binary_port=args.binary_port,
+        max_fused_rows=args.max_fused_rows)
     host, port = server.address
     # SIGTERM begins a graceful drain: stop accepting, 503 new work,
     # finish in-flight requests, snapshot --state-dir, reap the pool —
@@ -986,6 +1171,10 @@ def main(argv=None) -> None:
     signal.signal(signal.SIGTERM, lambda *_: server.begin_drain())
     # parsed by clients that spawn the server as a subprocess — keep stable
     print(f"[serve] listening on http://{host}:{port}", flush=True)
+    if server.binary is not None:
+        bhost, bport = server.binary_address
+        # second banner line, also parsed by subprocess spawners
+        print(f"[serve] binary on {bhost}:{bport}", flush=True)
     try:
         server.serve_forever()
     except KeyboardInterrupt:

@@ -16,9 +16,13 @@ from typing import Sequence, Tuple
 
 
 def start_server_subprocess(
-        extra_args: Sequence[str] = ()) -> Tuple[subprocess.Popen, str, int]:
+        extra_args: Sequence[str] = (),
+        binary: bool = False):
     """Launch ``python -m repro.serve.server --port 0`` in its own session
-    and return ``(proc, host, port)`` once the listening banner arrives.
+    and return ``(proc, host, port)`` once the listening banner arrives —
+    or ``(proc, host, port, binary_port)`` when ``binary=True``, which
+    adds ``--binary-port 0`` and parses the second
+    ``[serve] binary on host:port`` banner line.
 
     A server that dies at import/bind time is reaped and surfaced as a
     ``RuntimeError`` carrying its exit status, not an ``IndexError`` on
@@ -28,9 +32,11 @@ def start_server_subprocess(
     src = os.path.normpath(os.path.join(
         os.path.dirname(os.path.abspath(__file__)), "..", ".."))
     env["PYTHONPATH"] = src + os.pathsep + env.get("PYTHONPATH", "")
+    args = [sys.executable, "-m", "repro.serve.server", "--port", "0"]
+    if binary and "--binary-port" not in extra_args:
+        args += ["--binary-port", "0"]
     proc = subprocess.Popen(
-        [sys.executable, "-m", "repro.serve.server", "--port", "0",
-         *extra_args],
+        [*args, *extra_args],
         stdout=subprocess.PIPE, text=True, env=env,
         start_new_session=True)
     line = proc.stdout.readline()
@@ -40,7 +46,16 @@ def start_server_subprocess(
             f"server failed to start (exit {proc.poll()}): {line!r}")
     addr = line.rsplit("http://", 1)[1].strip()
     host, port = addr.rsplit(":", 1)
-    return proc, host, int(port)
+    if not binary:
+        return proc, host, int(port)
+    line = proc.stdout.readline()
+    if "binary on" not in line:
+        stop_server_subprocess(proc)
+        raise RuntimeError(
+            f"server printed no binary banner (exit {proc.poll()}): "
+            f"{line!r}")
+    _, bport = line.rsplit("binary on ", 1)[1].strip().rsplit(":", 1)
+    return proc, host, int(port), int(bport)
 
 
 def stop_server_subprocess(proc: subprocess.Popen) -> None:

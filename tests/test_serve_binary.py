@@ -1,0 +1,705 @@
+"""Binary transport tests: framing fuzz, event-loop server, pipelined
+request ids, cross-request dedup, adaptive fused-row budget.
+
+The contract under test (serve/README.md "Binary framing (v1)"):
+
+* the 24-byte header is strict — any malformed field raises
+  ``WireFormatError`` and poisons the stream (both sides close rather
+  than resynchronize), mirrored here with an every-bit-flip fuzz sweep
+  over the header like the codec's envelope fuzz;
+* request ids demux pipelined replies — a duplicate in-flight id closes
+  the connection, and a reply can never land on the wrong id;
+* every answer served over the binary port is bit-identical to the HTTP
+  and in-process routes (same coalescer, same engine, same codec);
+* concurrent same-content tables evaluate once (dedup keyed on
+  ``content_token`` within a hardware/route/calibration group) while
+  each request keeps its OWN row names;
+* the fused-batch budget is in estimated cost units (scalar-fallback
+  rows ~50x vectorized), observable in stats and tunable per server and
+  per request (hints clamp server-side).
+"""
+import socket
+import struct
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.core import hardware, sweep
+from repro.core.workload import TileConfig, Workload, WorkloadTable, \
+    gemm_workload
+from repro.serve import codec, errors, framing
+from repro.serve.client import PredictionClient
+from repro.serve.server import (MAX_FUSED_ROWS, SCALAR_ROW_COST, Coalescer,
+                                PredictionServer)
+
+pytestmark = pytest.mark.serve
+
+B200 = hardware.B200
+TILES = [TileConfig(bm, bn, bk) for bm in (64, 128, 256)
+         for bn in (64, 128) for bk in (16, 32)]
+
+
+def fresh_engine():
+    return sweep.SweepEngine(use_cache=False)
+
+
+def gemm_base(name="g", m=2048):
+    return gemm_workload(name, m, 2048, 2048, precision="fp16")
+
+
+def small_table(name="g", m=2048):
+    return WorkloadTable.tile_lattice(gemm_base(name, m), TILES)
+
+
+def scalar_table(name="s", n=4, scale=1.0):
+    """Rows with explicit hit rates: the scalar-fallback path, costed at
+    ``SCALAR_ROW_COST`` units each by the adaptive budget.  ``scale``
+    varies the content so distinct tables don't dedup-collapse."""
+    return WorkloadTable.from_workloads(
+        [Workload(name=f"{name}{i}", wclass="memory",
+                  flops=1e9 * (i + 1) * scale, bytes=1e9,
+                  hit_rates={"h_l2": 0.6, "h_l1": 0.3})
+         for i in range(n)])
+
+
+def same_winner(a, b):
+    return (a.index == b.index and a.name == b.name and a.total == b.total
+            and a.breakdown == b.breakdown
+            and a.breakdown.detail == b.breakdown.detail)
+
+
+@pytest.fixture(scope="module")
+def served_bin():
+    server = PredictionServer(port=0, binary_port=0).start()
+    yield server
+    server.shutdown()
+
+
+def bin_client(server, **kw):
+    """Client pinned to the server's binary port (no probe)."""
+    kw.setdefault("backoff_base_s", 0.01)
+    return PredictionClient(*server.address,
+                            binary_port=server.binary_address[1], **kw)
+
+
+# ---------------------------------------------------------------------------
+# framing: pack/parse and the fuzz sweep
+# ---------------------------------------------------------------------------
+
+class TestFraming:
+    def test_roundtrip(self):
+        payload = b"x" * 37
+        raw = framing.pack_frame(framing.OP_SWEEP, 71, payload,
+                                 deadline_s=2.5)
+        p = framing.FrameParser()
+        p.feed(raw)
+        frames = list(p.frames())
+        assert len(frames) == 1
+        f = frames[0]
+        assert (f.op, f.req_id, f.payload) == (framing.OP_SWEEP, 71,
+                                               payload)
+        assert f.deadline_s == pytest.approx(2.5)
+        assert f.flags == 0
+        assert len(p) == 0
+
+    def test_byte_at_a_time_feed(self):
+        raw = framing.pack_frame(framing.OP_HEALTH, 9, b"abc")
+        p = framing.FrameParser()
+        for i, b in enumerate(raw):
+            p.feed(bytes([b]))
+            got = list(p.frames())
+            if i < len(raw) - 1:
+                assert got == []          # truncated frame: not an error
+            else:
+                assert got[0].payload == b"abc"
+
+    def test_pipelined_frames_in_order(self):
+        frames = [framing.pack_frame(framing.OP_SWEEP, i,
+                                     bytes([i]) * (10 + i))
+                  for i in range(5)]
+        blob = b"".join(frames)
+        p = framing.FrameParser()
+        out = []
+        for lo in range(0, len(blob), 7):     # deliberately odd chunks
+            p.feed(blob[lo:lo + 7])
+            out.extend(p.frames())
+        assert [f.req_id for f in out] == [0, 1, 2, 3, 4]
+        assert all(f.payload == bytes([i]) * (10 + i)
+                   for i, f in enumerate(out))
+
+    def test_truncated_length_waits_never_errors(self):
+        raw = framing.pack_frame(framing.OP_SWEEP, 1, b"q" * 100)
+        p = framing.FrameParser()
+        p.feed(raw[:-1])                      # one payload byte short
+        assert list(p.frames()) == []
+        p.feed(raw[-1:])
+        assert list(p.frames())[0].payload == b"q" * 100
+
+    def test_oversized_length_rejected_and_poisons(self):
+        hdr = framing.HEADER.pack(framing.BIN_MAGIC, framing.OP_SWEEP, 0,
+                                  0, framing.MAX_FRAME_BYTES + 1, 1, 0.0)
+        p = framing.FrameParser()
+        p.feed(hdr)
+        with pytest.raises(codec.WireFormatError, match="exceeds"):
+            list(p.frames())
+        # poisoned: the stream offset is untrustworthy from here on
+        with pytest.raises(codec.WireFormatError, match="close"):
+            p.feed(b"more")
+        with pytest.raises(codec.WireFormatError, match="close"):
+            list(p.frames())
+
+    def test_bad_magic_rejected(self):
+        raw = bytearray(framing.pack_frame(framing.OP_HEALTH, 1, b""))
+        raw[:4] = b"HTTP"
+        p = framing.FrameParser()
+        p.feed(bytes(raw))
+        with pytest.raises(codec.WireFormatError, match="magic"):
+            list(p.frames())
+
+    def test_nonzero_reserved_rejected(self):
+        hdr = framing.HEADER.pack(framing.BIN_MAGIC, framing.OP_HEALTH, 0,
+                                  7, 0, 1, 0.0)
+        p = framing.FrameParser()
+        p.feed(hdr)
+        with pytest.raises(codec.WireFormatError, match="reserved"):
+            list(p.frames())
+
+    def test_unknown_op_and_flags_rejected(self):
+        for op, flags in ((200, 0), (framing.OP_SWEEP, 0x80)):
+            hdr = framing.HEADER.pack(framing.BIN_MAGIC, op, flags, 0, 0,
+                                      1, 0.0)
+            p = framing.FrameParser()
+            p.feed(hdr)
+            with pytest.raises(codec.WireFormatError):
+                list(p.frames())
+
+    def test_invalid_deadline_rejected(self):
+        for bad in (float("nan"), float("inf"), -1.0):
+            hdr = framing.HEADER.pack(framing.BIN_MAGIC, framing.OP_SWEEP,
+                                      0, 0, 0, 1, bad)
+            p = framing.FrameParser()
+            p.feed(hdr)
+            with pytest.raises(codec.WireFormatError, match="deadline"):
+                list(p.frames())
+
+    def test_pack_frame_validates(self):
+        with pytest.raises(ValueError, match="unknown op"):
+            framing.pack_frame(99, 1, b"")
+        with pytest.raises(ValueError, match="u64"):
+            framing.pack_frame(framing.OP_SWEEP, -1, b"")
+        with pytest.raises(ValueError, match="u64"):
+            framing.pack_frame(framing.OP_SWEEP, 1 << 64, b"")
+
+    def test_every_header_bit_flip_is_caught_or_visible(self):
+        """The framing mirror of the codec's envelope fuzz: flip every
+        bit of every header byte.  Each flip must either raise
+        ``WireFormatError``, leave the parser waiting for more bytes
+        (a length now pointing past the buffer), or surface as a frame
+        that visibly differs from the original — NEVER parse back to
+        the original frame, and never escape as a non-wire error."""
+        payload = b"p" * 40
+        raw = framing.pack_frame(framing.OP_SWEEP, 0x1234, payload,
+                                 deadline_s=1.5)
+        ref = framing.Frame(framing.OP_SWEEP, 0, 0x1234, 1.5, payload)
+        outcomes = {"error": 0, "waiting": 0, "differs": 0}
+        for off in range(framing.HEADER.size):
+            for bit in range(8):
+                buf = bytearray(raw)
+                buf[off] ^= 1 << bit
+                p = framing.FrameParser()
+                p.feed(bytes(buf))
+                try:
+                    got = list(p.frames())
+                except codec.WireFormatError:
+                    outcomes["error"] += 1
+                    continue
+                if not got:
+                    outcomes["waiting"] += 1
+                    continue
+                f = got[0]
+                assert (f.op, f.flags, f.req_id, f.deadline_s,
+                        f.payload) != (ref.op, ref.flags, ref.req_id,
+                                       ref.deadline_s, ref.payload), \
+                    f"flip at byte {off} bit {bit} was invisible"
+                outcomes["differs"] += 1
+        # sanity on the sweep's coverage: all three outcomes occur
+        # (magic flips error out, high length-bits leave it waiting,
+        # req-id flips produce visibly different frames)
+        assert outcomes["error"] >= 32          # 4 magic bytes at least
+        assert outcomes["waiting"] >= 1
+        assert outcomes["differs"] >= 64        # 8 req-id bytes at least
+
+
+# ---------------------------------------------------------------------------
+# the served binary transport
+# ---------------------------------------------------------------------------
+
+class TestBinaryTransport:
+    def test_bit_identical_across_all_routes(self, served_bin):
+        table = small_table("routes")
+        eng = fresh_engine()
+        c = bin_client(served_bin)
+        http_c = PredictionClient(*served_bin.address, transport="http")
+        try:
+            ref = sweep.argmin_table(table, B200, engine=eng)
+            assert same_winner(c.argmin(table, "b200"), ref)
+            assert same_winner(http_c.argmin(table, "b200"), ref)
+            ref_k = sweep.topk_table(table, B200, 5, engine=eng)
+            got_k = c.topk(table, "b200", 5)
+            assert len(got_k) == 5
+            assert all(same_winner(a, b) for a, b in zip(got_k, ref_k))
+            ref_p = sweep.pareto_table(table, B200, engine=eng)
+            got_p = c.pareto(table, "b200")
+            assert len(got_p) == len(ref_p)
+            assert all(same_winner(a, b) for a, b in zip(got_p, ref_p))
+            tot = c.predict_totals(table, "b200")
+            ref_t = eng.predict_table(table, B200).totals
+            assert np.array_equal(tot, np.asarray(ref_t))
+        finally:
+            c.close()
+            http_c.close()
+
+    def test_auto_negotiation_upgrades(self, served_bin):
+        c = PredictionClient(*served_bin.address)   # transport="auto"
+        try:
+            table = small_table("nego")
+            ref = sweep.argmin_table(table, B200, engine=fresh_engine())
+            assert same_winner(c.argmin(table, "b200"), ref)
+            assert c._bin_target == served_bin.binary_address
+            before = served_bin.binary.stats["requests"]
+            assert same_winner(c.argmin(table, "b200"), ref)
+            assert served_bin.binary.stats["requests"] > before
+        finally:
+            c.close()
+
+    def test_http_only_server_stays_http(self):
+        with PredictionServer(port=0).start() as srv:
+            c = PredictionClient(*srv.address)
+            table = small_table("httponly")
+            ref = sweep.argmin_table(table, B200, engine=fresh_engine())
+            assert same_winner(c.argmin(table, "b200"), ref)
+            assert c._bin_target is None
+            assert c.health()["binary_port"] is None
+            c.close()
+            with pytest.raises(RuntimeError, match="no binary port"):
+                forced = PredictionClient(*srv.address,
+                                          transport="binary")
+                try:
+                    forced.argmin(table, "b200")
+                finally:
+                    forced.close()
+
+    def test_stale_binary_port_falls_back_to_http(self):
+        with PredictionServer(port=0).start() as srv:
+            # nothing listens on this port: connect refuses instantly
+            probe = socket.socket()
+            probe.bind(("127.0.0.1", 0))
+            dead = probe.getsockname()[1]
+            probe.close()
+            c = PredictionClient(*srv.address, binary_port=dead,
+                                 max_retries=1, backoff_base_s=0.01,
+                                 breaker_threshold=0)
+            table = small_table("stale")
+            ref = sweep.argmin_table(table, B200, engine=fresh_engine())
+            assert same_winner(c.argmin(table, "b200"), ref)
+            assert c._bin_disabled          # downgraded for good
+            assert same_winner(c.argmin(table, "b200"), ref)
+            c.close()
+
+    def test_pipelined_ids_demux_any_completion_order(self, served_bin):
+        # mixed sizes so fused evaluations complete out of submission
+        # order; every reply must still land on its own request id
+        tables = [small_table(f"p{j}", 1024 + 256 * (j % 7))
+                  for j in range(16)]
+        eng = fresh_engine()
+        refs = [sweep.argmin_table(t, B200, engine=eng) for t in tables]
+        c = bin_client(served_bin)
+        try:
+            wins = c.argmin_many(tables, "b200")
+            assert len(wins) == 16
+            assert all(same_winner(a, b) for a, b in zip(wins, refs))
+        finally:
+            c.close()
+
+    def test_health_and_stats_one_schema_both_transports(self,
+                                                         served_bin):
+        http_c = PredictionClient(*served_bin.address, transport="http")
+        b_c = bin_client(served_bin, transport="binary")
+        try:
+            via_http = http_c.cache_stats()
+            via_bin = b_c.cache_stats()
+            assert set(via_http) == set(via_bin)
+            for key in ("coalescer_deduped_requests",
+                        "coalescer_dedup_rows_saved",
+                        "coalescer_shed_overload",
+                        "coalescer_shed_deadline",
+                        "coalescer_isolated_failures",
+                        "coalescer_max_fused_rows",
+                        "binary_requests", "binary_frames_in",
+                        "binary_frames_out", "binary_connections",
+                        "binary_connections_open",
+                        "binary_protocol_errors"):
+                assert key in via_http, key
+            assert b_c.health()["binary_port"] \
+                == served_bin.binary_address[1]
+        finally:
+            http_c.close()
+            b_c.close()
+
+    def test_http_only_stats_zero_fill_same_schema(self, served_bin):
+        with PredictionServer(port=0).start() as srv:
+            c = PredictionClient(*srv.address)
+            plain = c.cache_stats()
+            c.close()
+        c2 = PredictionClient(*served_bin.address, transport="http")
+        with_bin = c2.cache_stats()
+        c2.close()
+        assert set(plain) == set(with_bin)
+        assert plain["binary_requests"] == 0
+        assert plain["binary_connections_open"] == 0
+
+    def test_duplicate_inflight_id_closes_connection(self):
+        # a window keeps the first request parked long enough for the
+        # duplicate id to arrive while it is genuinely in flight
+        with PredictionServer(port=0, binary_port=0,
+                              coalesce_window_s=0.3).start() as srv:
+            body = codec.encode_request("argmin", small_table("dup"),
+                                        hw="b200")
+            s = socket.create_connection(srv.binary_address, timeout=10)
+            try:
+                s.sendall(framing.pack_frame(framing.OP_SWEEP, 5, body))
+                s.sendall(framing.pack_frame(framing.OP_SWEEP, 5, body))
+                deadline = time.monotonic() + 10
+                closed = False
+                while time.monotonic() < deadline:
+                    data = s.recv(65536)
+                    if not data:
+                        closed = True
+                        break
+                assert closed, "duplicate id must close the connection"
+            finally:
+                s.close()
+            assert srv.binary.stats["protocol_errors"] >= 1
+
+    def test_garbage_frame_closes_garbage_payload_answers(self, served_bin):
+        # malformed HEADER -> close (stream unusable); malformed PAYLOAD
+        # in a well-formed frame -> in-band error, connection stays up
+        addr = served_bin.binary_address
+        s1 = socket.create_connection(addr, timeout=10)
+        try:
+            s1.sendall(b"GET /v1/health HTTP/1.1\r\n\r\n")
+            assert s1.recv(65536) == b""     # closed, no reply bytes
+        finally:
+            s1.close()
+        s2 = socket.create_connection(addr, timeout=10)
+        try:
+            s2.sendall(framing.pack_frame(framing.OP_SWEEP, 1,
+                                          b"not a codec message"))
+            p = framing.FrameParser()
+            got = {}
+            while 1 not in got:
+                p.feed(s2.recv(65536))
+                for f in p.frames():
+                    got[f.req_id] = f
+            assert got[1].flags & framing.FLAG_ERROR
+            name, _, _ = codec.decode_error(got[1].payload)
+            assert name == "WireFormatError"
+            # same socket still serves: framing stayed in sync
+            s2.sendall(framing.pack_frame(framing.OP_HEALTH, 2, b""))
+            while 2 not in got:
+                p.feed(s2.recv(65536))
+                for f in p.frames():
+                    got[f.req_id] = f
+            assert codec.decode_json(got[2].payload)["status"] == "ok"
+        finally:
+            s2.close()
+
+    def test_overload_shed_is_typed_over_binary(self):
+        with PredictionServer(port=0, binary_port=0,
+                              max_queue_depth=0).start() as srv:
+            c = bin_client(srv, max_retries=1)
+            with pytest.raises(errors.ServerOverloaded):
+                c.argmin(small_table("ovb"), "b200")
+            c.close()
+
+    def test_draining_sheds_sweeps_answers_probes(self):
+        srv = PredictionServer(port=0, binary_port=0).start()
+        try:
+            c = bin_client(srv, max_retries=0, transport="binary")
+            assert c.health()["draining"] is False   # socket now open
+            srv.begin_drain()
+            with pytest.raises(errors.ServerOverloaded, match="draining"):
+                c.argmin(small_table("drainb"), "b200")
+            assert c.health()["draining"] is True
+            c.close()
+        finally:
+            srv.shutdown()
+
+    def test_deadline_zero_budget_fails_without_io(self, served_bin):
+        c = bin_client(served_bin)
+        try:
+            with pytest.raises(errors.DeadlineExceeded):
+                c.argmin(small_table("dl0b"), "b200", deadline_s=0.0)
+        finally:
+            c.close()
+
+    def test_subprocess_binary_banner_and_roundtrip(self):
+        from repro.serve.subproc import start_server_subprocess, \
+            stop_server_subprocess
+        proc, host, port, bport = start_server_subprocess(binary=True)
+        try:
+            c = PredictionClient(host, port, binary_port=bport,
+                                 timeout=60.0)
+            table = small_table("subp")
+            ref = sweep.argmin_table(table, B200, engine=fresh_engine())
+            assert same_winner(c.argmin(table, "b200"), ref)
+            assert c.cache_stats()["binary_requests"] >= 1
+            c.close()
+        finally:
+            stop_server_subprocess(proc)
+
+
+# ---------------------------------------------------------------------------
+# cross-request dedup
+# ---------------------------------------------------------------------------
+
+class TestDedup:
+    def test_concurrent_same_content_evaluates_once(self):
+        co = Coalescer(fresh_engine(), window_s=0.15)
+        try:
+            table = small_table("dedup")
+            ref = sweep.argmin_table(table, B200, engine=fresh_engine())
+            results = []
+
+            def run():
+                results.append(co.submit("argmin", table, B200, None))
+
+            threads = [threading.Thread(target=run) for _ in range(6)]
+            for t in threads:
+                t.start()
+            for t in threads:
+                t.join(timeout=30.0)
+            assert len(results) == 6
+            assert all(same_winner(r[0], ref) for r in results)
+            assert co.stats["deduped_requests"] == 5
+            assert co.stats["dedup_rows_saved"] == 5 * len(table)
+            # all-duplicates batches take the memoizing solo path: no
+            # fused concat evaluation happened
+            assert co.stats["fused_evaluations"] == 0
+        finally:
+            co.close()
+
+    def test_dedup_preserves_per_request_names(self):
+        # content_token ignores row names — two renamed copies dedup
+        # into one evaluation, but each caller's winner must carry the
+        # caller's OWN name
+        co = Coalescer(fresh_engine(), window_s=0.15)
+        try:
+            ta = small_table("alpha")
+            tb = small_table("bravo")
+            assert ta.content_token() == tb.content_token()
+            out = {}
+
+            def run(key, table):
+                out[key] = co.submit("argmin", table, B200, None)[0]
+
+            threads = [threading.Thread(target=run, args=(k, t))
+                       for k, t in (("a", ta), ("b", tb))]
+            for t in threads:
+                t.start()
+            for t in threads:
+                t.join(timeout=30.0)
+            assert co.stats["deduped_requests"] == 1
+            assert out["a"].name.startswith("alpha")
+            assert out["b"].name.startswith("bravo")
+            assert out["a"].index == out["b"].index
+            assert out["a"].total == out["b"].total
+        finally:
+            co.close()
+
+    def test_dedup_inside_mixed_fused_batch(self):
+        # duplicates ride a fused batch with distinct companions: the
+        # fused table carries each distinct content once
+        co = Coalescer(fresh_engine(), window_s=0.15)
+        try:
+            tables = [small_table("m0"), small_table("m0"),
+                      small_table("m1", 4096), small_table("m2", 1024)]
+            eng = fresh_engine()
+            refs = [sweep.argmin_table(t, B200, engine=eng)
+                    for t in tables]
+            out = [None] * 4
+
+            def run(i):
+                out[i] = co.submit("argmin", tables[i], B200, None)[0]
+
+            threads = [threading.Thread(target=run, args=(i,))
+                       for i in range(4)]
+            for t in threads:
+                t.start()
+            for t in threads:
+                t.join(timeout=30.0)
+            assert all(same_winner(a, b) for a, b in zip(out, refs))
+            assert co.stats["deduped_requests"] == 1
+            assert co.stats["fused_evaluations"] == 1
+            # the fused evaluation priced 3 distinct tables, not 4
+            assert co.stats["fused_rows"] == 3 * len(tables[0])
+            assert co.stats["coalesced_requests"] == 4
+        finally:
+            co.close()
+
+    def test_served_dedup_counters_flow_to_stats(self, served_bin):
+        c = bin_client(served_bin)
+        try:
+            before = c.cache_stats()["coalescer_deduped_requests"]
+            tabs = [small_table("svd")] * 8
+            wins = c.argmin_many(tabs, "b200")
+            ref = sweep.argmin_table(tabs[0], B200,
+                                     engine=fresh_engine())
+            assert all(same_winner(w, ref) for w in wins)
+            after = c.cache_stats()["coalescer_deduped_requests"]
+            assert after > before
+        finally:
+            c.close()
+
+
+# ---------------------------------------------------------------------------
+# adaptive fused-row budget
+# ---------------------------------------------------------------------------
+
+class TestAdaptiveBudget:
+    def test_est_cost_units(self):
+        plain = small_table("cost")
+        assert Coalescer._est_cost(plain) == len(plain)
+        scal = scalar_table("cost", 4)
+        assert Coalescer._est_cost(scal) \
+            == 4 * SCALAR_ROW_COST
+        mixed = WorkloadTable.concat([plain, scal])
+        assert Coalescer._est_cost(mixed) \
+            == len(plain) + 4 * SCALAR_ROW_COST
+
+    def test_mixed_batch_splits_but_answers_all_bit_identical(self):
+        # the satellite's regression: scalar-fallback and vectorized
+        # tables land in ONE drained batch under a budget that cannot
+        # hold them all — packing must split, and every parked request
+        # still answers bit-identically
+        budget = len(small_table("x")) + 1    # one vectorized table max
+        co = Coalescer(fresh_engine(), window_s=0.2,
+                       max_fused_rows=budget)
+        try:
+            tables = [small_table("v0"), scalar_table("s0", 3),
+                      small_table("v1", 4096), scalar_table("s1", 2),
+                      small_table("v2", 1024)]
+            eng = fresh_engine()
+            refs = [sweep.argmin_table(t, B200, engine=eng)
+                    for t in tables]
+            out = [None] * len(tables)
+            errs = []
+
+            def run(i):
+                try:
+                    out[i] = co.submit("argmin", tables[i], B200,
+                                       None)[0]
+                except BaseException as e:    # noqa: BLE001
+                    errs.append(e)
+
+            threads = [threading.Thread(target=run, args=(i,))
+                       for i in range(len(tables))]
+            for t in threads:
+                t.start()
+            for t in threads:
+                t.join(timeout=30.0)
+            assert not errs
+            assert all(same_winner(a, b) for a, b in zip(out, refs))
+            # the budget forced splits: nothing fused 2+ tables
+            assert co.stats["fused_evaluations"] == 0
+            assert co.stats["batches"] >= 1
+        finally:
+            co.close()
+
+    def test_scalar_cost_shrinks_fused_batches(self):
+        # 5 scalar tables of 2 rows = 10 rows raw but 500 cost units: a
+        # 300-unit budget must split them, a raw-row reading would not
+        co = Coalescer(fresh_engine(), window_s=0.2,
+                       max_fused_rows=6 * SCALAR_ROW_COST)
+        try:
+            tables = [scalar_table(f"sc{i}", 2, scale=1.0 + i)
+                      for i in range(5)]
+            eng = fresh_engine()
+            refs = [sweep.argmin_table(t, B200, engine=eng)
+                    for t in tables]
+            out = [None] * 5
+
+            def run(i):
+                out[i] = co.submit("argmin", tables[i], B200, None)[0]
+
+            threads = [threading.Thread(target=run, args=(i,))
+                       for i in range(5)]
+            for t in threads:
+                t.start()
+            for t in threads:
+                t.join(timeout=30.0)
+            assert all(same_winner(a, b) for a, b in zip(out, refs))
+            # 5 x 100-unit tables under a 300-unit budget: at least two
+            # fused evaluations (3 + 2), never one batch of five
+            assert co.stats["fused_evaluations"] >= 2
+        finally:
+            co.close()
+
+    def test_server_bound_is_tunable_and_observable(self):
+        with PredictionServer(port=0, binary_port=0,
+                              max_fused_rows=777).start() as srv:
+            assert srv.coalescer.max_fused_rows == 777
+            c = bin_client(srv)
+            try:
+                assert c.cache_stats()["coalescer_max_fused_rows"] == 777
+            finally:
+                c.close()
+
+    def test_default_bound_unchanged(self):
+        with PredictionServer(port=0) as srv:
+            assert srv.coalescer.max_fused_rows == MAX_FUSED_ROWS
+
+    def test_per_request_hint_tightens_served_batches(self, served_bin):
+        # hint=1: every table must evaluate alone even when pipelined
+        # into one drained batch — and answers stay bit-identical
+        c = bin_client(served_bin)
+        try:
+            tables = [small_table(f"h{j}", 1024 + 512 * j)
+                      for j in range(4)]
+            eng = fresh_engine()
+            refs = [sweep.argmin_table(t, B200, engine=eng)
+                    for t in tables]
+            wins = c.argmin_many(tables, "b200", max_fused_rows=1)
+            assert all(same_winner(a, b) for a, b in zip(wins, refs))
+        finally:
+            c.close()
+
+    def test_invalid_hint_is_typed_error(self, served_bin):
+        # client-side validation
+        with pytest.raises(ValueError, match="max_fused_rows"):
+            codec.encode_request("argmin", small_table("bad"), hw="b200",
+                                 max_fused_rows=0)
+        # server-side validation (a hand-crafted meta dodging the client
+        # check): typed 400-class reply, not a 500 or a hang
+        body = codec.encode_request("argmin", small_table("bad"),
+                                    hw="b200")
+        op, source, meta = codec.decode_request(body)
+        meta["max_fused_rows"] = 0
+        with pytest.raises(ValueError, match="max_fused_rows"):
+            served_bin.answer_decoded(op, source, meta)
+        meta["max_fused_rows"] = 2.5
+        with pytest.raises(ValueError, match="max_fused_rows"):
+            served_bin.answer_decoded(op, source, meta)
+
+    def test_huge_hint_clamps_to_server_bound(self, served_bin):
+        c = bin_client(served_bin)
+        try:
+            table = small_table("clamp")
+            ref = sweep.argmin_table(table, B200, engine=fresh_engine())
+            got = c.argmin(table, "b200",
+                           max_fused_rows=MAX_FUSED_ROWS * 1000)
+            assert same_winner(got, ref)
+        finally:
+            c.close()

@@ -729,3 +729,94 @@ class TestStragglerRedispatch:
             assert pool.executor is current
         finally:
             pool.close()
+
+
+# ---------------------------------------------------------------------------
+# chaos against the binary transport
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def served_bin():
+    server = PredictionServer(port=0, binary_port=0).start()
+    yield server
+    server.shutdown()
+
+
+def bin_chaos_client(server, proxy, **kw):
+    """Client whose binary socket rides the chaos proxy; pinned to the
+    binary transport so a destructive fault retries on the binary path
+    instead of auto-downgrading to (unproxied) HTTP."""
+    kw.setdefault("timeout", 5.0)
+    kw.setdefault("connect_timeout", 3.0)
+    kw.setdefault("backoff_base_s", 0.01)
+    return PredictionClient(*server.address, transport="binary",
+                            binary_port=proxy.address[1], **kw)
+
+
+class TestBinaryChaos:
+    """Every FaultSpec kind against the framed socket: each must end in
+    a typed error or a bit-identical retry — never a hang past the
+    deadline, never a wrong answer (the satellite the binary transport
+    must clear before it is allowed to exist)."""
+
+    @pytest.mark.parametrize("spec", [
+        FaultSpec("sever"),                       # dies before any reply
+        FaultSpec("truncate", after_bytes=30),    # cut mid frame header
+        FaultSpec("bitflip", flip_at=16),         # frame header corrupted
+        FaultSpec("bitflip", flip_at=80),         # payload corrupted (CRC)
+    ], ids=("sever", "truncate", "bitflip-header", "bitflip-payload"))
+    def test_destructive_reply_fault_retries_bit_identical(
+            self, served_bin, spec):
+        table = small_table(f"bin-{spec.kind}-{spec.flip_at}")
+        ref = sweep.argmin_table(table, B200, engine=fresh_engine())
+        with ChaosProxy(*served_bin.binary_address, [spec]) as px:
+            client = bin_chaos_client(served_bin, px)
+            got = client.argmin(table, "b200")
+            assert same_winner(got, ref)
+            assert px.faults_injected() >= 1
+            client.close()
+
+    def test_stall_bounded_by_read_timeout_then_recovers(self,
+                                                         served_bin):
+        table = small_table("bin-stall")
+        ref = sweep.argmin_table(table, B200, engine=fresh_engine())
+        with ChaosProxy(*served_bin.binary_address,
+                        [FaultSpec("stall")]) as px:
+            client = bin_chaos_client(served_bin, px, timeout=1.0)
+            t0 = time.monotonic()
+            got = client.argmin(table, "b200")
+            elapsed = time.monotonic() - t0
+            assert same_winner(got, ref)     # retry conn passed through
+            assert elapsed < 5.0             # one read timeout, not a hang
+            assert px.faults_injected() >= 1
+            client.close()
+
+    def test_every_conn_stalling_deadline_wins_no_hang(self, served_bin):
+        with ChaosProxy(*served_bin.binary_address, [],
+                        default=FaultSpec("stall")) as px:
+            client = bin_chaos_client(served_bin, px, timeout=30.0,
+                                      max_retries=10)
+            t0 = time.monotonic()
+            with pytest.raises(errors.DeadlineExceeded):
+                client.argmin(small_table("bin-dl"), "b200",
+                              deadline_s=1.5)
+            assert time.monotonic() - t0 < 4.0
+            client.close()
+
+    def test_seeded_barrage_pipelined_all_bit_identical(self, served_bin):
+        # a reproducible mixed fault barrage under a pipelined burst:
+        # severed mid-stream replies re-send only what is outstanding,
+        # corrupt frames are caught by header strictness or payload CRC,
+        # and every table still answers bit-identically
+        tables = [WorkloadTable.tile_lattice(
+            gemm_base(f"bz{j}", 2048 + 128 * j), TILES)
+            for j in range(6)]
+        eng = fresh_engine()
+        refs = [sweep.argmin_table(t, B200, engine=eng) for t in tables]
+        with ChaosProxy(*served_bin.binary_address,
+                        seeded_schedule(11, 8)) as px:
+            client = bin_chaos_client(served_bin, px, max_retries=10)
+            wins = client.argmin_many(tables, "b200")
+            assert len(wins) == 6
+            assert all(same_winner(a, b) for a, b in zip(wins, refs))
+            client.close()
