@@ -43,6 +43,14 @@ binary and deduped answers to the in-process ones, and
 ``speedup_binary_vs_http_single`` (a within-run ratio, immune to host
 speed) is gated by ``check_regression`` alongside the floors.
 
+A **metrics-overhead** section reruns the pipelined binary burst against
+two fresh, identically-warmed servers — one ``--metrics on``, one
+``--metrics off`` — interleaved best-of-rounds.  The observability layer
+(`repro.obs`, see serve/README.md "Observability") bills itself as
+near-free; ``serve_metrics_overhead_bounded`` (metrics-on within 5% of
+metrics-off) is the auto-gated proof, and
+``serve_metrics_overhead_ratio`` records the measured on/off ratio.
+
 An **availability-under-chaos** section replays a fixed request stream
 through ``repro.serve.chaos.ChaosProxy`` with a seeded fault barrage
 (one stall + a mixed delay/truncate/bitflip/sever schedule): every
@@ -184,6 +192,48 @@ def _run_chaos(host: str, port: int, parts, hw) -> dict:
     }
 
 
+def _run_metrics_overhead(singles) -> dict:
+    """Instrumentation cost of the observability layer on the hot path.
+
+    Two fresh servers, identical except for ``--metrics on|off``, each
+    warmed with one pipelined pass (so both answer the timed rounds from
+    their memo caches and the measurement is wire + instrumentation, the
+    worst case for relative overhead).  Rounds interleave on/off and the
+    per-mode minima are kept, same rationale as the main round-robin —
+    but with 4x the rounds: each pass is tens of milliseconds, and the
+    5% bound is tighter than loopback jitter on a single minimum.
+    The gate is ``serve_metrics_overhead_bounded``: metrics-on pipelined
+    time within 5% of metrics-off."""
+    servers = {}
+    best = {"on": float("inf"), "off": float("inf")}
+    try:
+        for mode in ("on", "off"):
+            proc, host, port, bport = start_server(
+                ["--jobs", "0", "--metrics", mode], binary=True)
+            c = PredictionClient(host, port, binary_port=bport,
+                                 timeout=600.0)
+            c.health()
+            c.argmin_many(singles, "b200")     # warm cache + socket
+            servers[mode] = (proc, c)
+        for _ in range(ROUNDS * 4):
+            for mode in ("on", "off"):
+                c = servers[mode][1]
+                t0 = time.perf_counter()
+                c.argmin_many(singles, "b200")
+                best[mode] = min(best[mode], time.perf_counter() - t0)
+    finally:
+        for proc, c in servers.values():
+            c.close()
+            stop_server(proc)
+    ratio = best["on"] / best["off"]
+    return {
+        "serve_metrics_on_pipelined_s": best["on"],
+        "serve_metrics_off_pipelined_s": best["off"],
+        "serve_metrics_overhead_ratio": ratio,
+        "serve_metrics_overhead_bounded": bool(ratio <= 1.05),
+    }
+
+
 def run_bench() -> dict:
     table = bench_table()
     n = len(table)
@@ -315,6 +365,7 @@ def run_bench() -> dict:
             c.close()
 
         chaos = _run_chaos(host, port, small_parts[:CHAOS_REQS], hw)
+        overhead = _run_metrics_overhead(singles)
 
         stats = client.cache_stats()
         single_cfg_s = N_SINGLE / best["single"]
@@ -369,6 +420,7 @@ def run_bench() -> dict:
             "serve_coalesced_requests_fused": int(
                 stats.get("coalescer_coalesced_requests", 0)),
             **chaos,
+            **overhead,
         }
     finally:
         client.close()
@@ -427,6 +479,12 @@ def main() -> None:
           f"{row['serve_chaos_completed_fraction'] * 100:.0f}% completed "
           f"in {row['serve_chaos_elapsed_s']:.2f} s, "
           f"all_correct={row['serve_chaos_all_correct']}")
+    print(f"metrics overhead: on "
+          f"{row['serve_metrics_on_pipelined_s'] * 1e3:8.1f} ms vs off "
+          f"{row['serve_metrics_off_pipelined_s'] * 1e3:8.1f} ms "
+          f"pipelined "
+          f"({(row['serve_metrics_overhead_ratio'] - 1) * 100:+.1f}%), "
+          f"bounded={row['serve_metrics_overhead_bounded']}")
     ok = (row["speedup_serve_batched_vs_single"] >= 3
           and row["speedup_binary_vs_http_single"] >= 10
           and row["serve_batched_bit_identical"]
@@ -435,9 +493,11 @@ def main() -> None:
           and row["serve_binary_bit_identical"]
           and row["serve_dedup_bit_identical"]
           and row["serve_replay_not_slower"]
-          and row["serve_chaos_all_correct"])
+          and row["serve_chaos_all_correct"]
+          and row["serve_metrics_overhead_bounded"])
     print("PASS (>=3x batched-vs-single, >=10x binary-vs-http single, "
-          "bit-identical, replay<=cold, chaos-correct)" if ok else "FAIL")
+          "bit-identical, replay<=cold, chaos-correct, metrics<=5%)"
+          if ok else "FAIL")
 
 
 if __name__ == "__main__":

@@ -15,10 +15,21 @@ with ``repro.serve.PredictionClient``:
   5. the framed persistent-socket transport (binary framing v1): the
      server also opens ``--binary-port``, the client auto-negotiates it
      via ``/v1/health``, and a burst of single-row requests is pipelined
-     over one socket — then deduped server-side when the tables repeat.
+     over one socket — then deduped server-side when the tables repeat;
+  6. the observability surface: everything above was instrumented as it
+     ran, so the demo ends by fetching ``/v1/metrics`` and rendering the
+     busiest latency histograms as a mini text dashboard.
+
+``--metrics off`` and ``--slow-request-ms N`` are forwarded to the
+server subprocess; the default slow threshold (250 ms) is low enough
+that the ~1M-row streamed lattice emits a structured JSON slow-request
+line on the server's stderr, trace id included.
 
 Run:  PYTHONPATH=src python examples/serve_predictions.py
+      PYTHONPATH=src python examples/serve_predictions.py --metrics off
 """
+import argparse
+import re
 import threading
 import time
 
@@ -35,8 +46,80 @@ TILES = [TileConfig(bm, bn, bk)
 SHAPES = [(2048 + 512 * s, 4096, 4096) for s in range(160)]
 
 
-def main():
-    proc, host, port, bport = start_server_subprocess(binary=True)
+def _quantile_bound(buckets, count, q):
+    """Smallest bucket bound holding at least the q-th observation."""
+    target = q * count
+    for bound, cum in buckets:
+        if cum >= target:
+            return bound
+    return float("inf")
+
+
+def _ms(bound):
+    return "inf" if bound == float("inf") else f"{bound * 1e3:g}ms"
+
+
+def metrics_dashboard(text, top=5):
+    """The busiest ``*_seconds`` histograms from a Prometheus text
+    exposition, one line each: count, mean, and p50/p99 upper bounds
+    read off the fixed bucket ladder."""
+    kinds = dict(
+        re.findall(r"^# TYPE (\S+) (\S+)$", text, flags=re.MULTILINE))
+    series = {}
+    for line in text.splitlines():
+        if not line or line.startswith("#"):
+            continue
+        metric, _, val = line.rpartition(" ")
+        base, _, lbl = metric.partition("{")
+        lbl = lbl[:-1] if lbl.endswith("}") else ""
+        for suffix in ("_bucket", "_sum", "_count"):
+            fam = base[:-len(suffix)]
+            if base.endswith(suffix) and kinds.get(fam) == "histogram" \
+                    and fam.endswith("_seconds"):
+                break
+        else:
+            continue
+        le = None
+        if suffix == "_bucket":
+            le = re.search(r'le="([^"]*)"', lbl).group(1)
+            lbl = re.sub(r',?le="[^"]*"', "", lbl).strip(",")
+        s = series.setdefault((fam, lbl),
+                              {"buckets": [], "sum": 0.0, "count": 0})
+        if suffix == "_bucket":
+            s["buckets"].append(
+                (float("inf") if le == "+Inf" else float(le), float(val)))
+        elif suffix == "_sum":
+            s["sum"] = float(val)
+        else:
+            s["count"] = int(float(val))
+    busiest = sorted(series.items(), key=lambda kv: -kv[1]["count"])
+    lines = []
+    for (fam, lbl), s in busiest[:top]:
+        if not s["count"]:
+            continue
+        buckets = sorted(s["buckets"])
+        name = f"{fam}{{{lbl}}}" if lbl else fam
+        lines.append(
+            f"{name:<58s} n={s['count']:<5d} "
+            f"mean {s['sum'] / s['count'] * 1e3:8.2f}ms  "
+            f"p50<={_ms(_quantile_bound(buckets, s['count'], 0.50))}  "
+            f"p99<={_ms(_quantile_bound(buckets, s['count'], 0.99))}")
+    return lines
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(
+        description="prediction-serving demo (see module docstring)")
+    ap.add_argument("--metrics", choices=("on", "off"), default="on",
+                    help="forwarded to the server subprocess; 'off' shows "
+                         "the kill switch (the dashboard renders empty)")
+    ap.add_argument("--slow-request-ms", type=float, default=250.0,
+                    help="forwarded: server logs a structured JSON line "
+                         "for sweeps slower than this (trace id included)")
+    args = ap.parse_args(argv)
+    extra = ["--metrics", args.metrics,
+             "--slow-request-ms", str(args.slow_request_ms)]
+    proc, host, port, bport = start_server_subprocess(extra, binary=True)
     client = PredictionClient(host, port)
     try:
         print(f"server pid {proc.pid} at {host}:{port} -> "
@@ -114,6 +197,16 @@ def main():
               f"in {dt_pipe * 1e3:.1f} ms "
               f"({len(wins) / max(dt_pipe, 1e-9):.0f} req/s); repeating "
               f"one table 16x deduped {saved} request(s) server-side")
+
+        # -- 6. the observability surface: /v1/metrics ------------------
+        text = client.metrics_text()
+        dash = metrics_dashboard(text)
+        print(f"/v1/metrics ({len(text.splitlines())} exposition lines), "
+              f"busiest latency histograms:")
+        for line in dash:
+            print(f"  {line}")
+        if not dash:
+            print("  (metrics disabled — rerun without --metrics off)")
     finally:
         client.close()
         stop_server_subprocess(proc)

@@ -1,0 +1,51 @@
+"""Launch the prediction server as a long-lived local service.
+
+Thin launcher over ``repro.serve.server.main`` that (a) puts ``src/`` on
+``sys.path`` so it runs from a repo checkout without ``PYTHONPATH``
+plumbing, and (b) applies service-shaped defaults on top of the server's
+own (which are tuned for tests and ephemeral subprocesses):
+
+    --jobs 0             worker pool sized to every core
+    --binary-port 8708   the framed persistent-socket transport, on
+    --metrics on         observability layer live; scrape GET /v1/metrics
+    --slow-request-ms 500  structured JSON slow-request log on stderr,
+                           each line carrying the request's trace id
+
+Every flag is forwarded verbatim and anything you pass explicitly wins
+over these defaults — ``--metrics off`` disables every counter,
+histogram and span process-wide (the ``/v1/metrics`` surface stays up
+but stops moving), and ``--slow-request-ms 0`` logs every sweep.
+See ``src/repro/serve/README.md`` "Observability" for the metric naming
+contract and the Prometheus scrape stanza.
+
+Run:  python launch/predict_serve.py
+      python launch/predict_serve.py --port 9000 --metrics off
+      python launch/predict_serve.py --slow-request-ms 50 2>slow.jsonl
+"""
+import os
+import sys
+
+_SRC = os.path.normpath(os.path.join(
+    os.path.dirname(os.path.abspath(__file__)), "..", "src"))
+if _SRC not in sys.path:
+    sys.path.insert(0, _SRC)
+
+DEFAULTS = (
+    ("--jobs", "0"),
+    ("--binary-port", "8708"),
+    ("--metrics", "on"),
+    ("--slow-request-ms", "500"),
+)
+
+
+def main(argv=None):
+    argv = list(sys.argv[1:] if argv is None else argv)
+    for flag, value in DEFAULTS:
+        if not any(a == flag or a.startswith(flag + "=") for a in argv):
+            argv += [flag, value]
+    from repro.serve.server import main as server_main
+    server_main(argv)
+
+
+if __name__ == "__main__":
+    main()

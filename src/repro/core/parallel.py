@@ -50,6 +50,7 @@ import math
 import multiprocessing
 import sys
 import threading
+import time
 from concurrent.futures import BrokenExecutor, ProcessPoolExecutor, \
     ThreadPoolExecutor
 from concurrent.futures import TimeoutError as _FutTimeout
@@ -59,11 +60,28 @@ import numpy as np
 
 from . import sweep as sweep_mod
 from . import workload as workload_mod
+from ..obs import metrics
 from .hardware import HardwareParams
 
 __all__ = ["SharedTable", "StragglerError", "WorkerPool", "map_jobs",
            "processes_available", "reduce_sharded", "reduce_sharded_multi",
            "resolve_jobs"]
+
+
+# pool-level series (process registry; near-free when metrics are off)
+_M_SHARD_S = metrics.histogram(
+    "repro_pool_shard_seconds",
+    "Shard wall clock from submit to worker completion")
+_M_STRAGGLER = metrics.counter(
+    "repro_pool_straggler_redispatch_total",
+    "Shards re-dispatched in the parent after a straggler timeout or "
+    "dead pool")
+
+
+def _observe_shard(t_submit: float):
+    def _cb(_fut) -> None:
+        _M_SHARD_S.observe(time.monotonic() - t_submit)
+    return _cb
 
 
 class StragglerError(RuntimeError):
@@ -382,6 +400,7 @@ def _shard_result(fut, task: Tuple, timeout_s: Optional[float],
         return fut.result(timeout=timeout_s)
     except (_FutTimeout, BrokenExecutor) as first:
         fut.cancel()
+        _M_STRAGGLER.inc()
         if pool is not None and isinstance(first, BrokenExecutor):
             pool.recover(broken=executor)
         payload, hw, passes, lo, hi, base, size = task
@@ -472,9 +491,13 @@ def reduce_sharded_multi(source, hw: HardwareParams,
         executor, _procs = _make_pool(njobs, use_threads)
         owned = True
     try:
-        futs = [executor.submit(_price_shard, payload, hw, passes,
+        futs = []
+        for payload, lo, hi, base in tasks:
+            t_submit = time.monotonic()
+            f = executor.submit(_price_shard, payload, hw, passes,
                                 lo, hi, base, size)
-                for payload, lo, hi, base in tasks]
+            f.add_done_callback(_observe_shard(t_submit))
+            futs.append(f)
         partials = [
             _shard_result(f, (payload, hw, passes, lo, hi, base, size),
                           straggler_timeout_s, pool, executor)

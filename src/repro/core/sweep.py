@@ -64,6 +64,7 @@ import heapq
 import math
 import os
 import threading
+import time
 from collections import OrderedDict
 from dataclasses import dataclass
 from functools import partial
@@ -72,6 +73,7 @@ from typing import Callable, Dict, Iterator, List, Optional, Sequence, Tuple
 import numpy as np
 
 from . import blackwell, cdna3, generic, roofline
+from ..obs import metrics
 from .hardware import HardwareParams
 from .workload import DEFAULT_CHUNK_ROWS, LatticeSpec, Row, TB_FIELDS, \
     TimeBreakdown, Workload, WorkloadTable, row_from_tb, tb_from_row
@@ -345,6 +347,14 @@ class SweepEngine:
         self._lock = threading.Lock()
         self.hits = 0
         self.misses = 0
+        self._m_table_s = {c: metrics.histogram(
+            "repro_sweep_predict_table_seconds",
+            "predict_table latency split by cache outcome", cache=c)
+            for c in ("hit", "miss")}
+        self._m_rows = {c: metrics.counter(
+            "repro_sweep_rows_total",
+            "Rows priced through the engine, split by cache outcome",
+            cache=c) for c in ("hit", "miss")}
 
     # ------------------------------------------------------------- queries
     def predict_batch(self, workloads: Sequence[Workload],
@@ -363,7 +373,9 @@ class SweepEngine:
         n = len(workloads)
 
         if not self.use_cache:
-            self.misses += n
+            with self._lock:
+                self.misses += n
+            self._m_rows["miss"].inc(n)
             return BatchResult(_eval_rows(route, workloads, hw),
                                workloads, calibration)
 
@@ -389,6 +401,7 @@ class SweepEngine:
                 if hit is not None:
                     self._batch_cache.move_to_end(bkey)
                     self.hits += n
+                    self._m_rows["hit"].inc(n)
                     return BatchResult(hit, workloads, calibration)
 
         # tier 2: per-row content keys (LRU)
@@ -409,6 +422,10 @@ class SweepEngine:
                     miss_idx.append(i)
             self.hits += n - len(miss_idx)
             self.misses += len(miss_idx)
+        if n > len(miss_idx):
+            self._m_rows["hit"].inc(n - len(miss_idx))
+        if miss_idx:
+            self._m_rows["miss"].inc(len(miss_idx))
 
         if miss_idx:
             if len(miss_idx) == n:
@@ -451,10 +468,15 @@ class SweepEngine:
         route = model or default_route(hw)
         cols_fn = _cols_fn(route)
         n = len(table)
+        t0 = time.monotonic()
 
         if not (self.use_cache if cache is None else cache):
-            self.misses += n
-            return TableResult(cols_fn(table, hw), table, calibration)
+            cols = cols_fn(table, hw)
+            with self._lock:
+                self.misses += n
+            self._m_rows["miss"].inc(n)
+            self._m_table_s["miss"].observe(time.monotonic() - t0)
+            return TableResult(cols, table, calibration)
 
         key = (hardware_key(hw), route, table.content_token())
         with self._lock:
@@ -462,13 +484,18 @@ class SweepEngine:
             if hit is not None:
                 self._table_cache.move_to_end(key)
                 self.hits += n
-                return TableResult(hit, table, calibration)
+        if hit is not None:
+            self._m_rows["hit"].inc(n)
+            self._m_table_s["hit"].observe(time.monotonic() - t0)
+            return TableResult(hit, table, calibration)
         cols = cols_fn(table, hw)
         with self._lock:
             self.misses += n
             self._table_cache[key] = cols
             while len(self._table_cache) > self.max_table_entries:
                 self._table_cache.popitem(last=False)
+        self._m_rows["miss"].inc(n)
+        self._m_table_s["miss"].observe(time.monotonic() - t0)
         return TableResult(cols, table, calibration)
 
     def predict(self, w: Workload, hw: HardwareParams, *,
@@ -480,10 +507,13 @@ class SweepEngine:
 
     # --------------------------------------------------------------- admin
     def cache_stats(self) -> Dict[str, int]:
-        return {"hits": self.hits, "misses": self.misses,
-                "entries": len(self._cache),
-                "batch_entries": len(self._batch_cache),
-                "table_entries": len(self._table_cache)}
+        """Consistent snapshot: counters and sizes read under the cache
+        lock, so ``hits + misses`` can never tear mid-update."""
+        with self._lock:
+            return {"hits": self.hits, "misses": self.misses,
+                    "entries": len(self._cache),
+                    "batch_entries": len(self._batch_cache),
+                    "table_entries": len(self._table_cache)}
 
     def clear_cache(self) -> None:
         with self._lock:

@@ -1,0 +1,19 @@
+"""Dependency-free observability substrate for the repro stack.
+
+Two modules, stdlib only:
+
+* :mod:`repro.obs.metrics` — thread-safe Counter / Gauge / Histogram
+  primitives behind a process-global named registry, rendered with
+  :func:`repro.obs.metrics.render_prometheus` in Prometheus text
+  exposition format (served as ``GET /v1/metrics`` and the binary
+  ``OP_METRICS`` frame by the serve stack).
+* :mod:`repro.obs.trace` — 16-hex trace ids, bounded in-process span
+  records, and the propagation contract (``X-Repro-Trace`` HTTP header
+  plus the additive ``trace_id`` field in the codec request meta).
+
+Everything is near-free and can be disabled process-wide with
+``metrics.set_enabled(False)`` (the server's ``--metrics off`` switch).
+"""
+from . import metrics, trace
+
+__all__ = ["metrics", "trace"]

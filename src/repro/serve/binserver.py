@@ -43,11 +43,12 @@ from concurrent.futures import ThreadPoolExecutor
 from typing import Dict, Optional, Tuple
 
 from ..core.workload import WorkloadTable
+from ..obs import metrics, trace
 from . import codec, errors
 from .codec import WireFormatError
-from .framing import (FLAG_ERROR, OP_CACHE_STATS, OP_HEALTH, OP_SWEEP,
-                      FrameParser, pack_frame)
-from .server import DRAIN_RETRY_AFTER_S
+from .framing import (FLAG_ERROR, OP_CACHE_STATS, OP_HEALTH, OP_METRICS,
+                      OP_SWEEP, FrameParser, pack_frame)
+from .server import DRAIN_RETRY_AFTER_S, _stage_hist
 
 __all__ = ["BinaryFrontend"]
 
@@ -97,6 +98,18 @@ class BinaryFrontend:
         self.server = server
         self._stats = {"connections": 0, "frames_in": 0, "frames_out": 0,
                        "requests": 0, "protocol_errors": 0}
+        #: one lock over stats mutations + snapshot: the loop thread is
+        #: the only writer, but ``cache_stats`` reads from handler
+        #: threads and must never see a torn multi-key combination
+        self._stats_lock = threading.Lock()
+        #: sweep frames accepted but not yet answered (pipeline depth)
+        self._inflight_n = 0
+        self._m_inflight = metrics.gauge(
+            "repro_serve_binary_inflight",
+            "Sweep frames in flight on the binary transport")
+        self._m_accepted = metrics.counter(
+            "repro_serve_binary_connections_total",
+            "Connections accepted on the binary port")
         self._listener = socket.socket(socket.AF_INET, socket.SOCK_STREAM)
         try:
             self._listener.setsockopt(socket.SOL_SOCKET,
@@ -131,9 +144,23 @@ class BinaryFrontend:
 
     @property
     def stats(self) -> Dict[str, int]:
-        out = dict(self._stats)
+        return self.stats_snapshot()
+
+    def stats_snapshot(self) -> Dict[str, int]:
+        """A mutually consistent copy of the frontend counters."""
+        with self._stats_lock:
+            out = dict(self._stats)
         out["connections_open"] = len(self._conns)
         return out
+
+    def _bump(self, key: str, n: int = 1) -> None:
+        with self._stats_lock:
+            self._stats[key] += n
+
+    def _track_inflight(self, delta: int) -> None:
+        # loop-thread only — the gauge mirrors it for scrapers
+        self._inflight_n += delta
+        self._m_inflight.set(self._inflight_n)
 
     def start(self) -> "BinaryFrontend":
         if self._thread is None:
@@ -229,13 +256,16 @@ class BinaryFrontend:
             conn = _Conn(s)
             self._conns.add(conn)
             self._sel.register(s, selectors.EVENT_READ, conn)
-            self._stats["connections"] += 1
+            self._bump("connections")
+            self._m_accepted.inc()
 
     def _close_conn(self, conn: _Conn) -> None:
         try:
             self._sel.unregister(conn.sock)
         except (KeyError, ValueError):
             pass
+        if conn in self._conns and conn.inflight:
+            self._track_inflight(-len(conn.inflight))
         self._conns.discard(conn)
         try:
             conn.sock.close()
@@ -256,14 +286,14 @@ class BinaryFrontend:
         try:
             conn.parser.feed(data)
             for frame in conn.parser.frames():
-                self._stats["frames_in"] += 1
+                self._bump("frames_in")
                 self._handle_frame(conn, frame)
                 if conn.dead:                # closed mid-burst
                     return
         except WireFormatError:
             # the stream offset is untrustworthy — close instead of
             # guessing where the next frame starts
-            self._stats["protocol_errors"] += 1
+            self._bump("protocol_errors")
             self._close_conn(conn)
 
     # ------------------------------------------------------------ dispatch
@@ -271,10 +301,10 @@ class BinaryFrontend:
         if frame.req_id in conn.inflight:
             # two outstanding requests with one id cannot be demuxed —
             # closing is safer than ever answering the wrong caller
-            self._stats["protocol_errors"] += 1
+            self._bump("protocol_errors")
             self._close_conn(conn)
             return
-        self._stats["requests"] += 1
+        self._bump("requests")
         server = self.server
         server.n_requests += 1
         if frame.op == OP_HEALTH:
@@ -284,6 +314,12 @@ class BinaryFrontend:
         if frame.op == OP_CACHE_STATS:
             self._send_local(conn, frame.op, frame.req_id,
                              codec.encode_json(server.stats()))
+            return
+        if frame.op == OP_METRICS:
+            # the same Prometheus text /v1/metrics serves, wrapped in a
+            # MSG_JSON; answers during drain like the other probe ops
+            self._send_local(conn, frame.op, frame.req_id,
+                             codec.encode_json(server.metrics_text()))
             return
         # OP_SWEEP from here on
         if self._draining or self._closed:
@@ -297,8 +333,13 @@ class BinaryFrontend:
         deadline = (time.monotonic() + frame.deadline_s
                     if frame.deadline_s > 0.0 else None)
         conn.inflight.add(frame.req_id)
+        self._track_inflight(+1)
+        t0 = time.monotonic()
         try:
             op, source, meta = codec.decode_request(frame.payload)
+            trace_id = trace.coerce_trace_id(meta.get("trace_id"))
+            _stage_hist("parse").observe(time.monotonic() - t0,
+                                         trace_id=trace_id)
             if isinstance(source, WorkloadTable) \
                     and meta.get("coalesce", True):
                 # the fast path: park in the coalescer without blocking;
@@ -308,15 +349,20 @@ class BinaryFrontend:
                     server._resolve_sweep(meta)
                 req_id = frame.req_id
 
-                def on_done(r, conn=conn, op=op, req_id=req_id):
+                def on_done(r, conn=conn, op=op, req_id=req_id,
+                            trace_id=trace_id, t0=t0):
                     if r.error is not None:
                         payload, flags = codec.encode_error(r.error), \
                             FLAG_ERROR
                     else:
                         try:
+                            t_enc = time.monotonic()
                             payload = (codec.encode_totals(r.result)
                                        if op == "predict_table"
                                        else codec.encode_winners(r.result))
+                            _stage_hist("encode").observe(
+                                time.monotonic() - t_enc,
+                                trace_id=trace_id)
                             flags = 0
                         except Exception as e:  # noqa: BLE001
                             payload, flags = codec.encode_error(e), \
@@ -324,11 +370,15 @@ class BinaryFrontend:
                     self._completed.append(
                         (conn, OP_SWEEP, req_id, payload, flags))
                     self._wake()
+                    self.server._observe_request(
+                        "binary", op, trace_id, time.monotonic() - t0,
+                        400 if flags & FLAG_ERROR else 200)
 
                 server.coalescer.submit_async(
                     op, source, hw, model, k=k, objectives=objectives,
                     calibration=calibration, deadline=deadline,
-                    max_rows=max_rows, on_done=on_done)
+                    max_rows=max_rows, on_done=on_done,
+                    trace_id=trace_id)
                 return
         except Exception as e:               # noqa: BLE001 — typed reply
             self._send_local(conn, OP_SWEEP, frame.req_id,
@@ -337,17 +387,22 @@ class BinaryFrontend:
         # the slow path: lattice specs and coalesce=False tables block
         # for real evaluation time — never on the loop
         self._pool.submit(self._answer_slow, conn, op, source, meta,
-                          deadline, frame.req_id)
+                          deadline, frame.req_id, trace_id, t0)
 
     def _answer_slow(self, conn: _Conn, op, source, meta, deadline,
-                     req_id: int) -> None:
+                     req_id: int, trace_id=None, t0=None) -> None:
         try:
             payload, flags = self.server.answer_decoded(
-                op, source, meta, deadline=deadline), 0
+                op, source, meta, deadline=deadline,
+                trace_id=trace_id), 0
         except BaseException as e:           # noqa: BLE001 — typed reply
             payload, flags = codec.encode_error(e), FLAG_ERROR
         self._completed.append((conn, OP_SWEEP, req_id, payload, flags))
         self._wake()
+        if t0 is not None:
+            self.server._observe_request(
+                "binary", op, trace_id, time.monotonic() - t0,
+                400 if flags & FLAG_ERROR else 200)
 
     # -------------------------------------------------------------- output
     def _drain_completed(self) -> None:
@@ -366,9 +421,11 @@ class BinaryFrontend:
         """Queue one reply frame and push bytes opportunistically (send
         now if the socket will take them — a select round-trip per reply
         would put scheduler latency back on the fast path)."""
-        conn.inflight.discard(req_id)
+        if req_id in conn.inflight:
+            conn.inflight.discard(req_id)
+            self._track_inflight(-1)
         conn.out += pack_frame(op, req_id, payload, flags=flags)
-        self._stats["frames_out"] += 1
+        self._bump("frames_out")
         self._flush(conn)
 
     def _flush(self, conn: _Conn) -> None:

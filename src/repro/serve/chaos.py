@@ -33,16 +33,28 @@ a plain list — build it explicitly for pinpoint tests, or with
 ``seeded_schedule(seed, n)`` for a reproducible mixed barrage; once the
 schedule is exhausted, ``default`` (normally ``"pass"``) applies, so a
 finite schedule never starves a retrying client.
+
+Beyond the byte-stream injuries, ``kill_server_process`` is the
+process-level scenario: SIGKILL the whole server session mid-stream (no
+graceful drain, no FIN from the worker pool) and let the client prove
+that a vanished peer surfaces as a typed retryable transport error —
+and, once retries exhaust against the dead address, that the circuit
+breaker opens (``repro_client_breaker_open_total``) so subsequent calls
+fail fast instead of each paying a connect timeout.
 """
 from __future__ import annotations
 
+import os
 import random
+import signal
 import socket
+import subprocess
 import threading
 import time
 from typing import List, Optional, Sequence, Tuple, Union
 
-__all__ = ["ChaosProxy", "FAULT_KINDS", "FaultSpec", "seeded_schedule"]
+__all__ = ["ChaosProxy", "FAULT_KINDS", "FaultSpec", "kill_server_process",
+           "seeded_schedule"]
 
 FAULT_KINDS = ("pass", "delay", "stall", "truncate", "bitflip", "sever")
 
@@ -266,3 +278,35 @@ def _close(sock: Optional[socket.socket]) -> None:
         sock.close()
     except OSError:
         pass
+
+
+def kill_server_process(proc: "subprocess.Popen",
+                        timeout_s: float = 10.0) -> int:
+    """SIGKILL a server subprocess session mid-stream and reap it.
+
+    The process-level chaos scenario: unlike ``stop_server_subprocess``
+    (SIGTERM -> graceful drain -> fallback kill), this kills the whole
+    session group immediately — in-flight requests never get a reply
+    byte, listening sockets close with RSTs in flight, the worker pool
+    dies with its parent.  The client contract under this injury:
+
+      * requests in flight (or sent after death) surface as retryable
+        transport errors (``ConnectionError``/``OSError`` family, or
+        ``DeadlineExceeded`` once a caller budget expires),
+      * after ``breaker_threshold`` consecutive connect failures the
+        circuit opens (``CircuitOpenError`` fail-fast; the
+        ``repro_client_breaker_open_total`` counter records the
+        closed->open transition).
+
+    Returns the reaped exit status (negative signal number on POSIX).
+    Falls back to killing the bare PID when the process is not a session
+    leader.  Idempotent: killing an already-dead process just reaps it.
+    """
+    try:
+        os.killpg(os.getpgid(proc.pid), signal.SIGKILL)
+    except (ProcessLookupError, PermissionError, OSError):
+        try:
+            proc.kill()
+        except OSError:
+            pass
+    return proc.wait(timeout=timeout_s)

@@ -60,9 +60,10 @@ from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from ..obs import metrics, trace
 from . import codec, errors
-from .framing import (FLAG_ERROR, OP_CACHE_STATS, OP_HEALTH, OP_SWEEP,
-                      FrameParser, pack_frame)
+from .framing import (FLAG_ERROR, OP_CACHE_STATS, OP_HEALTH, OP_METRICS,
+                      OP_SWEEP, FrameParser, pack_frame)
 
 #: server fault classes rebuilt from binary error frames by name —
 #: parity with the HTTP status mapping (401/429/503)
@@ -77,6 +78,37 @@ _FAULT_BY_NAME = {
 #: handling (DeadlineExceeded replies only happen when the caller set a
 #: budget, so the caller's own deadline bounds the retries)
 _RETRYABLE_NAMES = ("RateLimited", "ServerOverloaded", "DeadlineExceeded")
+
+# client-side series (process registry; near-free when metrics are off)
+_M_ATTEMPTS = {t: metrics.counter("repro_client_attempts_total",
+                                  "Request attempts (retries included)",
+                                  transport=t)
+               for t in ("http", "binary")}
+_M_ATTEMPT_S = {t: metrics.histogram("repro_client_attempt_seconds",
+                                     "Per-attempt request latency",
+                                     transport=t)
+                for t in ("http", "binary")}
+_M_RETRIES = metrics.counter("repro_client_retries_total",
+                             "Attempts that were retried after backoff")
+_M_BACKOFF_S = metrics.counter("repro_client_backoff_seconds_total",
+                               "Cumulative seconds slept in backoff")
+_M_BREAKER_OPEN = metrics.counter("repro_client_breaker_open_total",
+                                  "Circuit breaker closed->open "
+                                  "transitions")
+
+
+def _observe_attempt(transport: str, trace_id, t0: float,
+                     status=None, error=None) -> None:
+    """One per-attempt span + latency observation (both transports)."""
+    dt = time.monotonic() - t0
+    _M_ATTEMPTS[transport].inc()
+    _M_ATTEMPT_S[transport].observe(dt, trace_id=trace_id)
+    attrs = {"transport": transport}
+    if status is not None:
+        attrs["status"] = status
+    if error is not None:
+        attrs["error"] = type(error).__name__
+    trace.record_span("client.attempt", trace_id, dt, **attrs)
 
 
 class _CircuitBreaker:
@@ -118,6 +150,8 @@ class _CircuitBreaker:
             self._fails += 1
             self._probing = False
             if self._fails >= self.threshold > 0:
+                if self._opened_at is None:
+                    _M_BREAKER_OPEN.inc()
                 self._opened_at = time.monotonic()
 
 
@@ -227,16 +261,23 @@ class PredictionClient:
 
     def _request(self, method: str, path: str,
                  body: Optional[bytes] = None, *,
-                 deadline_s: Optional[float] = None) -> bytes:
+                 deadline_s: Optional[float] = None,
+                 trace_id: Optional[str] = None,
+                 raw: bool = False) -> bytes:
         """Send with retries/backoff/deadline; return the verified reply.
 
         The deadline is computed ONCE here — reconnects, retries and
-        ``close()`` shrink the remaining budget, never reset it."""
+        ``close()`` shrink the remaining budget, never reset it.
+        ``trace_id`` rides the ``X-Repro-Trace`` header; ``raw`` skips
+        the codec envelope check for non-codec bodies (``/v1/metrics``
+        is plain Prometheus text)."""
         base_headers = {}
         if body is not None:
             base_headers["Content-Type"] = "application/x-repro-wire"
         if self.auth_token is not None:
             base_headers[errors.AUTH_HEADER] = self.auth_token
+        if trace_id is not None:
+            base_headers[trace.TRACE_HEADER] = trace_id
         deadline = None if deadline_s is None \
             else time.monotonic() + float(deadline_s)
         last_exc: Optional[BaseException] = None
@@ -253,11 +294,13 @@ class PredictionClient:
             headers = dict(base_headers)
             if remaining is not None:
                 headers[errors.DEADLINE_HEADER] = f"{remaining:.6f}"
+            ta = time.monotonic()
             try:
                 status, retry_after, data = self._once(
                     method, path, body, headers, remaining)
             except (http.client.HTTPException, ConnectionError,
                     OSError) as e:
+                _observe_attempt("http", trace_id, ta, error=e)
                 # Severed/stale socket or truncated frame.  The failure
                 # usually surfaces at getresponse(), after the request
                 # bytes went out, so a retry can re-execute a POST the
@@ -275,6 +318,7 @@ class PredictionClient:
                 attempt = self._backoff_or_raise(attempt, e, None,
                                                  deadline)
                 continue
+            _observe_attempt("http", trace_id, ta, status=status)
             if status == 401:
                 raise errors.Unauthorized(self._remote_message(data))
             if status in (429, 503):
@@ -286,6 +330,8 @@ class PredictionClient:
                 last_exc = e
                 attempt = self._backoff_or_raise(attempt, e, ra, deadline)
                 continue
+            if raw and status < 400:
+                return data
             try:
                 codec.raise_if_error(data)    # CRC-verifies the envelope
             except codec.WireFormatError as e:
@@ -317,6 +363,8 @@ class PredictionClient:
                 raise errors.DeadlineExceeded(
                     f"deadline would expire during the {delay:.3f}s "
                     f"backoff before retry {attempt + 1}") from exc
+        _M_RETRIES.inc()
+        _M_BACKOFF_S.inc(delay)
         time.sleep(delay)
         return attempt + 1
 
@@ -442,12 +490,14 @@ class PredictionClient:
         return cls(message)
 
     def _request_binary_many(self, bodies: List[bytes], *,
-                             deadline_s: Optional[float] = None
+                             deadline_s: Optional[float] = None,
+                             trace_ids: Optional[List[Optional[str]]] = None
                              ) -> List[bytes]:
         """Pipelined sweep round-trips: every outstanding request goes
         out in ONE write burst, replies demux by id in any order.  Same
         budget rules as ``_request``: one deadline computed at entry,
-        retries/backoff/breaker shared with HTTP."""
+        retries/backoff/breaker shared with HTTP.  ``trace_ids`` aligns
+        with ``bodies`` (per-request attempt spans/exemplars)."""
         deadline = None if deadline_s is None \
             else time.monotonic() + float(deadline_s)
         results: List[Optional[bytes]] = [None] * len(bodies)
@@ -464,10 +514,15 @@ class PredictionClient:
                         f"{attempt} attempt(s), "
                         f"{len(outstanding)} reply(ies) outstanding"
                     ) from last_exc
+            ta = time.monotonic()
             try:
                 outstanding, retry_after, fault = self._bin_round(
-                    bodies, outstanding, results, remaining)
+                    bodies, outstanding, results, remaining, trace_ids)
             except (OSError, ConnectionError) as e:
+                _observe_attempt(
+                    "binary",
+                    trace_ids[outstanding[0]] if trace_ids else None,
+                    ta, error=e)
                 self._discard_bconn()
                 if deadline is not None and time.monotonic() >= deadline:
                     raise errors.DeadlineExceeded(
@@ -494,10 +549,12 @@ class PredictionClient:
                                                  retry_after, deadline)
         return results                       # type: ignore[return-value]
 
-    def _bin_round(self, bodies, outstanding, results, remaining):
+    def _bin_round(self, bodies, outstanding, results, remaining,
+                   trace_ids=None):
         """One pipelined attempt over the current socket.  Returns
         ``(still_outstanding, retry_after, fault)``; raises transport /
         wire errors for the caller's retry loop."""
+        t0 = time.monotonic()
         sock = self._bconn(remaining)
         st = self._local
         read_t = self.timeout
@@ -524,8 +581,10 @@ class PredictionClient:
                     continue
                 pending.discard(req_id)
                 idx = ids[req_id]
+                tid = trace_ids[idx] if trace_ids else None
                 if frame.flags & FLAG_ERROR:
                     exc = self._rebuild_fault(frame.payload)
+                    _observe_attempt("binary", tid, t0, error=exc)
                     if type(exc).__name__ in _RETRYABLE_NAMES:
                         still.append(idx)
                         ra = getattr(exc, "retry_after_s", None)
@@ -544,6 +603,7 @@ class PredictionClient:
                     raise codec.WireFormatError(
                         "error payload in a success-flagged frame — "
                         "frame header untrustworthy") from None
+                _observe_attempt("binary", tid, t0, status=200)
                 results[idx] = frame.payload
         still.sort()
         return still, retry_after, fault
@@ -637,13 +697,30 @@ class PredictionClient:
             self._request("POST", "/v1/clear_cache", b"",
                           deadline_s=deadline_s))
 
+    def metrics_text(self, *, deadline_s: Optional[float] = None) -> str:
+        """The server's Prometheus text exposition — the same snapshot
+        whether fetched as raw ``GET /v1/metrics`` or a binary
+        ``OP_METRICS`` frame (the frame wraps the identical text in a
+        JSON codec message)."""
+        if self.transport == "binary" and self._binary_target(deadline_s):
+            return codec.decode_json(self._simple_binary(
+                OP_METRICS, deadline_s=deadline_s))
+        return self._request("GET", "/v1/metrics", deadline_s=deadline_s,
+                             raw=True).decode("utf-8")
+
     def _sweep(self, op: str, source, hw: str,
-               deadline_s: Optional[float], **kw) -> bytes:
-        body = codec.encode_request(op, source, hw=hw, **kw)
+               deadline_s: Optional[float],
+               trace_id: Optional[str] = None, **kw) -> bytes:
+        if trace_id is None:
+            trace_id = trace.new_trace_id()
+        body = codec.encode_request(op, source, hw=hw,
+                                    trace_id=trace_id, **kw)
         t0 = time.monotonic()
         if self._binary_target(deadline_s) is not None:
             try:
-                return self._request_binary(body, deadline_s=deadline_s)
+                return self._request_binary_many(
+                    [body], deadline_s=deadline_s,
+                    trace_ids=[trace_id])[0]
             except (OSError, ConnectionError):
                 # the binary port is unreachable (stale advertisement,
                 # proxy in the way): under auto-negotiation downgrade to
@@ -657,30 +734,35 @@ class PredictionClient:
             # already spent part of it
             deadline_s -= time.monotonic() - t0
         return self._request("POST", f"/v1/{op}", body,
-                             deadline_s=deadline_s)
+                             deadline_s=deadline_s, trace_id=trace_id)
 
     def argmin_many(self, tables, hw: str, *,
                     model: Optional[str] = None,
                     coalesce: bool = True,
                     calibration: Optional[str] = None,
                     max_fused_rows: Optional[int] = None,
-                    deadline_s: Optional[float] = None):
+                    deadline_s: Optional[float] = None,
+                    trace_ids: Optional[List[Optional[str]]] = None):
         """Pipelined ``argmin`` over many tables: every request goes out
         in one burst on the thread's binary socket and the coalescer
         fuses (and dedups) them into shared evaluations — the intended
         operating mode of the binary transport.  Falls back to
         sequential HTTP calls when no binary port is available.
-        Returns one ``SweepWinner`` per table, in order."""
+        Returns one ``SweepWinner`` per table, in order.  ``trace_ids``
+        aligns with ``tables`` (one fresh id per table by default)."""
         tables = list(tables)
+        if trace_ids is None:
+            trace_ids = [trace.new_trace_id() for _ in tables]
         bodies = [codec.encode_request(
             "argmin", t, hw=hw, model=model, coalesce=coalesce,
-            calibration=calibration, max_fused_rows=max_fused_rows)
-            for t in tables]
+            calibration=calibration, max_fused_rows=max_fused_rows,
+            trace_id=tid)
+            for t, tid in zip(tables, trace_ids)]
         t0 = time.monotonic()
         if self._binary_target(deadline_s) is not None:
             try:
                 replies = self._request_binary_many(
-                    bodies, deadline_s=deadline_s)
+                    bodies, deadline_s=deadline_s, trace_ids=trace_ids)
                 return [codec.decode_winners(d)[0] for d in replies]
             except (OSError, ConnectionError):
                 if self.transport != "auto" or not self._http_fallback:
@@ -690,8 +772,9 @@ class PredictionClient:
         if deadline_s is not None:
             deadline_s = deadline_s - (time.monotonic() - t0)
         return [codec.decode_winners(self._request(
-            "POST", "/v1/argmin", b, deadline_s=deadline_s))[0]
-            for b in bodies]
+            "POST", "/v1/argmin", b, deadline_s=deadline_s,
+            trace_id=tid))[0]
+            for b, tid in zip(bodies, trace_ids)]
 
     def predict_totals(self, source, hw: str, *,
                        model: Optional[str] = None,
@@ -699,13 +782,15 @@ class PredictionClient:
                        coalesce: bool = True,
                        calibration: Optional[str] = None,
                        max_fused_rows: Optional[int] = None,
-                       deadline_s: Optional[float] = None) -> np.ndarray:
+                       deadline_s: Optional[float] = None,
+                       trace_id: Optional[str] = None) -> np.ndarray:
         """Every row's total seconds (the ``predict_table(...).totals``
         column, served).  ``calibration`` names a server-side calibration
         (see :meth:`calibrate`) whose multipliers scale the totals.
         ``max_fused_rows`` caps the estimated row-cost of any coalesced
         batch this request joins (a hint — clamped server-side)."""
         data = self._sweep("predict_table", source, hw, deadline_s,
+                           trace_id,
                            model=model, chunk_size=chunk_size, jobs=jobs,
                            coalesce=coalesce, calibration=calibration,
                            max_fused_rows=max_fused_rows)
@@ -715,9 +800,11 @@ class PredictionClient:
                chunk_size: Optional[int] = None, jobs=None,
                coalesce: bool = True, calibration: Optional[str] = None,
                max_fused_rows: Optional[int] = None,
-               deadline_s: Optional[float] = None):
+               deadline_s: Optional[float] = None,
+               trace_id: Optional[str] = None):
         """The cheapest configuration (a ``SweepWinner``)."""
-        data = self._sweep("argmin", source, hw, deadline_s, model=model,
+        data = self._sweep("argmin", source, hw, deadline_s, trace_id,
+                           model=model,
                            chunk_size=chunk_size, jobs=jobs,
                            coalesce=coalesce, calibration=calibration,
                            max_fused_rows=max_fused_rows)
@@ -728,8 +815,10 @@ class PredictionClient:
              chunk_size: Optional[int] = None, jobs=None,
              coalesce: bool = True, calibration: Optional[str] = None,
              max_fused_rows: Optional[int] = None,
-             deadline_s: Optional[float] = None):
-        data = self._sweep("topk", source, hw, deadline_s, model=model,
+             deadline_s: Optional[float] = None,
+             trace_id: Optional[str] = None):
+        data = self._sweep("topk", source, hw, deadline_s, trace_id,
+                           model=model,
                            k=int(k), chunk_size=chunk_size, jobs=jobs,
                            coalesce=coalesce, calibration=calibration,
                            max_fused_rows=max_fused_rows)
@@ -741,8 +830,10 @@ class PredictionClient:
                chunk_size: Optional[int] = None, jobs=None,
                coalesce: bool = True, calibration: Optional[str] = None,
                max_fused_rows: Optional[int] = None,
-               deadline_s: Optional[float] = None):
-        data = self._sweep("pareto", source, hw, deadline_s, model=model,
+               deadline_s: Optional[float] = None,
+               trace_id: Optional[str] = None):
+        data = self._sweep("pareto", source, hw, deadline_s, trace_id,
+                           model=model,
                            objectives=tuple(objectives),
                            chunk_size=chunk_size, jobs=jobs,
                            coalesce=coalesce, calibration=calibration,
@@ -828,6 +919,8 @@ def main(argv=None) -> None:
     sub = ap.add_subparsers(dest="cmd", required=True)
     sub.add_parser("health")
     sub.add_parser("cache-stats")
+    sub.add_parser("metrics",
+                   help="dump the server's Prometheus text exposition")
     demo = sub.add_parser(
         "argmin-demo",
         help="price a GEMM tile lattice on the server and print the "
@@ -844,6 +937,8 @@ def main(argv=None) -> None:
         print(client.health())
     elif args.cmd == "cache-stats":
         print(client.cache_stats())
+    elif args.cmd == "metrics":
+        print(client.metrics_text(), end="")
     else:
         from ..core.workload import TileConfig, WorkloadTable, gemm_workload
         m, n, k = (int(x) for x in args.gemm.split(","))

@@ -383,7 +383,8 @@ def encode_request(op: str, source, *, hw: str,
                    jobs=None,
                    coalesce: bool = True,
                    calibration: Optional[str] = None,
-                   max_fused_rows: Optional[int] = None) -> bytes:
+                   max_fused_rows: Optional[int] = None,
+                   trace_id: Optional[str] = None) -> bytes:
     """One prediction request: an operation + its parameters + the sweep
     source (a built ``WorkloadTable`` or a lazy ``LatticeSpec``).
     Hardware travels by registry name — parameter files live server-side.
@@ -392,6 +393,9 @@ def encode_request(op: str, source, *, hw: str,
     ``max_fused_rows`` is a coalescing hint: cap the estimated row-cost
     budget of any fused batch this request joins (clamped server-side —
     a hint can tighten the server's bound, never raise it).
+    ``trace_id`` (16-hex, see ``repro.obs.trace``) propagates a client
+    trace through both transports; like ``calibration`` it is additive
+    — requests without one stay byte-identical to v1 payloads.
     """
     if op not in REQUEST_OPS:
         raise ValueError(f"unknown op {op!r}; valid: {REQUEST_OPS}")
@@ -408,6 +412,8 @@ def encode_request(op: str, source, *, hw: str,
             raise ValueError(
                 f"max_fused_rows must be >= 1, got {max_fused_rows}")
         meta["max_fused_rows"] = int(max_fused_rows)
+    if trace_id is not None:
+        meta["trace_id"] = str(trace_id)
     sections: List[Tuple[bytes, Buf]] = [(b"meta", _json_bytes(meta))]
     if isinstance(source, WorkloadTable):
         sections.append((b"tabl", encode_table(source)))

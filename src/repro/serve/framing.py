@@ -51,8 +51,8 @@ from typing import Iterator, NamedTuple
 from .codec import WireFormatError
 
 __all__ = ["BIN_MAGIC", "FLAG_ERROR", "Frame", "FrameParser", "HEADER",
-           "MAX_FRAME_BYTES", "OP_CACHE_STATS", "OP_HEALTH", "OP_NAMES",
-           "OP_SWEEP", "pack_frame"]
+           "MAX_FRAME_BYTES", "OP_CACHE_STATS", "OP_HEALTH", "OP_METRICS",
+           "OP_NAMES", "OP_SWEEP", "pack_frame"]
 
 BIN_MAGIC = b"RPB1"
 
@@ -66,9 +66,10 @@ HEADER = struct.Struct("<4sBBHIQf")
 OP_HEALTH = 1        #: empty payload -> MSG_JSON health document
 OP_CACHE_STATS = 2   #: empty payload -> MSG_JSON stats document
 OP_SWEEP = 3         #: MSG_REQUEST payload -> MSG_WINNERS / MSG_TOTALS
+OP_METRICS = 4       #: empty payload -> MSG_JSON Prometheus text snapshot
 
 OP_NAMES = {OP_HEALTH: "health", OP_CACHE_STATS: "cache_stats",
-            OP_SWEEP: "sweep"}
+            OP_SWEEP: "sweep", OP_METRICS: "metrics"}
 
 #: reply flag: the payload is a ``MSG_ERROR`` codec message
 FLAG_ERROR = 0x01

@@ -9,6 +9,7 @@ pool startup per query), and one request coalescer.
 Endpoints (wire bodies are ``repro.serve.codec`` messages):
 
     GET  /v1/health        liveness + wire version + known hardware
+    GET  /v1/metrics       Prometheus text exposition (no auth, read-only)
     GET  /v1/cache_stats   engine cache counters + coalescer counters
     GET  /v1/hardware      JSON directory of the hardware library
     GET  /v1/hardware/<n>  one entry as a HARDWARE message
@@ -78,6 +79,7 @@ import numpy as np
 
 from ..core import hardware, sweep
 from ..core.workload import LatticeSpec, WorkloadTable
+from ..obs import metrics, trace
 from . import codec, errors
 
 #: refuse request bodies beyond this (a 2^31-row table is a streamed
@@ -114,19 +116,38 @@ MAX_FUSED_ROWS = 262_144
 SCALAR_ROW_COST = 50
 
 CONTENT_TYPE = "application/x-repro-wire"
+METRICS_CONTENT_TYPE = "text/plain; version=0.0.4; charset=utf-8"
+
+_STAGE_HELP = ("Per-stage request latency "
+               "(parse/queue_wait/fuse/evaluate/encode/write)")
+
+
+_STAGE_HISTS: dict = {}
+
+
+def _stage_hist(stage: str) -> metrics.Histogram:
+    # memoized: the registry's get-or-create takes its lock and
+    # re-validates names (~2.4us) — too much for twice per request
+    h = _STAGE_HISTS.get(stage)
+    if h is None:
+        h = _STAGE_HISTS[stage] = metrics.histogram(
+            "repro_serve_stage_seconds", _STAGE_HELP, stage=stage)
+    return h
 
 
 class _Pending:
     """One in-flight table request parked in the coalescer."""
 
     __slots__ = ("op", "table", "k", "objectives", "event", "result",
-                 "error", "deadline", "max_rows", "on_done")
+                 "error", "deadline", "max_rows", "on_done", "trace_id",
+                 "t_submit")
 
     def __init__(self, op: str, table: WorkloadTable, k: Optional[int],
                  objectives: Optional[Tuple[str, ...]],
                  deadline: Optional[float] = None,
                  max_rows: Optional[int] = None,
-                 on_done=None):
+                 on_done=None,
+                 trace_id: Optional[str] = None):
         self.op = op
         self.table = table
         self.k = k
@@ -138,6 +159,10 @@ class _Pending:
         #: completion callback for event-loop callers (invoked on the
         #: coalescer thread after result/error is set)
         self.on_done = on_done
+        #: client trace id (16-hex) riding the request through fusion,
+        #: dedup, and poison-isolation solo re-runs
+        self.trace_id = trace_id
+        self.t_submit = time.monotonic()
         self.event = threading.Event()
         self.result = None
         self.error: Optional[BaseException] = None
@@ -211,9 +236,58 @@ class Coalescer:
                       "deduped_requests": 0, "dedup_rows_saved": 0,
                       "shed_overload": 0, "shed_deadline": 0,
                       "isolated_failures": 0}
+        #: one lock covers every stats mutation AND the snapshot read, so
+        #: ``/v1/cache_stats`` can never observe a torn combination (e.g.
+        #: ``deduped_requests`` updated by the worker thread while
+        #: ``requests`` still shows the pre-submit value)
+        self._stats_lock = threading.Lock()
+        # metric series (get-or-create against the process registry)
+        self._m_queue_wait = _stage_hist("queue_wait")
+        self._m_fuse = _stage_hist("fuse")
+        self._m_evaluate = _stage_hist("evaluate")
+        self._m_batch_reqs = metrics.histogram(
+            "repro_serve_fused_batch_requests",
+            "Requests answered per fused evaluation",
+            buckets=metrics.COUNT_BUCKETS)
+        self._m_batch_rows = metrics.histogram(
+            "repro_serve_fused_batch_rows",
+            "Rows in each fused columnar evaluation",
+            buckets=metrics.COUNT_BUCKETS)
+        self._m_batch_cost = metrics.histogram(
+            "repro_serve_fused_batch_cost",
+            "Estimated row-cost units of each fused evaluation",
+            buckets=metrics.COUNT_BUCKETS)
+        self._m_dedup = metrics.counter(
+            "repro_serve_deduped_requests_total",
+            "Requests answered from another request's evaluation")
+        self._m_dedup_rows = metrics.counter(
+            "repro_serve_dedup_rows_saved_total",
+            "Rows not re-evaluated thanks to cross-request dedup")
+        self._m_shed = {
+            reason: metrics.counter(
+                "repro_serve_shed_total",
+                "Requests shed instead of evaluated", reason=reason)
+            for reason in ("overload", "deadline")}
+        self._m_isolated = metrics.counter(
+            "repro_serve_isolated_failures_total",
+            "Fused batches that failed and were re-run solo")
+        self._m_depth = metrics.gauge(
+            "repro_serve_queue_depth",
+            "Requests parked in the coalescer queue")
         self._thread = threading.Thread(target=self._loop, daemon=True,
                                         name="serve-coalescer")
         self._thread.start()
+
+    def _bump(self, **deltas) -> None:
+        """Apply one consistent multi-counter stats update."""
+        with self._stats_lock:
+            for k, n in deltas.items():
+                self.stats[k] += n
+
+    def stats_snapshot(self) -> Dict[str, int]:
+        """A mutually consistent copy of every coalescer counter."""
+        with self._stats_lock:
+            return dict(self.stats)
 
     # ---------------------------------------------------------- client side
     def submit_async(self, op: str, table: WorkloadTable, hw,
@@ -223,27 +297,31 @@ class Coalescer:
                      calibration: Optional[_NamedCalibration] = None,
                      deadline: Optional[float] = None,
                      max_rows: Optional[int] = None,
-                     on_done=None) -> _Pending:
+                     on_done=None,
+                     trace_id: Optional[str] = None) -> _Pending:
         """Park a request without blocking: the returned ``_Pending``'s
         ``event`` fires (and ``on_done`` runs, on the coalescer thread)
         once ``result``/``error`` is set.  This is the binary front end's
         entry point — its event loop must never block on an evaluation."""
         req = _Pending(op, table, k, objectives, deadline,
-                       max_rows=max_rows, on_done=on_done)
+                       max_rows=max_rows, on_done=on_done,
+                       trace_id=trace_id)
         group = (sweep.hardware_key(hw), model or sweep.default_route(hw),
                  calibration.name if calibration else None)
         with self._cv:
             if self._closed:
                 raise RuntimeError("coalescer is shut down")
             if len(self._q) >= self.max_queue_depth:
-                self.stats["shed_overload"] += 1
+                self._bump(shed_overload=1)
+                self._m_shed["overload"].inc()
                 raise errors.ServerOverloaded(
                     f"coalescer queue at its depth bound "
                     f"({self.max_queue_depth} requests parked) — load "
                     f"shed, retry after backoff",
                     retry_after_s=SHED_RETRY_AFTER_S)
             self._q.append((group, hw, model, calibration, req))
-            self.stats["requests"] += 1
+            self._bump(requests=1)
+            self._m_depth.set(len(self._q))
             self._cv.notify()
         return req
 
@@ -252,11 +330,12 @@ class Coalescer:
                objectives: Optional[Tuple[str, ...]] = None,
                calibration: Optional[_NamedCalibration] = None,
                deadline: Optional[float] = None,
-               max_rows: Optional[int] = None):
+               max_rows: Optional[int] = None,
+               trace_id: Optional[str] = None):
         req = self.submit_async(op, table, hw, model, k=k,
                                 objectives=objectives,
                                 calibration=calibration, deadline=deadline,
-                                max_rows=max_rows)
+                                max_rows=max_rows, trace_id=trace_id)
         req.event.wait()
         if req.error is not None:
             raise req.error
@@ -288,11 +367,12 @@ class Coalescer:
             with self._cv:
                 drained = list(self._q)
                 self._q.clear()
+                self._m_depth.set(0)
             if drained:
                 self._run_batch(drained)
 
     def _run_batch(self, drained: List) -> None:
-        self.stats["batches"] += 1
+        self._bump(batches=1)
         groups: Dict[Tuple, List] = {}
         for group, hw, model, calibration, req in drained:
             groups.setdefault(group, []).append((hw, model, calibration,
@@ -354,8 +434,11 @@ class Coalescer:
         now = time.monotonic()
         live = []
         for r in reqs:
+            self._m_queue_wait.observe(now - r.t_submit,
+                                       trace_id=r.trace_id)
             if r.deadline is not None and now >= r.deadline:
-                self.stats["shed_deadline"] += 1
+                self._bump(shed_deadline=1)
+                self._m_shed["deadline"].inc()
                 r.error = errors.DeadlineExceeded(
                     "request deadline expired while queued — result would "
                     "arrive after the client stopped waiting")
@@ -380,9 +463,11 @@ class Coalescer:
                 order.append(tok)
         n_dup = len(live) - len(order)
         if n_dup:
-            self.stats["deduped_requests"] += n_dup
-            self.stats["dedup_rows_saved"] += sum(
+            rows_saved = sum(
                 len(r.table) for tok in order for r in dedup[tok][1:])
+            self._bump(deduped_requests=n_dup, dedup_rows_saved=rows_saved)
+            self._m_dedup.inc(n_dup)
+            self._m_dedup_rows.inc(rows_saved)
         if len(order) == 1:
             # one distinct table (a lone request, or all duplicates): the
             # memoizing solo path — identical replayed sweeps stay
@@ -390,7 +475,10 @@ class Coalescer:
             # now share one evaluation instead of fusing into 2N rows
             self._run_solo(dedup[order[0]], hw, model, cal)
             return
+        t_fuse = time.monotonic()
         fused = WorkloadTable.concat([dedup[tok][0].table for tok in order])
+        t_eval = time.monotonic()
+        self._m_fuse.observe(t_eval - t_fuse, trace_id=live[0].trace_id)
         try:
             res = self.engine.predict_table(fused, hw, model=model,
                                             cache=False, calibration=cal)
@@ -398,22 +486,31 @@ class Coalescer:
             # one poisoned table must not share fate with its batchmates:
             # re-run each table alone so only the culprit(s) error (the
             # coalescing contract makes solo answers bit-identical)
-            self.stats["isolated_failures"] += 1
+            self._bump(isolated_failures=1)
+            self._m_isolated.inc()
             for tok in order:
                 self._run_solo(dedup[tok], hw, model, cal)
             return
-        self.stats["fused_evaluations"] += 1
-        self.stats["coalesced_requests"] += len(live)
-        self.stats["fused_rows"] += len(fused)
+        dt_eval = time.monotonic() - t_eval
+        self._m_evaluate.observe(dt_eval, trace_id=live[0].trace_id)
+        self._m_batch_reqs.observe(len(live))
+        self._m_batch_rows.observe(len(fused))
+        self._m_batch_cost.observe(self._est_cost(fused))
+        self._bump(fused_evaluations=1, coalesced_requests=len(live),
+                   fused_rows=len(fused))
         lo = 0
         for tok in order:
             members = dedup[tok]
             hi = lo + len(members[0].table)
-            for r in members:
+            for i, r in enumerate(members):
                 try:
                     r.result = self._answer(res, r, lo=lo, hi=hi)
                 except BaseException as e:   # noqa: BLE001
                     r.error = e
+                trace.record_span("serve.eval", r.trace_id,
+                                  time.monotonic() - r.t_submit,
+                                  op=r.op, fused=len(live),
+                                  dedup=i > 0)
                 self._finish(r)
             lo = hi
 
@@ -423,19 +520,28 @@ class Coalescer:
         request that shares its content."""
         if isinstance(rs, _Pending):
             rs = [rs]
+        t_eval = time.monotonic()
         try:
             res = self.engine.predict_table(rs[0].table, hw, model=model,
                                             calibration=cal)
         except BaseException as e:           # noqa: BLE001
             for r in rs:
                 r.error = e
+                trace.record_span("serve.eval", r.trace_id,
+                                  time.monotonic() - r.t_submit,
+                                  op=r.op, solo=True, error=True)
                 self._finish(r)
             return
-        for r in rs:
+        self._m_evaluate.observe(time.monotonic() - t_eval,
+                                 trace_id=rs[0].trace_id)
+        for i, r in enumerate(rs):
             try:
                 r.result = self._answer(res, r, lo=0, hi=None)
             except BaseException as e:       # noqa: BLE001
                 r.error = e
+            trace.record_span("serve.eval", r.trace_id,
+                              time.monotonic() - r.t_submit,
+                              op=r.op, solo=True, dedup=i > 0)
             self._finish(r)
 
     @staticmethod
@@ -480,7 +586,30 @@ class PredictionServer:
                  state_dir: Optional[str] = None,
                  straggler_timeout_s: Optional[float] = None,
                  binary_port: Optional[int] = None,
-                 max_fused_rows: Optional[int] = None):
+                 max_fused_rows: Optional[int] = None,
+                 metrics_enabled: Optional[bool] = None,
+                 slow_request_ms: Optional[float] = None,
+                 slow_log_sink=None):
+        # --metrics off|on flips the process-global registry; None (the
+        # in-process default) leaves whatever the host process chose
+        if metrics_enabled is not None:
+            metrics.set_enabled(metrics_enabled)
+        #: slow-request threshold in ms (None = slow log off); lines are
+        #: structured JSON carrying the request's trace id
+        self.slow_request_ms = slow_request_ms
+        self._slow_log_sink = slow_log_sink
+        self._m_requests = {
+            t: metrics.counter("repro_serve_requests_total",
+                               "Sweep requests answered", transport=t)
+            for t in ("http", "binary")}
+        self._m_request_s = {
+            t: metrics.histogram("repro_serve_request_seconds",
+                                 "End-to-end sweep request latency",
+                                 transport=t)
+            for t in ("http", "binary")}
+        self._m_slow = metrics.counter(
+            "repro_serve_slow_requests_total",
+            "Requests above the --slow-request-ms threshold")
         self.engine = engine or sweep.SweepEngine()
         self.coalescer = None
         self.pool = None
@@ -512,9 +641,10 @@ class PredictionServer:
                     BaseHTTPRequestHandler.log_message(self, fmt, *args)
 
             def _reply(self, status: int, body: bytes,
-                       retry_after_s: Optional[float] = None) -> None:
+                       retry_after_s: Optional[float] = None,
+                       content_type: str = CONTENT_TYPE) -> None:
                 self.send_response(status)
-                self.send_header("Content-Type", CONTENT_TYPE)
+                self.send_header("Content-Type", content_type)
                 self.send_header("Content-Length", str(len(body)))
                 if retry_after_s is not None:
                     self.send_header("Retry-After", f"{retry_after_s:g}")
@@ -574,6 +704,13 @@ class PredictionServer:
                 server.n_requests += 1
                 if self.path == "/v1/health":
                     self._reply(200, codec.encode_json(server.health()))
+                elif self.path == "/v1/metrics":
+                    # Prometheus scrape surface: plain text, no auth,
+                    # read-only; still answers while draining (like
+                    # health) so the last scrape sees the drain counters
+                    self._reply(200,
+                                server.metrics_text().encode("utf-8"),
+                                content_type=METRICS_CONTENT_TYPE)
                 elif self.path == "/v1/cache_stats":
                     self._reply(200, codec.encode_json(server.stats()))
                 elif self.path == "/v1/hardware":
@@ -691,21 +828,34 @@ class PredictionServer:
                     self._reply(404, codec.encode_error(
                         LookupError(f"unknown endpoint {self.path}")))
                     return
+                trace_id = trace.coerce_trace_id(
+                    self.headers.get(trace.TRACE_HEADER))
+                t0 = time.monotonic()
+                status = 200
                 try:
                     out = server.handle_request(
                         body, expect_op=None if op == "predict" else op,
-                        deadline=deadline)
+                        deadline=deadline, trace_id=trace_id)
+                    t_w = time.monotonic()
                     self._reply(200, out)
+                    _stage_hist("write").observe(time.monotonic() - t_w,
+                                                 trace_id=trace_id)
                 except errors.ServerOverloaded as e:
+                    status = 503
                     self._reply(503, codec.encode_error(e),
                                 retry_after_s=e.retry_after_s)
                 except errors.DeadlineExceeded as e:
+                    status = 503
                     self._reply(503, codec.encode_error(e))
                 except (codec.WireFormatError, KeyError, ValueError,
                         TypeError) as e:
+                    status = 400
                     self._reply(400, codec.encode_error(e))
                 except Exception as e:       # noqa: BLE001
+                    status = 500
                     self._reply(500, codec.encode_error(e))
+                server._observe_request("http", op, trace_id,
+                                        time.monotonic() - t0, status)
 
         # bind before starting the coalescer thread / worker processes: a
         # bind failure (port in use) must not leak children the caller
@@ -834,19 +984,49 @@ class PredictionServer:
         every coalescer counter (dedup/shed/isolation included), the
         live fused-row budget, and binary-frontend connection counters
         (zeroed when no binary port is bound, so the schema never
-        changes shape between transports)."""
+        changes shape between transports).
+
+        Every component contributes a *consistent* snapshot taken under
+        its own counter lock — the document can never show a torn
+        combination like ``deduped_requests`` > ``requests``."""
         out = dict(self.engine.cache_stats())
         out.update({f"coalescer_{k}": v
-                    for k, v in self.coalescer.stats.items()})
+                    for k, v in self.coalescer.stats_snapshot().items()})
         out["coalescer_max_fused_rows"] = self.coalescer.max_fused_rows
         if self.binary is not None:
             out.update({f"binary_{k}": v
-                        for k, v in self.binary.stats.items()})
+                        for k, v in self.binary.stats_snapshot().items()})
         else:
             from .binserver import BinaryFrontend
             out.update({f"binary_{k}": 0
                         for k in BinaryFrontend.STAT_KEYS})
         return out
+
+    def metrics_text(self) -> str:
+        """The Prometheus text exposition both transports serve:
+        ``GET /v1/metrics`` returns it verbatim as ``text/plain`` (so a
+        stock Prometheus scraper needs no adapter) and the binary
+        ``OP_METRICS`` frame wraps the same string in a MSG_JSON."""
+        return metrics.render_prometheus()
+
+    def _observe_request(self, transport: str, op: str,
+                         trace_id: Optional[str], duration_s: float,
+                         status: int) -> None:
+        """Transport-level request accounting: counter + latency
+        histogram (exemplar = this trace), plus a structured slow-log
+        line when the request crossed ``--slow-request-ms``."""
+        self._m_requests[transport].inc()
+        self._m_request_s[transport].observe(duration_s, trace_id=trace_id)
+        if self.slow_request_ms is not None \
+                and duration_s * 1e3 >= self.slow_request_ms:
+            self._m_slow.inc()
+            trace.slow_log({"event": "slow_request",
+                            "transport": transport, "op": op,
+                            "trace_id": trace_id,
+                            "duration_ms": round(duration_s * 1e3, 3),
+                            "status": status,
+                            "threshold_ms": self.slow_request_ms},
+                           sink=self._slow_log_sink)
 
     # ------------------------------------------------ admission control
     def _admit_mutation(self, headers) -> None:
@@ -1015,19 +1195,26 @@ class PredictionServer:
 
     def handle_request(self, body: bytes,
                        expect_op: Optional[str] = None,
-                       deadline: Optional[float] = None) -> bytes:
+                       deadline: Optional[float] = None,
+                       trace_id: Optional[str] = None) -> bytes:
         """Decode one REQUEST message, answer it, encode the reply.
 
         ``deadline`` is a ``time.monotonic()`` cutoff (from the client's
         ``X-Repro-Deadline-S`` budget): coalesced requests carry it into
         the queue and are shed there; direct paths check it once before
-        evaluating.  Split out from the HTTP layer so tests can drive
-        the full decode-dispatch-encode path without sockets."""
+        evaluating.  ``trace_id`` (the transport's, e.g. the
+        ``X-Repro-Trace`` header) wins over the request meta's.  Split
+        out from the HTTP layer so tests can drive the full
+        decode-dispatch-encode path without sockets."""
+        t0 = time.monotonic()
         op, source, meta = codec.decode_request(body)
+        _stage_hist("parse").observe(time.monotonic() - t0,
+                                     trace_id=trace_id)
         if expect_op is not None and op != expect_op:
             raise codec.WireFormatError(
                 f"endpoint /v1/{expect_op} got a request for op {op!r}")
-        return self.answer_decoded(op, source, meta, deadline=deadline)
+        return self.answer_decoded(op, source, meta, deadline=deadline,
+                                   trace_id=trace_id)
 
     def _resolve_sweep(self, meta: Dict):
         """Resolve a decoded request's metadata against server state:
@@ -1053,10 +1240,15 @@ class PredictionServer:
         return hw, model, k, objectives, calibration, max_rows
 
     def answer_decoded(self, op: str, source, meta: Dict,
-                       deadline: Optional[float] = None) -> bytes:
+                       deadline: Optional[float] = None,
+                       trace_id: Optional[str] = None) -> bytes:
         """Answer one already-decoded request (shared by the HTTP handler
         via ``handle_request`` and the binary front end, which decodes on
         its event loop but answers here on a worker)."""
+        if trace_id is None:
+            # the codec meta's additive trace_id field — the only channel
+            # on the binary transport (frames have no headers)
+            trace_id = trace.coerce_trace_id(meta.get("trace_id"))
         hw, model, k, objectives, calibration, max_rows = \
             self._resolve_sweep(meta)
         if deadline is not None and time.monotonic() >= deadline \
@@ -1072,16 +1264,24 @@ class PredictionServer:
                                                k=k, objectives=objectives,
                                                calibration=calibration,
                                                deadline=deadline,
-                                               max_rows=max_rows)
+                                               max_rows=max_rows,
+                                               trace_id=trace_id)
             else:
+                t_eval = time.monotonic()
                 res = self.engine.predict_table(
                     source, hw, model=model,
                     calibration=calibration.cal if calibration else None)
                 result = Coalescer._answer(
                     res, _Pending(op, source, k, objectives), 0, None)
-            if op == "predict_table":
-                return codec.encode_totals(result)
-            return codec.encode_winners(result)
+                trace.record_span("serve.eval", trace_id,
+                                  time.monotonic() - t_eval,
+                                  op=op, solo=True, coalesce=False)
+            t_enc = time.monotonic()
+            out = (codec.encode_totals(result) if op == "predict_table"
+                   else codec.encode_winners(result))
+            _stage_hist("encode").observe(time.monotonic() - t_enc,
+                                          trace_id=trace_id)
+            return out
         return self._handle_spec(op, source, hw, model, k, objectives,
                                  meta, calibration)
 
@@ -1148,6 +1348,14 @@ def main(argv=None) -> None:
     ap.add_argument("--straggler-timeout-s", type=float, default=None,
                     help="re-dispatch a worker-pool shard that exceeds "
                          "this many seconds (unset = wait forever)")
+    ap.add_argument("--metrics", choices=("on", "off"), default="on",
+                    help="observability kill switch: 'off' disables every "
+                         "counter/histogram/span process-wide (the "
+                         "/v1/metrics surface stays up but stops moving)")
+    ap.add_argument("--slow-request-ms", type=float, default=None,
+                    help="emit a structured JSON log line to stderr for "
+                         "every sweep request slower than this many ms "
+                         "(carries the request's trace id; unset = off)")
     ap.add_argument("--verbose", action="store_true")
     args = ap.parse_args(argv)
     server = PredictionServer(
@@ -1161,7 +1369,9 @@ def main(argv=None) -> None:
         state_dir=args.state_dir,
         straggler_timeout_s=args.straggler_timeout_s,
         binary_port=args.binary_port,
-        max_fused_rows=args.max_fused_rows)
+        max_fused_rows=args.max_fused_rows,
+        metrics_enabled=(args.metrics == "on"),
+        slow_request_ms=args.slow_request_ms)
     host, port = server.address
     # SIGTERM begins a graceful drain: stop accepting, 503 new work,
     # finish in-flight requests, snapshot --state-dir, reap the pool —

@@ -820,3 +820,68 @@ class TestBinaryChaos:
             assert len(wins) == 6
             assert all(same_winner(a, b) for a, b in zip(wins, refs))
             client.close()
+
+
+# ---------------------------------------------------------------------------
+# process-level chaos: SIGKILL the server mid-stream
+# ---------------------------------------------------------------------------
+
+class TestProcessKill:
+    def test_sigkill_surfaces_retryable_error_and_opens_breaker(self):
+        from repro.obs import metrics
+        from repro.serve import subproc
+        from repro.serve.chaos import kill_server_process
+
+        breaker_opens = metrics.counter("repro_client_breaker_open_total")
+        proc, host, port = subproc.start_server_subprocess()
+        client = PredictionClient(
+            host, port, timeout=5.0, connect_timeout=1.0, max_retries=1,
+            backoff_base_s=0.01, breaker_threshold=2,
+            breaker_cooldown_s=60.0)
+        try:
+            client.health()              # establish the keep-alive socket
+            opens_before = breaker_opens.value
+
+            status = kill_server_process(proc)
+            assert status == -signal.SIGKILL
+
+            # the established connection died without a FIN handshake
+            # completing the protocol: the next call rides the dead
+            # keep-alive socket, gets RST/refused on reconnect, and
+            # surfaces as a TYPED retryable transport fault (or, if the
+            # connect failures already tripped the breaker mid-retry,
+            # as the breaker's typed fail-fast) — never a hang
+            t0 = time.monotonic()
+            with pytest.raises((ConnectionError, OSError,
+                                errors.DeadlineExceeded,
+                                errors.CircuitOpenError)):
+                client.argmin(small_table("killed"), "b200",
+                              deadline_s=10.0)
+            assert time.monotonic() - t0 < 10.0
+
+            # consecutive connect failures open the circuit: fail fast
+            for _ in range(4):
+                try:
+                    client.health()
+                except errors.CircuitOpenError:
+                    break
+                except (ConnectionError, OSError):
+                    continue
+            with pytest.raises(errors.CircuitOpenError):
+                client.health()
+            # the closed->open transition was counted exactly as such
+            assert breaker_opens.value >= opens_before + 1
+        finally:
+            client.close()
+            if proc.poll() is None:
+                proc.kill()
+                proc.wait(timeout=10)
+
+    def test_kill_is_idempotent_on_dead_process(self):
+        from repro.serve import subproc
+        from repro.serve.chaos import kill_server_process
+
+        proc, host, port = subproc.start_server_subprocess()
+        assert kill_server_process(proc) == -signal.SIGKILL
+        # killing an already-reaped process just reaps it again
+        assert kill_server_process(proc) == -signal.SIGKILL
