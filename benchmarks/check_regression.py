@@ -105,6 +105,21 @@ def correctness_failures(fresh: dict, baseline: dict = ()):
     return failures
 
 
+def compared_flags(fresh: dict, baseline: dict = ()):
+    """The correctness-flag names a run was gated on (fresh plus any the
+    baseline pins) — printed on PASS so a green run shows what it
+    actually checked, not just that nothing failed."""
+    flags = set()
+    for src in (fresh, dict(baseline)):
+        for key, v in src.items():
+            if isinstance(v, bool):
+                flags.add(key)
+            elif isinstance(v, dict) and v and all(
+                    isinstance(x, bool) for x in v.values()):
+                flags.update(f"{key}[{sub}]" for sub in v)
+    return sorted(flags)
+
+
 def compare(fresh: dict, baseline: dict, tolerance: float, *,
             absolute: bool = False, excluded=()):
     """Return (regressions, correctness_failures) for the two runs."""
@@ -178,8 +193,14 @@ def run_suite(name: str, tolerance: float, attempts: int, *,
               f"(> {tolerance:.0%} drop), "
               f"{len(failures)} correctness failure(s)")
         return False
+    gated_keys = sorted(k for k in baseline if gated(k))
+    flags = compared_flags(fresh, baseline)
     print(f"[{name}] PASS: no gated field dropped more than "
           f"{tolerance:.0%} vs {path}")
+    print(f"[{name}] compared {len(gated_keys)} gated field(s): "
+          f"{', '.join(gated_keys)}")
+    print(f"[{name}] compared {len(flags)} correctness flag(s): "
+          f"{', '.join(flags) or '(none)'}")
     return True
 
 

@@ -243,6 +243,10 @@ def predict_table_cols(table, hw: HardwareParams):
     idx_e = np.flatnonzero(exotic)
     idx_f = np.flatnonzero(~exotic)
     segments = [(idx_e, RowsCols(
+        # repro: allow[SWEEP-LOOP] exotic rows (explicit hit rates /
+        # Eq. 10 latency walks) are priced per row by design — the
+        # columnar kernel has no path for them and bit-identity with
+        # scalar predict() is the contract tests pin
         [row_from_tb(predict(table.workload(int(i)), hw))
          for i in idx_e]))]
     if len(idx_f):

@@ -274,6 +274,12 @@ class _LazyRegistry(MutableMapping):
 
 REGISTRY: MutableMapping = _LazyRegistry()
 
+# fork() clones one thread: another thread mid-load would leave the
+# child's registry lock held forever (the FORK-LOCK contract).  Loaded
+# params are immutable so the child keeps them; only the lock re-inits.
+os.register_at_fork(
+    after_in_child=lambda: setattr(REGISTRY, "_lock", threading.RLock()))
+
 
 def get(name: str) -> HardwareParams:
     try:

@@ -1,0 +1,426 @@
+"""Contract-linter tests: every rule fires on a true positive, stays
+quiet on a true negative, suppressions demand justification, the wire
+lock rejects non-additive codec changes, and — the tier-1 wiring — the
+checkout itself lints clean.
+
+Fixture style: each test writes a miniature repo under ``tmp_path`` and
+runs :func:`repro.analysis.run_checks` against it with the one rule
+under test, so fixtures prove the *rule* and the repo-wide test proves
+the *repo*.
+"""
+import json
+import os
+import subprocess
+import sys
+import textwrap
+from pathlib import Path
+
+from repro import analysis
+from repro.analysis.rules import wire_drift
+
+REAL_ROOT = Path(analysis.repo_root())
+
+
+def lint(tmp_path, files, rules, baseline=None):
+    """Write ``{rel: source}`` under ``tmp_path`` and lint those files."""
+    for rel, src in files.items():
+        p = tmp_path / rel
+        p.parent.mkdir(parents=True, exist_ok=True)
+        p.write_text(textwrap.dedent(src))
+    return analysis.run_checks(root=str(tmp_path),
+                               paths=sorted(files), rules=rules,
+                               baseline=baseline)
+
+
+def rule_errors(report, rule_id):
+    return [f for f in report.errors if f.rule == rule_id]
+
+
+# ---------------------------------------------------------------------------
+# SWEEP-LOOP
+# ---------------------------------------------------------------------------
+
+class TestSweepLoop:
+    def test_fires_on_per_config_loop(self, tmp_path):
+        report = lint(tmp_path, {"src/repro/core/bad.py": """\
+            def sweep(cfgs, hw):
+                out = []
+                for c in cfgs:
+                    out.append(predict(Workload(c), hw))
+                totals = [predict(w, hw) for w in out]
+                return totals
+            """}, rules=["SWEEP-LOOP"])
+        found = rule_errors(report, "SWEEP-LOOP")
+        assert len(found) == 3          # Workload + 2x predict
+        assert all("loop" in f.message for f in found)
+        assert "predict_table" in found[0].hint
+
+    def test_quiet_outside_loops_and_in_suites(self, tmp_path):
+        report = lint(tmp_path, {
+            "src/repro/core/ok.py": """\
+                def one_off(cfg, hw):
+                    return predict(Workload(cfg), hw)
+                """,
+            "src/repro/core/suites/inventory.py": """\
+                KERNELS = [Workload(c) for c in NAMED_CASES]
+                """,
+        }, rules=["SWEEP-LOOP"])
+        assert not rule_errors(report, "SWEEP-LOOP")
+
+
+# ---------------------------------------------------------------------------
+# FROZEN-MUT
+# ---------------------------------------------------------------------------
+
+class TestFrozenMut:
+    def test_fires_on_frozen_mutation(self, tmp_path):
+        report = lint(tmp_path, {"src/repro/core/bad.py": """\
+            def poke(table, buf):
+                table.cols[0, 1] = 9.0
+                table.precision_codes[0] += 1
+                buf.setflags(write=True)
+                table.cols.resize((2, 2))
+                table.wclass_codes = None
+            """}, rules=["FROZEN-MUT"])
+        found = rule_errors(report, "FROZEN-MUT")
+        assert len(found) == 5
+        assert any("setflags" in f.message for f in found)
+        assert any("rebinding" in f.message for f in found)
+
+    def test_quiet_on_local_buildup_and_freeze(self, tmp_path):
+        report = lint(tmp_path, {"src/repro/core/ok.py": """\
+            class Table:
+                def __init__(self, cols):
+                    cols[0, 0] = 1.0          # local array, still building
+                    cols.flags.writeable = False
+                    cols.setflags(write=False)
+                    self.cols = cols          # constructor initializes
+            """}, rules=["FROZEN-MUT"])
+        assert not rule_errors(report, "FROZEN-MUT")
+
+
+# ---------------------------------------------------------------------------
+# LOOP-BLOCK
+# ---------------------------------------------------------------------------
+
+class TestLoopBlock:
+    def test_fires_on_reachable_blocking_call(self, tmp_path):
+        report = lint(tmp_path, {"src/repro/serve/binserver.py": """\
+            import time
+
+            class Frontend:
+                def _loop(self):
+                    self._readable()
+
+                def _readable(self):
+                    time.sleep(0.5)
+                    self.fut.result()
+                    self.sock.sendall(b"x")
+            """}, rules=["LOOP-BLOCK"])
+        found = rule_errors(report, "LOOP-BLOCK")
+        assert len(found) == 3
+        assert all("_loop -> _readable" in f.message for f in found)
+
+    def test_quiet_off_loop_and_with_timeouts(self, tmp_path):
+        report = lint(tmp_path, {"src/repro/serve/binserver.py": """\
+            import time
+
+            class Frontend:
+                def _loop(self):
+                    self._handle()
+
+                def _handle(self):
+                    self.fut.result(timeout=0.1)
+
+                    def on_done(res):      # runs on the coalescer thread
+                        time.sleep(1)
+                    self.coalescer.submit_async(on_done)
+
+                def admin_snapshot(self):  # not reachable from _loop
+                    time.sleep(1)
+            """}, rules=["LOOP-BLOCK"])
+        assert not rule_errors(report, "LOOP-BLOCK")
+
+    def test_other_modules_ignored(self, tmp_path):
+        report = lint(tmp_path, {"src/repro/serve/worker.py": """\
+            import time
+
+            def _loop():
+                time.sleep(1)
+            """}, rules=["LOOP-BLOCK"])
+        assert not rule_errors(report, "LOOP-BLOCK")
+
+
+# ---------------------------------------------------------------------------
+# FORK-LOCK
+# ---------------------------------------------------------------------------
+
+class TestForkLock:
+    def test_fires_on_module_lock_and_singleton(self, tmp_path):
+        report = lint(tmp_path, {"src/repro/core/bad.py": """\
+            import threading
+
+            _LOCK = threading.Lock()
+
+            class Registry:
+                def __init__(self):
+                    self._lock = threading.RLock()
+
+            REGISTRY = Registry()
+            """}, rules=["FORK-LOCK"])
+        found = rule_errors(report, "FORK-LOCK")
+        assert len(found) == 2
+        assert any("singleton" in f.message for f in found)
+        assert "register_at_fork" in found[0].hint
+
+    def test_quiet_with_hook_or_instance_scope(self, tmp_path):
+        report = lint(tmp_path, {
+            "src/repro/core/hooked.py": """\
+                import os, threading
+
+                _LOCK = threading.Lock()
+
+                def _reinit():
+                    global _LOCK
+                    _LOCK = threading.Lock()
+
+                os.register_at_fork(after_in_child=_reinit)
+                """,
+            "src/repro/core/instances.py": """\
+                import threading
+
+                class Pool:
+                    def __init__(self):
+                        self._lock = threading.Lock()
+
+                def make_pool():
+                    return Pool()         # per-call, not module lifetime
+                """,
+        }, rules=["FORK-LOCK"])
+        assert not rule_errors(report, "FORK-LOCK")
+
+
+# ---------------------------------------------------------------------------
+# METRIC-NAME
+# ---------------------------------------------------------------------------
+
+class TestMetricName:
+    def test_fires_on_bad_family_label_and_dynamic_name(self, tmp_path):
+        report = lint(tmp_path, {"src/repro/serve/bad.py": """\
+            from repro.obs import metrics
+
+            A = metrics.counter("requests_total", "outside namespace")
+            B = metrics.counter("repro_serve_x_total", "h", color="red")
+            C = metrics.counter("repro_serve_y_total", "h",
+                                transport="carrier")
+            D = metrics.counter(FAMILY, "computed name")
+            """}, rules=["METRIC-NAME"])
+        found = rule_errors(report, "METRIC-NAME")
+        messages = " | ".join(f.message for f in found)
+        assert "outside the repro_" in messages
+        assert "'color'" in messages
+        assert "'carrier'" in messages
+        assert "not a string literal" in messages
+
+    def test_cross_checks_expected_families(self, tmp_path):
+        files = {
+            "src/repro/serve/mod.py": """\
+                from repro.obs import metrics
+                M = metrics.counter("repro_serve_new_total", "h",
+                                    transport="http")
+                """,
+            "tests/test_obs.py": """\
+                EXPECTED_FAMILIES = [
+                    "repro_serve_new_total",
+                    "repro_serve_gone_total",
+                ]
+                """,
+        }
+        report = lint(tmp_path, files, rules=["METRIC-NAME"])
+        found = rule_errors(report, "METRIC-NAME")
+        assert len(found) == 1           # declared+listed is fine
+        assert "repro_serve_gone_total" in found[0].message
+        assert "append-only" in found[0].message
+
+    def test_new_family_must_be_listed(self, tmp_path):
+        report = lint(tmp_path, {
+            "src/repro/serve/mod.py": """\
+                from repro.obs import metrics
+                M = metrics.counter("repro_serve_new_total", "h")
+                """,
+            "tests/test_obs.py": "EXPECTED_FAMILIES = []\n",
+        }, rules=["METRIC-NAME"])
+        found = rule_errors(report, "METRIC-NAME")
+        assert len(found) == 1
+        assert "EXPECTED_FAMILIES" in found[0].message
+
+
+# ---------------------------------------------------------------------------
+# WIRE-DRIFT
+# ---------------------------------------------------------------------------
+
+def _copy_wire_files(tmp_path):
+    for rel in (wire_drift.CODEC_REL, wire_drift.FRAMING_REL,
+                wire_drift.LOCK_REL):
+        dst = tmp_path / rel
+        dst.parent.mkdir(parents=True, exist_ok=True)
+        dst.write_text((REAL_ROOT / rel).read_text())
+
+
+class TestWireDrift:
+    def run(self, tmp_path):
+        return analysis.run_checks(root=str(tmp_path),
+                                   paths=["src/repro/serve"],
+                                   rules=["WIRE-DRIFT"])
+
+    def test_quiet_when_lock_matches_source(self, tmp_path):
+        _copy_wire_files(tmp_path)
+        assert self.run(tmp_path).ok
+
+    def test_non_additive_renumber_fails_with_version_bump(self, tmp_path):
+        _copy_wire_files(tmp_path)
+        codec = tmp_path / wire_drift.CODEC_REL
+        codec.write_text(codec.read_text().replace(
+            "MSG_TABLE = 1\n", "MSG_TABLE = 12\n"))
+        found = rule_errors(self.run(tmp_path), "WIRE-DRIFT")
+        assert len(found) == 1
+        assert "renumbered" in found[0].message
+        assert "bump WIRE_VERSION" in found[0].hint
+
+    def test_removed_message_fails(self, tmp_path):
+        _copy_wire_files(tmp_path)
+        codec = tmp_path / wire_drift.CODEC_REL
+        codec.write_text(codec.read_text().replace(
+            "MSG_CALREQ = 11\n", ""))
+        found = rule_errors(self.run(tmp_path), "WIRE-DRIFT")
+        assert len(found) == 1
+        assert "removed" in found[0].message
+
+    def test_repacked_header_fails(self, tmp_path):
+        _copy_wire_files(tmp_path)
+        framing = tmp_path / wire_drift.FRAMING_REL
+        framing.write_text(framing.read_text().replace(
+            '"<4sBBHIQf"', '"<4sBBHIQd"'))
+        found = rule_errors(self.run(tmp_path), "WIRE-DRIFT")
+        assert len(found) == 1
+        assert "framing.header_format" in found[0].message
+
+    def test_additive_change_fails_until_lock_refreshed(self, tmp_path):
+        _copy_wire_files(tmp_path)
+        codec = tmp_path / wire_drift.CODEC_REL
+        codec.write_text(codec.read_text()
+                         + "\nMSG_FUTURE = 12\n")
+        found = rule_errors(self.run(tmp_path), "WIRE-DRIFT")
+        assert len(found) == 1
+        assert "--update-wire-lock" in found[0].hint
+        # refreshing the lock (the documented fix) clears the finding
+        modules = analysis.core.collect_modules(
+            str(tmp_path), ["src/repro/serve"])
+        project = analysis.Project(str(tmp_path), modules)
+        schema, _ = wire_drift.extract_schema(project)
+        wire_drift.write_lock(str(tmp_path), schema)
+        assert self.run(tmp_path).ok
+
+    def test_missing_lock_fails(self, tmp_path):
+        _copy_wire_files(tmp_path)
+        (tmp_path / wire_drift.LOCK_REL).unlink()
+        found = rule_errors(self.run(tmp_path), "WIRE-DRIFT")
+        assert len(found) == 1
+        assert "missing" in found[0].message
+
+
+# ---------------------------------------------------------------------------
+# Suppressions
+# ---------------------------------------------------------------------------
+
+BAD_MUT = """\
+    def poke(table):
+        table.cols[0] = 1.0{comment}
+"""
+
+
+class TestSuppressions:
+    def test_justified_allow_suppresses(self, tmp_path):
+        report = lint(tmp_path, {"src/repro/core/bad.py": BAD_MUT.format(
+            comment="  # repro: allow[FROZEN-MUT] test fixture resets "
+                    "a scratch table")}, rules=["FROZEN-MUT"])
+        assert report.ok
+        supp = [f for f in report.findings if f.suppressed]
+        assert len(supp) == 1
+        assert supp[0].justification.startswith("test fixture")
+
+    def test_standalone_allow_above_the_line(self, tmp_path):
+        report = lint(tmp_path, {"src/repro/core/bad.py": """\
+            def poke(table):
+                # repro: allow[FROZEN-MUT] scratch table, never cached
+                table.cols[0] = 1.0
+            """}, rules=["FROZEN-MUT"])
+        assert report.ok
+
+    def test_bare_allow_is_an_error_and_does_not_suppress(self, tmp_path):
+        report = lint(tmp_path, {"src/repro/core/bad.py": BAD_MUT.format(
+            comment="  # repro: allow[FROZEN-MUT]")}, rules=["FROZEN-MUT"])
+        rules = {f.rule for f in report.errors}
+        assert rules == {"FROZEN-MUT", "SUPPRESS"}   # finding still gates
+        meta = rule_errors(report, "SUPPRESS")[0]
+        assert "no justification" in meta.message
+
+    def test_wrong_rule_id_does_not_suppress(self, tmp_path):
+        report = lint(tmp_path, {"src/repro/core/bad.py": BAD_MUT.format(
+            comment="  # repro: allow[SWEEP-LOOP] wrong id")},
+            rules=["FROZEN-MUT"])
+        assert rule_errors(report, "FROZEN-MUT")
+
+    def test_unused_allow_warns(self, tmp_path):
+        report = lint(tmp_path, {"src/repro/core/ok.py": """\
+            X = 1  # repro: allow[FROZEN-MUT] nothing here violates it
+            """}, rules=["FROZEN-MUT"])
+        assert report.ok                              # warning, not error
+        warn = report.unsuppressed(analysis.WARNING)
+        assert len(warn) == 1 and warn[0].rule == "SUPPRESS-UNUSED"
+
+    def test_baseline_grandfathers_findings(self, tmp_path):
+        files = {"src/repro/core/bad.py": BAD_MUT.format(comment="")}
+        report = lint(tmp_path, files, rules=["FROZEN-MUT"])
+        assert not report.ok
+        base = tmp_path / "baseline.json"
+        base.write_text(json.dumps(report.to_json()))
+        report2 = lint(tmp_path, files, rules=["FROZEN-MUT"],
+                       baseline=str(base))
+        assert report2.ok
+        assert all(f.justification == "grandfathered by baseline"
+                   for f in report2.findings if f.suppressed)
+
+
+# ---------------------------------------------------------------------------
+# PARSE meta-rule
+# ---------------------------------------------------------------------------
+
+def test_unparseable_file_is_reported(tmp_path):
+    report = lint(tmp_path, {"src/repro/core/broken.py": "def f(:\n"},
+                  rules=["FROZEN-MUT"])
+    assert [f.rule for f in report.errors] == ["PARSE"]
+
+
+# ---------------------------------------------------------------------------
+# CI gate: the checkout itself lints clean (tier-1 wiring)
+# ---------------------------------------------------------------------------
+
+def test_repo_lints_clean():
+    report = analysis.run_checks()
+    assert report.ok, "\n" + report.render(verbose=False)
+    for f in report.findings:
+        if f.suppressed:
+            assert f.justification, f.render()
+
+
+def test_check_contracts_gate_passes():
+    root = os.path.normpath(os.path.join(os.path.dirname(__file__), ".."))
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(root, "src") + os.pathsep + \
+        env.get("PYTHONPATH", "")
+    out = subprocess.run(
+        [sys.executable, "-m", "benchmarks.check_contracts", "-q"],
+        cwd=root, env=env, capture_output=True, text=True, timeout=120)
+    assert out.returncode == 0, out.stdout + out.stderr
+    assert "check_contracts: PASS" in out.stdout
